@@ -1,0 +1,171 @@
+"""Benchmarks for the paper's core figures on the class-conditional model:
+Fig. 2 (spectral), Fig. 4 (prediction gap), Fig. 6 (FID vs compute; T vs
+T_weak), Fig. 10 (pruning baselines), Fig. 19 (opposite scheduler).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import FlexiSchedule, relative_compute
+from repro.diffusion import schedule as sch
+from repro.models import dit as dit_mod
+
+
+def bench_fig4_pred_gap():
+    """‖ε_weak − ε_powerful‖² vs t: should DECREASE with t (Fig. 4 right)."""
+    params, cfg, sched = C.get_flexidit()
+    ref, cond = C.reference_set(32)
+    x0 = jnp.asarray(ref[:32])
+    y = jnp.asarray(cond[:32])
+    key = jax.random.PRNGKey(0)
+    gaps = []
+    for t_val in (5, 25, 50, 75, 95):
+        t = jnp.full((32,), t_val)
+        x_t = sch.q_sample(sched, x0, t, jax.random.normal(key, x0.shape))
+        e0 = dit_mod.eps_prediction(dit_mod.dit_forward(
+            params, x_t, t.astype(jnp.float32), y, cfg, mode=0), cfg)
+        e1 = dit_mod.eps_prediction(dit_mod.dit_forward(
+            params, x_t, t.astype(jnp.float32), y, cfg, mode=1), cfg)
+        gaps.append(float(jnp.mean(jnp.square(e0 - e1))
+                          / jnp.mean(jnp.square(e0))))
+    trend = "decreasing" if gaps[-1] < gaps[0] else "NOT-decreasing"
+    C.csv_row("fig4_pred_gap", 0.0,
+              f"rel_gap(t=5..95)={['%.4f' % g for g in gaps]};{trend}")
+    return {"t": [5, 25, 50, 75, 95], "gap": gaps}
+
+
+def bench_fig6_fid_vs_compute(T: int = 20, n: int = 64):
+    """FID-proxy across T_weak sweep + the opposite scheduler ablation."""
+    params, cfg, sched = C.get_flexidit()
+    ref, _ = C.reference_set(128)
+    key = jax.random.PRNGKey(7)
+    rows = []
+    for T_weak in (0, T // 4, T // 2, 3 * T // 4, T - 2):
+        s = C.generate(params, cfg, sched, T=T, T_weak=T_weak, n=n, key=key)
+        fid = C.fid_proxy(s, ref)
+        comp = relative_compute(cfg, FlexiSchedule.weak_first(T, T_weak))
+        rows.append((T_weak, comp, fid))
+        C.csv_row(f"fig6_fid_Tweak{T_weak}", 0.0,
+                  f"compute={comp:.3f};fid={fid:.3f}")
+    # opposite scheduler (Fig. 19): weak LAST should be worse
+    T_weak = T // 2
+    s_rev = C.generate(params, cfg, sched, T=T, T_weak=T_weak, n=n, key=key,
+                       weak_last=True)
+    fid_rev = C.fid_proxy(s_rev, ref)
+    fid_fwd = rows[2][2]
+    C.csv_row("fig19_weak_last", 0.0,
+              f"fid_weak_first={fid_fwd:.3f};fid_weak_last={fid_rev:.3f};"
+              f"weak_first_better={fid_rev > fid_fwd}")
+    return rows
+
+
+def bench_fig6_T_orthogonality(n: int = 48):
+    """Gains from weak steps are orthogonal to lowering T (Fig. 6 right)."""
+    params, cfg, sched = C.get_flexidit()
+    ref, _ = C.reference_set(128)
+    key = jax.random.PRNGKey(9)
+    out = {}
+    for T in (10, 20):
+        for frac in (0.0, 0.5):
+            T_weak = int(T * frac)
+            s = C.generate(params, cfg, sched, T=T, T_weak=T_weak, n=n,
+                           key=key)
+            fid = C.fid_proxy(s, ref)
+            comp = relative_compute(cfg, FlexiSchedule.weak_first(T, T_weak)) * T
+            out[(T, T_weak)] = fid
+            C.csv_row(f"fig6r_T{T}_w{T_weak}", 0.0,
+                      f"nfe_equiv={comp:.1f};fid={fid:.3f}")
+    return out
+
+
+def bench_fig2_spectral(T: int = 20, n: int = 24):
+    """Filter ONE step's update (low/high pass) early vs late; measure final
+    sample change (L2 + SSIM): high-pass filtering matters more EARLY."""
+    params, cfg, sched = C.get_flexidit()
+    key = jax.random.PRNGKey(3)
+    from repro.core import GuidanceConfig, make_eps_fn
+    from repro.diffusion import sampler
+    ts = sch.respaced_timesteps(sched.num_steps, T)
+    y = jnp.arange(n) % C.N_CLASSES
+    null = jnp.full((n,), C.N_CLASSES)
+    g = GuidanceConfig(scale=1.5, mode_cond=0, mode_uncond=0)
+    base_fn = make_eps_fn(params, cfg, y, null, g)
+
+    def filtered_fn(step_idx, kind):
+        def fn(x, t):
+            eps, lv = base_fn(x, t)
+            hit = jnp.any(t[0] == ts[step_idx])
+            F = jnp.fft.fft2(eps.astype(jnp.complex64), axes=(2, 3))
+            H, W = eps.shape[2], eps.shape[3]
+            fy = jnp.fft.fftfreq(H)[None, None, :, None, None]
+            fx = jnp.fft.fftfreq(W)[None, None, None, :, None]
+            rad = jnp.sqrt(fy ** 2 + fx ** 2)
+            mask = (rad <= 0.25) if kind == "low" else (rad > 0.25)
+            Ff = jnp.where(mask, F, 0.0)
+            eps_f = jnp.real(jnp.fft.ifft2(Ff, axes=(2, 3))).astype(eps.dtype)
+            return jnp.where(hit, eps_f, eps), lv
+        return fn
+
+    x_T = jax.random.normal(key, (n,) + cfg.dit.latent_shape)
+    base = np.asarray(sampler.sample_phased([(base_fn, ts)], sched, x_T,
+                                            jax.random.fold_in(key, 1),
+                                            solver="ddim"))
+    results = {}
+    for when, idx in (("early", 1), ("late", T - 2)):
+        for kind in ("low", "high"):
+            out = np.asarray(sampler.sample_phased(
+                [(filtered_fn(idx, kind), ts)], sched, x_T,
+                jax.random.fold_in(key, 1), solver="ddim"))
+            l2 = float(np.sqrt(((out - base) ** 2).mean()))
+            s = C.ssim(out, base)
+            results[(when, kind)] = (l2, s)
+            C.csv_row(f"fig2_{when}_{kind}pass", 0.0,
+                      f"l2={l2:.4f};ssim={s:.4f}")
+    # paper: removing low frequencies (high-pass) hurts MORE early than late
+    ok = results[("early", "high")][0] > results[("late", "high")][0]
+    C.csv_row("fig2_claim", 0.0, f"highpass_hurts_more_early={ok}")
+    return results
+
+
+def bench_fig10_pruning_baselines(T: int = 20, n: int = 48):
+    """FlexiDiT weak-schedule vs magnitude/random pruning at matched FLOPs."""
+    params, cfg, sched = C.get_flexidit()
+    ref, _ = C.reference_set(128)
+    key = jax.random.PRNGKey(11)
+    T_weak = T // 2
+    comp = relative_compute(cfg, FlexiSchedule.weak_first(T, T_weak))
+    s_flexi = C.generate(params, cfg, sched, T=T, T_weak=T_weak, n=n, key=key)
+    fid_flexi = C.fid_proxy(s_flexi, ref)
+
+    def prune(p, frac, kind):
+        def prune_leaf(path_leaf):
+            w = path_leaf
+            if w.ndim < 2:
+                return w
+            if kind == "magnitude":
+                thresh = jnp.quantile(jnp.abs(w), frac)
+                return jnp.where(jnp.abs(w) < thresh, 0.0, w)
+            k = jax.random.PRNGKey(int(w.size) % 7919)
+            mask = jax.random.uniform(k, w.shape) > frac
+            return w * mask
+        out = dict(p)
+        out["blocks"] = dict(p["blocks"])
+        out["blocks"]["mlp"] = jax.tree.map(prune_leaf, p["blocks"]["mlp"])
+        out["blocks"]["attn"] = jax.tree.map(prune_leaf, p["blocks"]["attn"])
+        return out
+
+    frac = 1.0 - comp          # match the FLOPs saved by the weak schedule
+    rows = {"flexidit": fid_flexi}
+    for kind in ("magnitude", "random"):
+        pp = prune(params, frac, kind)
+        s = C.generate(pp, cfg, sched, T=T, T_weak=0, n=n, key=key)
+        rows[kind] = C.fid_proxy(s, ref)
+    C.csv_row("fig10_pruning", 0.0,
+              f"compute={comp:.2f};fid_flexi={rows['flexidit']:.3f};"
+              f"fid_magnitude={rows['magnitude']:.3f};"
+              f"fid_random={rows['random']:.3f};"
+              f"flexi_best={rows['flexidit'] <= min(rows['magnitude'], rows['random'])}")
+    return rows

@@ -1,0 +1,85 @@
+"""Fig. 7 (T2I), Fig. 8 (video spatial/temporal weak), Fig. 11 (MMD)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import FlexiSchedule, relative_compute
+from repro.diffusion import schedule as sch
+
+
+def bench_fig7_t2i(T: int = 20, n: int = 48):
+    """CLIP-proxy + FID-proxy across compute levels (text-conditional)."""
+    params, cfg, sched = C.get_flexidit(conditioning="text", name="bench-t2i")
+    from repro.data import pipeline as dp
+    mk = dp.make_text_cond_batch_fn(C.LATENT, 8, 96, n)
+    b = mk(0, 0, 1, np.random.default_rng(0))
+    cond = jnp.asarray(b["cond"])
+    concepts = np.stack([dp.class_pattern(int(c), C.LATENT, seed=777)
+                         for c in b["concept"]])
+    ref, _ = C.reference_set(128, conditioning="text")
+    key = jax.random.PRNGKey(21)
+    rows = []
+    for T_weak in (0, T // 2, 3 * T // 4):
+        s = C.generate(params, cfg, sched, T=T, T_weak=T_weak, n=n, key=key,
+                       conditioning="text", cond=cond)
+        fid = C.fid_proxy(s, ref)
+        clip = C.clip_proxy(s, concepts)
+        comp = relative_compute(cfg, FlexiSchedule.weak_first(T, T_weak))
+        rows.append((comp, fid, clip))
+        C.csv_row(f"fig7_t2i_Tweak{T_weak}", 0.0,
+                  f"compute={comp:.3f};fid={fid:.3f};clip={clip:.4f}")
+    # weak-conditional guidance variant (§3.4)
+    s = C.generate(params, cfg, sched, T=T, T_weak=T // 2, n=n, key=key,
+                   conditioning="text", cond=cond, weak_guidance=True)
+    C.csv_row("fig7_weak_guidance", 0.0,
+              f"fid={C.fid_proxy(s, ref):.3f};"
+              f"clip={C.clip_proxy(s, concepts):.4f}")
+    return rows
+
+
+def bench_fig8_video(T: int = 16, n: int = 16):
+    """Video: spatial (1,4,4) and temporal (2,2,2) weak modes (§4.3)."""
+    latent = (4, 16, 16, 4)
+    params, cfg, sched = C.get_flexidit(
+        conditioning="class", latent=latent,
+        flex=((2, 2, 2), (1, 4, 4)), name="bench-video", steps=400)
+    ref, _ = C.reference_set(96, latent=latent)
+    key = jax.random.PRNGKey(31)
+    base = C.generate(params, cfg, sched, T=T, T_weak=0, n=n, key=key)
+    fid0 = C.fid_proxy(base, ref)
+    C.csv_row("fig8_video_powerful", 0.0, f"compute=1.0;fid={fid0:.3f}")
+    out = {"powerful": fid0}
+    for name, mode in (("temporal", 1), ("spatial", 2)):
+        for frac in (0.5, 0.75):
+            T_weak = int(T * frac)
+            s = C.generate(params, cfg, sched, T=T, T_weak=T_weak, n=n,
+                           key=key, weak_mode=mode)
+            fid = C.fid_proxy(s, ref)
+            comp = relative_compute(
+                cfg, FlexiSchedule.weak_first(T, T_weak, weak_mode=mode))
+            out[f"{name}_{frac}"] = fid
+            C.csv_row(f"fig8_video_{name}_w{T_weak}", 0.0,
+                      f"compute={comp:.3f};fid={fid:.3f}")
+    return out
+
+
+def bench_fig11_mmd_gap():
+    """MMD(p_chain, q) as a function of t_end: grows toward x0 (Fig. 11 left),
+    and the weak chain has a larger gap than the powerful chain."""
+    params, cfg, sched = C.get_flexidit()
+    from repro.core.mmd import bootstrap_mmd_loss
+    key = jax.random.PRNGKey(41)
+    ref, cond = C.reference_set(64)
+    batch = {"x0": jnp.asarray(ref[:32]), "cond": jnp.asarray(cond[:32])}
+    vals = {}
+    for name, (nw, np_) in (("weak_chain", (3, 0)), ("powerful_chain", (0, 3))):
+        loss, _ = bootstrap_mmd_loss(params, batch, key, cfg, sched,
+                                     n_weak=nw, n_powerful=np_)
+        vals[name] = float(loss)
+    C.csv_row("fig11_mmd", 0.0,
+              f"mmd_weak={vals['weak_chain']:.4f};"
+              f"mmd_powerful={vals['powerful_chain']:.4f}")
+    return vals

@@ -1,0 +1,217 @@
+"""Shared benchmark infrastructure: tiny trained FlexiDiT fixtures (cached
+on disk), FID/CLIP proxy metrics, and timing helpers.
+
+Proxy metrics (offline container — no Inception/CLIP weights): Fréchet
+distance over a fixed random-projection feature space for FID; cosine
+alignment between the conditioning concept embedding and a fixed projection
+of the generated image for CLIP score. Same mathematical form; trends (not
+absolute values) are the reproduction target (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs.base import AttnConfig, DiTConfig, ModelConfig, TrainConfig
+from repro.core import flexify
+from repro.data import pipeline as dp
+from repro.diffusion import schedule as sch
+from repro.launch import steps as st
+from repro.models import dit as dit_mod
+from repro.optim import adamw
+
+CACHE = Path("/tmp/repro_bench_cache")
+T_TRAIN = 100          # diffusion timesteps for bench models
+LATENT = (1, 16, 16, 4)
+N_CLASSES = 8
+
+
+def tiny_cfg(conditioning: str = "class", latent=LATENT,
+             flex=((1, 4, 4),), name: str = "bench-dit") -> ModelConfig:
+    return ModelConfig(
+        name=name, family="dit", num_layers=3, d_model=96, d_ff=384,
+        vocab_size=0, attn=AttnConfig(6, 6, 16, use_rope=False),
+        dit=DiTConfig(latent_shape=latent, patch_size=(1, 2, 2),
+                      flex_patch_sizes=tuple(flex),
+                      underlying_patch_size=tuple(
+                          max(p[i] for p in ((1, 2, 2),) + tuple(flex))
+                          for i in range(3)),
+                      conditioning=conditioning, num_classes=N_CLASSES,
+                      text_len=8, text_dim=96, learn_sigma=False),
+        mlp_activation="gelu", norm_type="layernorm",
+        param_dtype="float32", compute_dtype="float32", remat="none")
+
+
+def get_flexidit(conditioning: str = "class", latent=LATENT,
+                 flex=((1, 4, 4),), steps: int = 500, name="bench-dit",
+                 seed: int = 0) -> Tuple[Any, ModelConfig, sch.DiffusionSchedule]:
+    """Train (or load cached) a tiny FlexiDiT: pre-train at p=2, then
+    alternate modes (paper §4.1 recipe)."""
+    cfg = tiny_cfg(conditioning, latent, flex, name)
+    sched = sch.linear_schedule(T_TRAIN)
+    tag = f"{name}_{conditioning}_{'-'.join(map(str, np.ravel(flex)))}_{steps}"
+    ck = Checkpointer(CACHE / tag, async_save=False)
+    fcfg = flexify(dit_mod.init_dit(cfg, jax.random.PRNGKey(seed)), cfg,
+                   list(flex))[1]
+    if ck.latest_step() is not None:
+        state, _ = ck.restore()
+        params = jax.tree.map(jnp.asarray, state["params"])
+        return params, fcfg, sched
+
+    tc = TrainConfig(learning_rate=2e-3, warmup_steps=20, total_steps=steps)
+    params = dit_mod.init_dit(cfg, jax.random.PRNGKey(seed))
+    if conditioning == "class":
+        make_batch = dp.make_dit_batch_fn(latent, N_CLASSES, 32, 0.15)
+    else:
+        make_batch = dp.make_text_cond_batch_fn(latent, 8, 96, 32)
+    opt = adamw.init_opt_state(params)
+    pre = jax.jit(st.make_dit_train_step(cfg, tc, sched))
+    key = jax.random.PRNGKey(seed + 1)
+    half = steps // 2
+    for i in range(half):
+        b = make_batch(i, 0, 1, np.random.default_rng(i))
+        batch = {"x0": jnp.asarray(b["x0"]), "cond": jnp.asarray(b["cond"])}
+        params, opt, m = pre(params, opt, batch, jax.random.fold_in(key, i))
+    fparams, fcfg = flexify(params, cfg, list(flex))
+    opt = adamw.init_opt_state(fparams)
+    mode_steps = [jax.jit(st.make_dit_train_step(fcfg, tc, sched, mode=m))
+                  for m in range(1 + len(flex))]
+    for i in range(half, steps):
+        b = make_batch(i, 0, 1, np.random.default_rng(i))
+        batch = {"x0": jnp.asarray(b["x0"]), "cond": jnp.asarray(b["cond"])}
+        fn = mode_steps[i % len(mode_steps)]
+        fparams, opt, m = fn(fparams, opt, batch, jax.random.fold_in(key, i))
+    ck.save(steps, {"params": fparams})
+    return fparams, fcfg, sched
+
+
+# ---------------------------------------------------------------------------
+# Proxy metrics
+
+
+_FEAT_KEY = jax.random.PRNGKey(1234)
+
+
+def features(x: np.ndarray, dim: int = 64) -> np.ndarray:
+    """Fixed random-projection + nonlinearity feature map for FID-proxy."""
+    flat = np.asarray(x, np.float32).reshape(x.shape[0], -1)
+    rng = np.random.default_rng(42)
+    W = rng.normal(size=(flat.shape[1], dim)).astype(np.float32) \
+        / np.sqrt(flat.shape[1])
+    h = flat @ W
+    return np.concatenate([np.tanh(h), h], axis=1)
+
+
+def frechet(a: np.ndarray, b: np.ndarray) -> float:
+    """Fréchet distance between feature Gaussians (FID form, real sqrtm via
+    eigendecomposition of the product)."""
+    mu1, mu2 = a.mean(0), b.mean(0)
+    c1 = np.cov(a, rowvar=False) + 1e-6 * np.eye(a.shape[1])
+    c2 = np.cov(b, rowvar=False) + 1e-6 * np.eye(b.shape[1])
+    diff = ((mu1 - mu2) ** 2).sum()
+    # sqrtm(c1 @ c2) trace via eigenvalues of the PSD-similar product
+    s1_vals, s1_vecs = np.linalg.eigh(c1)
+    s1_sqrt = (s1_vecs * np.sqrt(np.maximum(s1_vals, 0))) @ s1_vecs.T
+    inner = s1_sqrt @ c2 @ s1_sqrt
+    vals = np.linalg.eigvalsh(inner)
+    tr_sqrt = np.sqrt(np.maximum(vals, 0)).sum()
+    return float(diff + np.trace(c1) + np.trace(c2) - 2 * tr_sqrt)
+
+
+def fid_proxy(samples: np.ndarray, reference: np.ndarray) -> float:
+    return frechet(features(samples), features(reference))
+
+
+def clip_proxy(samples: np.ndarray, concepts: np.ndarray) -> float:
+    """Cosine alignment between image features and concept pattern features."""
+    f_img = features(samples)
+    f_ref = features(concepts)
+    num = (f_img * f_ref).sum(1)
+    den = np.linalg.norm(f_img, axis=1) * np.linalg.norm(f_ref, axis=1)
+    return float((num / np.maximum(den, 1e-9)).mean())
+
+
+def ssim(a: np.ndarray, b: np.ndarray) -> float:
+    """Global SSIM (single window) per sample, averaged."""
+    a = a.reshape(a.shape[0], -1).astype(np.float64)
+    b = b.reshape(b.shape[0], -1).astype(np.float64)
+    mu_a, mu_b = a.mean(1), b.mean(1)
+    va, vb = a.var(1), b.var(1)
+    cov = ((a - mu_a[:, None]) * (b - mu_b[:, None])).mean(1)
+    c1, c2 = 0.01 ** 2, 0.03 ** 2
+    s = ((2 * mu_a * mu_b + c1) * (2 * cov + c2) /
+         ((mu_a ** 2 + mu_b ** 2 + c1) * (va + vb + c2)))
+    return float(s.mean())
+
+
+def reference_set(n: int = 128, conditioning="class", latent=LATENT
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    if conditioning == "class":
+        mk = dp.make_dit_batch_fn(latent, N_CLASSES, n, 0.15)
+    else:
+        mk = dp.make_text_cond_batch_fn(latent, 8, 96, n)
+    b = mk(0, 0, 1, np.random.default_rng(555))
+    return b["x0"], b["cond"]
+
+
+def timeit(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall μs per call (block_until_ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(times))
+
+
+def csv_row(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+# ---------------------------------------------------------------------------
+# Generation under a FlexiSchedule
+
+
+def generate(params, cfg, sched, *, T: int, T_weak: int, n: int,
+             key, cfg_scale: float = 1.5, weak_guidance: bool = False,
+             solver: str = "ddim", weak_mode: int = 1,
+             weak_last: bool = False, conditioning="class",
+             cond=None) -> np.ndarray:
+    """Sample n images with the weak→powerful scheduler (or reversed)."""
+    from repro.core import FlexiSchedule, GuidanceConfig, make_eps_fn
+    from repro.diffusion import sampler
+
+    ts = sch.respaced_timesteps(sched.num_steps, T)
+    fs = (FlexiSchedule.powerful_first(T, T_weak, weak_mode) if weak_last
+          else FlexiSchedule.weak_first(T, T_weak, weak_mode))
+    if conditioning == "class":
+        y = cond if cond is not None else jnp.arange(n) % N_CLASSES
+        null = jnp.full((n,), N_CLASSES)
+    else:
+        y = jnp.asarray(cond)
+        null = jnp.zeros_like(y)
+    phases = []
+    for mode, tsub in fs.split_timesteps(ts):
+        if weak_guidance and mode == 0:
+            g = GuidanceConfig(scale=cfg_scale, mode_cond=0,
+                               mode_uncond=weak_mode, kind="weak_cond")
+        else:
+            g = GuidanceConfig(scale=cfg_scale, mode_cond=mode,
+                               mode_uncond=mode)
+        phases.append((make_eps_fn(params, cfg, y, null, g), tsub))
+    F, H, W, C = cfg.dit.latent_shape
+    x_T = jax.random.normal(key, (n, F, H, W, C))
+    x0 = sampler.sample_phased(phases, sched, x_T, jax.random.fold_in(key, 1),
+                               solver=solver)
+    return np.asarray(x0)

@@ -1,0 +1,88 @@
+"""Aggregate dry-run JSONs into the §Roofline table (EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+COLS = ("arch", "shape", "profile", "dominant", "compute_s", "memory_s",
+        "collective_s", "roofline_fraction", "useful_flops_ratio")
+
+
+def load(mesh: str = "pod16x16"):
+    rows = []
+    for f in sorted((RESULTS / mesh).glob("*.json")):
+        r = json.loads(f.read_text())
+        if r.get("status") == "ok":
+            t = r["roofline"]
+            rows.append({
+                "arch": r["arch"], "shape": r["shape"],
+                "profile": r.get("profile", "?"),
+                "dominant": t["dominant"],
+                "compute_s": t["compute_s"], "memory_s": t["memory_s"],
+                "collective_s": t["collective_s"],
+                "roofline_fraction": t["roofline_fraction"],
+                "useful_flops_ratio": t.get("useful_flops_ratio", 0.0),
+                "mem_temp_gb": (r["memory_analysis"].get("temp_size_in_bytes")
+                                or 0) / r.get("n_devices", 1) / 2 ** 30,
+                "args_gb": r.get("sharded_args_bytes_per_device", 0) / 2 ** 30,
+            })
+        elif r.get("status") == "skipped":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "profile": "-", "dominant": "SKIPPED",
+                         "compute_s": 0, "memory_s": 0, "collective_s": 0,
+                         "roofline_fraction": 0, "useful_flops_ratio": 0,
+                         "mem_temp_gb": 0, "args_gb": 0,
+                         "skip": r.get("skip_reason", "")})
+        else:
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "profile": "-", "dominant": "ERROR",
+                         "compute_s": 0, "memory_s": 0, "collective_s": 0,
+                         "roofline_fraction": 0, "useful_flops_ratio": 0,
+                         "mem_temp_gb": 0, "args_gb": 0})
+    return rows
+
+
+def markdown_table(mesh: str = "pod16x16") -> str:
+    rows = load(mesh)
+    out = ["| arch | shape | prof | dominant | compute s | memory s | "
+           "collective s | roofline frac | useful/HLO | mem GiB/dev |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["dominant"] in ("SKIPPED", "ERROR"):
+            out.append(f"| {r['arch']} | {r['shape']} | - | {r['dominant']} "
+                       f"| – | – | – | – | – | – |")
+        else:
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['profile']} "
+                f"| **{r['dominant']}** | {r['compute_s']:.3g} "
+                f"| {r['memory_s']:.3g} | {r['collective_s']:.3g} "
+                f"| {r['roofline_fraction']:.3f} "
+                f"| {r['useful_flops_ratio']:.2f} "
+                f"| {r['mem_temp_gb'] + r['args_gb']:.2f} |")
+    return "\n".join(out)
+
+
+def bench_roofline():
+    from benchmarks.common import csv_row
+    for mesh in ("pod16x16", "pod2x16x16"):
+        if not (RESULTS / mesh).exists():
+            continue
+        for r in load(mesh):
+            if r["dominant"] in ("SKIPPED", "ERROR"):
+                csv_row(f"roofline_{mesh}_{r['arch']}_{r['shape']}", 0.0,
+                        r["dominant"])
+            else:
+                csv_row(
+                    f"roofline_{mesh}_{r['arch']}_{r['shape']}", 0.0,
+                    f"dominant={r['dominant']};frac={r['roofline_fraction']:.3f};"
+                    f"c={r['compute_s']:.3g};m={r['memory_s']:.3g};"
+                    f"x={r['collective_s']:.3g}")
+
+
+if __name__ == "__main__":
+    print(markdown_table(sys.argv[1] if len(sys.argv) > 1 else "pod16x16"))

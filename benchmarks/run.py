@@ -1,0 +1,52 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run               # all
+  PYTHONPATH=src python -m benchmarks.run fig6 fig12    # substring filter
+"""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+
+def main() -> None:
+    from benchmarks import (bench_core, bench_extensions, bench_modalities,
+                            bench_perf)
+    from benchmarks.roofline_table import bench_roofline
+
+    benches = [
+        ("fig2_spectral", bench_core.bench_fig2_spectral),
+        ("fig4_pred_gap", bench_core.bench_fig4_pred_gap),
+        ("fig6_fid_vs_compute", bench_core.bench_fig6_fid_vs_compute),
+        ("fig6_T_orthogonality", bench_core.bench_fig6_T_orthogonality),
+        ("fig7_t2i", bench_modalities.bench_fig7_t2i),
+        ("fig8_video", bench_modalities.bench_fig8_video),
+        ("fig10_pruning", bench_core.bench_fig10_pruning_baselines),
+        ("fig11_mmd", bench_modalities.bench_fig11_mmd_gap),
+        ("fig9_utilization", bench_perf.bench_fig9_utilization),
+        ("fig12_packing", bench_perf.bench_fig12_packing),
+        ("adaptive_scheduler", bench_extensions.bench_adaptive_scheduler),
+        ("flow_matching", bench_extensions.bench_flow_matching),
+        ("roofline", bench_roofline),
+    ]
+    filters = [a for a in sys.argv[1:] if not a.startswith("-")]
+    print("name,us_per_call,derived")
+    for name, fn in benches:
+        if filters and not any(f in name for f in filters):
+            continue
+        t0 = time.time()
+        try:
+            fn()
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception as e:  # keep the harness running
+            print(f"{name},0.0,ERROR:{type(e).__name__}:{e}", flush=True)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,16 @@
+"""Serve a (reduced) assigned LM architecture with batched prefill+decode —
+exercises the production serving path (KV cache, slots, greedy decode) on
+CPU for any --arch in the registry.
+
+Run:  PYTHONPATH=src python examples/serve_llm.py --arch gemma2-9b
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--smoke"] + sys.argv[1:]
+    serve_main()

@@ -1,0 +1,127 @@
+"""Fault-tolerant checkpointing: atomic directory commits, async saves,
+retention, and **elastic restore** (reshard onto a different mesh/topology
+than the one that wrote the checkpoint).
+
+Layout:  <root>/step_<N>/{manifest.json, <flat__key__path>.npy, COMMITTED}
+A checkpoint directory without the COMMITTED marker is ignored (a crash
+mid-save never corrupts restore).
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+SEP = "__"
+
+
+def _flatten(tree: Any, prefix: Tuple[str, ...] = ()) -> Dict[str, Any]:
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], prefix + (str(k),)))
+    else:
+        out[SEP.join(prefix)] = tree
+    return out
+
+
+def _unflatten(flat: Dict[str, Any]) -> Any:
+    root: Dict[str, Any] = {}
+    for key, val in flat.items():
+        parts = key.split(SEP)
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return root
+
+
+class Checkpointer:
+    def __init__(self, root: str | Path, keep: int = 3,
+                 async_save: bool = True):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.async_save = async_save
+        self._pool = concurrent.futures.ThreadPoolExecutor(max_workers=1)
+        self._pending: Optional[concurrent.futures.Future] = None
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None):
+        host = jax.tree.map(lambda x: np.asarray(x), tree)
+        if self.async_save:
+            self.wait()
+            self._pending = self._pool.submit(self._write, step, host, extra)
+        else:
+            self._write(step, host, extra)
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None
+
+    def _write(self, step: int, host_tree: Any, extra: Optional[Dict]):
+        final = self.root / f"step_{step:08d}"
+        tmp = self.root / f".tmp_step_{step:08d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        flat = _flatten(host_tree)
+        manifest = {"step": step, "extra": extra or {},
+                    "leaves": {k: {"shape": list(v.shape),
+                                   "dtype": str(v.dtype)}
+                               for k, v in flat.items()}}
+        for k, v in flat.items():
+            np.save(tmp / f"{k}.npy", v)
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        (tmp / "COMMITTED").write_text(str(time.time()))
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)
+        self._gc()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep > 0 else []:
+            shutil.rmtree(self.root / f"step_{s:08d}", ignore_errors=True)
+
+    # -- restore ------------------------------------------------------------
+    def all_steps(self) -> List[int]:
+        out = []
+        for d in self.root.glob("step_*"):
+            if (d / "COMMITTED").exists():
+                out.append(int(d.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: Optional[int] = None,
+                shardings: Any = None) -> Tuple[Any, Dict]:
+        """Load a checkpoint. ``shardings``: optional pytree of
+        ``NamedSharding`` (same structure) — enables **elastic restore**:
+        arrays are placed directly onto the (possibly different) new mesh.
+        """
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoints in {self.root}")
+        d = self.root / f"step_{step:08d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        flat = {k: np.load(d / f"{k}.npy")
+                for k in manifest["leaves"]}
+        tree = _unflatten(flat)
+        if shardings is not None:
+            flat_s = _flatten(shardings)
+            placed = {k: jax.device_put(v, flat_s[k]) if k in flat_s else v
+                      for k, v in flat.items()}
+            tree = _unflatten(placed)
+        return tree, manifest["extra"]

@@ -1,0 +1,39 @@
+"""Architecture registry: ``get_config(arch_id)`` → ModelConfig."""
+from typing import Dict, List
+
+from repro.configs.base import (AttnConfig, DiTConfig, LM_SHAPES, MoEConfig,
+                                ModelConfig, SSMConfig, ShapeConfig,
+                                TrainConfig, cell_is_skipped, get_shape)
+
+from repro.configs.grok_1_314b import CONFIG as _grok
+from repro.configs.deepseek_moe_16b import CONFIG as _dsmoe
+from repro.configs.deepseek_7b import CONFIG as _ds7
+from repro.configs.gemma3_4b import CONFIG as _g3
+from repro.configs.qwen2_5_14b import CONFIG as _qwen
+from repro.configs.gemma2_9b import CONFIG as _g2
+from repro.configs.llama_3_2_vision_90b import CONFIG as _lv
+from repro.configs.whisper_small import CONFIG as _wh
+from repro.configs.hymba_1_5b import CONFIG as _hy
+from repro.configs.mamba2_130m import CONFIG as _m2
+from repro.configs.dit_xl_2 import CONFIG as _dit
+from repro.configs.t2i_transformer import CONFIG as _t2i
+from repro.configs.video_dit import CONFIG as _vdit
+
+ASSIGNED_ARCHS: List[str] = [
+    "grok-1-314b", "deepseek-moe-16b", "deepseek-7b", "gemma3-4b",
+    "qwen2.5-14b", "gemma2-9b", "llama-3.2-vision-90b", "whisper-small",
+    "hymba-1.5b", "mamba2-130m",
+]
+
+DIT_ARCHS: List[str] = ["dit-xl-2", "t2i-transformer", "video-dit"]
+
+REGISTRY: Dict[str, ModelConfig] = {c.name: c for c in [
+    _grok, _dsmoe, _ds7, _g3, _qwen, _g2, _lv, _wh, _hy, _m2,
+    _dit, _t2i, _vdit,
+]}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(REGISTRY)}")
+    return REGISTRY[name]

@@ -1,0 +1,5 @@
+"""FlexiDiT core — the paper's contribution as a composable JAX module."""
+from repro.core.flexify import flexify, merge_lora, trainable_mask  # noqa: F401
+from repro.core.guidance import GuidanceConfig, make_eps_fn  # noqa: F401
+from repro.core.scheduler import (FlexiSchedule, dit_nfe_flops,  # noqa: F401
+                                  relative_compute, schedule_flops)

@@ -1,0 +1,96 @@
+"""Adaptive per-sample inference scheduler — the extension the paper marks
+as future work (App. A: "adapting the inference scheduler ... based on the
+requirements of each sample").
+
+Mechanism: at probe steps, run BOTH modes on a cheap probe (the weak NFE is
+<¼ the powerful one, so a dual probe costs ~25% extra *at that step only*)
+and measure the relative prediction gap ‖ε_w − ε_p‖²/‖ε_p‖². While the gap
+is below ``threshold`` the sampler stays in the weak mode; the first probe
+exceeding it switches to powerful for all remaining steps (the gap is
+monotone-ish in t — Fig. 4 — so a single switch point is near-optimal).
+
+This runs OUTSIDE jit across phases (mode changes recompile), using the two
+per-mode compiled NFEs — the same two executables the static scheduler uses,
+so there is no compile-time overhead beyond them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.scheduler import FlexiSchedule, dit_nfe_flops
+from repro.diffusion import sampler, schedule as sch
+
+
+@dataclasses.dataclass
+class AdaptiveResult:
+    x0: jax.Array
+    switch_step: int            # index in the ladder where powerful took over
+    gaps: List[float]           # measured relative gaps at probe steps
+    flops: float                # actual FLOPs spent (incl. probe overhead)
+    flops_static_powerful: float
+
+
+def adaptive_sample(eps_fns: Sequence[Callable], sched: sch.DiffusionSchedule,
+                    x_T: jax.Array, timesteps: np.ndarray, key: jax.Array,
+                    cfg: ModelConfig, *, threshold: float = 0.35,
+                    probe_every: int = 2, weak_mode: int = 1,
+                    solver: str = "ddim") -> AdaptiveResult:
+    """eps_fns[mode] -> (eps, logvar) at that patch mode (compiled once).
+
+    Returns the sample plus the decision trace and FLOPs accounting.
+    """
+    T = len(timesteps)
+    x = x_T
+    gaps: List[float] = []
+    switch = T
+    f_weak = dit_nfe_flops(cfg, weak_mode)
+    f_pow = dit_nfe_flops(cfg, 0)
+    flops = 0.0
+    i = 0
+    while i < T:
+        t = timesteps[i]
+        probe = (i % probe_every == 0)
+        if probe:
+            e_w, _ = eps_fns[weak_mode](x, jnp.full((x.shape[0],), float(t)))
+            e_p, _ = eps_fns[0](x, jnp.full((x.shape[0],), float(t)))
+            gap = float(jnp.mean(jnp.square(e_w - e_p))
+                        / jnp.maximum(jnp.mean(jnp.square(e_p)), 1e-12))
+            gaps.append(gap)
+            flops += (f_weak + f_pow) * x.shape[0]
+            if gap > threshold:
+                switch = i
+                break
+        # take the weak step (reusing the weak probe when available)
+        x = sampler.sample_phased(
+            [(eps_fns[weak_mode], timesteps[i:i + 1])], sched, x,
+            jax.random.fold_in(key, i), solver=solver)
+        if not probe:
+            flops += f_weak * x.shape[0]
+        i += 1
+
+    if switch < T:
+        x = sampler.sample_phased(
+            [(eps_fns[0], timesteps[switch:])], sched, x,
+            jax.random.fold_in(key, 10_000 + switch), solver=solver)
+        flops += f_pow * x.shape[0] * (T - switch)
+
+    return AdaptiveResult(
+        x0=x, switch_step=switch, gaps=gaps, flops=flops,
+        flops_static_powerful=f_pow * x.shape[0] * T)
+
+
+def make_mode_eps_fns(params: Any, cfg: ModelConfig, cond: Any, null_cond: Any,
+                      cfg_scale: float = 1.5) -> List[Callable]:
+    """Jitted per-mode guided NFEs (one executable per mode, as in §3.3)."""
+    from repro.core.guidance import GuidanceConfig, make_eps_fn
+    fns = []
+    for mode in range(1 + len(cfg.dit.flex_patch_sizes)):
+        g = GuidanceConfig(scale=cfg_scale, mode_cond=mode, mode_uncond=mode)
+        fns.append(jax.jit(make_eps_fn(params, cfg, cond, null_cond, g)))
+    return fns

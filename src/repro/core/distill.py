@@ -1,0 +1,57 @@
+"""Distillation fine-tuning for the LoRA recipe (§3.2).
+
+Train to minimize  E‖ε_θ(x_t; p_powerful) − ε_θ(x_t; p_weak)‖²  where the
+teacher (powerful mode, no LoRAs) is frozen — its pass has no trainable
+parameters by construction of the recipe.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.diffusion import schedule as sch
+from repro.models import dit as dit_mod
+from repro.models.common import dtype_of
+from repro.optim import adamw
+
+
+def distill_loss(params: Any, batch: Dict[str, jax.Array], key: jax.Array,
+                 cfg: ModelConfig, sched: sch.DiffusionSchedule,
+                 mode_weak: int) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    x0 = batch["x0"].astype(dtype_of(cfg.compute_dtype))
+    k_t, k_n = jax.random.split(key)
+    B = x0.shape[0]
+    t = jax.random.randint(k_t, (B,), 0, sched.num_steps)
+    noise = jax.random.normal(k_n, x0.shape, x0.dtype)
+    x_t = sch.q_sample(sched, x0, t, noise)
+
+    teacher = dit_mod.dit_forward(jax.lax.stop_gradient(params), x_t, t,
+                                  batch.get("cond"), cfg, mode=0)
+    student = dit_mod.dit_forward(params, x_t, t, batch.get("cond"), cfg,
+                                  mode=mode_weak)
+    e_t = dit_mod.eps_prediction(teacher, cfg).astype(jnp.float32)
+    e_s = dit_mod.eps_prediction(student, cfg).astype(jnp.float32)
+    loss = jnp.mean(jnp.square(e_t - e_s))
+    return loss, {"distill_loss": loss}
+
+
+def make_distill_step(cfg: ModelConfig, tc: TrainConfig,
+                      sched: Optional[sch.DiffusionSchedule] = None,
+                      mode_weak: int = 1,
+                      trainable: Optional[Any] = None):
+    """Jittable (params, opt_state, batch, key) → (params, opt_state, metrics).
+    ``trainable`` comes from ``core.flexify.trainable_mask(params, 'lora')``."""
+    sched = sched or sch.linear_schedule(1000)
+
+    def step(params, opt_state, batch, key):
+        (loss, metrics), grads = jax.value_and_grad(
+            distill_loss, has_aux=True)(params, batch, key, cfg, sched,
+                                        mode_weak)
+        params, opt_state, om = adamw.adamw_update(params, grads, opt_state,
+                                                   tc, trainable)
+        return params, opt_state, {**metrics, **om}
+
+    return step

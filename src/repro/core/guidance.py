@@ -1,0 +1,101 @@
+"""Generation guidance (§3.4 + App. B.4).
+
+Builds the per-phase ``eps_fn`` used by the sampler, implementing:
+
+* vanilla CFG (p_cond == p_uncond): both NFEs in one batched call;
+* the paper's weak-model guidance (p_cond < p_uncond): the *conditional*
+  prediction of the weak model is the guidance signal —
+  ``ε_w(c) + s₂·(ε_p(c) − ε_w(c))`` — two NFEs at different patch modes;
+* the App. B.4 scale rule ``(1 − s₁)/(1 − s₂) = 2.5`` mapping a vanilla scale
+  s₁ to the weak-guidance scale s₂.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import dit as dit_mod
+
+SCALE_RULE = 2.5
+
+
+@dataclasses.dataclass(frozen=True)
+class GuidanceConfig:
+    scale: float = 4.0           # s_cfg (vanilla scale, s₁)
+    mode_cond: int = 0           # patch mode for the conditional NFE
+    mode_uncond: int = 0         # patch mode for the guidance NFE
+    # 'uncond'   → guidance signal is the unconditional prediction
+    # 'weak_cond'→ guidance signal is the weak model's *conditional* pred.
+    kind: str = "uncond"
+
+    def effective_scale(self) -> float:
+        if self.kind == "uncond":
+            return self.scale
+        # (1 - s1)/(1 - s2) = 2.5  →  s2 = 1 - (1 - s1)/2.5
+        return 1.0 - (1.0 - self.scale) / SCALE_RULE
+
+
+def split_model_out(out: jax.Array, cfg: ModelConfig
+                    ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    c_in = cfg.dit.latent_shape[-1]
+    if cfg.dit.learn_sigma:
+        return out[..., :c_in], out[..., c_in:]
+    return out, None
+
+
+def make_eps_fn(params: Any, cfg: ModelConfig, cond: Any, null_cond: Any,
+                g: GuidanceConfig,
+                text_mask: Optional[jax.Array] = None,
+                null_text_mask: Optional[jax.Array] = None) -> Callable:
+    """Returns eps_fn(x, t) → (eps_guided, logvar_frac)."""
+    s = g.effective_scale()
+
+    if g.scale == 0.0 or cond is None:
+        def eps_plain(x, t):
+            out = dit_mod.dit_forward(params, x, t, cond, cfg, mode=g.mode_cond,
+                                      text_mask=text_mask)
+            return split_model_out(out, cfg)
+        return eps_plain
+
+    if g.mode_cond == g.mode_uncond and g.kind == "uncond":
+        # vanilla CFG — one NFE at 2× batch (same sequence length)
+        def eps_cfg(x, t):
+            x2 = jnp.concatenate([x, x], axis=0)
+            t2 = jnp.concatenate([t, t], axis=0)
+            if cond.ndim >= 2:    # text embeddings
+                c2 = jnp.concatenate([cond, null_cond], axis=0)
+                m2 = None
+                if text_mask is not None:
+                    m2 = jnp.concatenate([text_mask, null_text_mask], axis=0)
+            else:                 # class labels
+                c2 = jnp.concatenate([cond, null_cond], axis=0)
+                m2 = None
+            out = dit_mod.dit_forward(params, x2, t2, c2, cfg,
+                                      mode=g.mode_cond, text_mask=m2)
+            eps, logvar = split_model_out(out, cfg)
+            e_c, e_u = jnp.split(eps, 2, axis=0)
+            lv = None if logvar is None else jnp.split(logvar, 2, axis=0)[0]
+            return e_u + g.scale * (e_c - e_u), lv
+        return eps_cfg
+
+    # mixed patch sizes — two NFEs (packing alternatives in core.packing)
+    def eps_weak_guided(x, t):
+        out_c = dit_mod.dit_forward(params, x, t, cond, cfg, mode=g.mode_cond,
+                                    text_mask=text_mask)
+        e_c, lv = split_model_out(out_c, cfg)
+        if g.kind == "weak_cond":
+            # paper: guidance = weak *conditional* prediction
+            out_g = dit_mod.dit_forward(params, x, t, cond, cfg,
+                                        mode=g.mode_uncond, text_mask=text_mask)
+        else:
+            out_g = dit_mod.dit_forward(params, x, t, null_cond, cfg,
+                                        mode=g.mode_uncond,
+                                        text_mask=null_text_mask)
+        e_g, _ = split_model_out(out_g, cfg)
+        return e_g + s * (e_c - e_g), lv
+
+    return eps_weak_guided

@@ -1,0 +1,136 @@
+"""Bootstrapped MMD distribution-matching loss (App. B.1).
+
+Corrects weak-model exposure bias for the shared-parameters recipe: run a
+short denoising chain from t_start → t_end (first steps with the weak mode,
+rest with the powerful mode — mirroring the inference scheduler), and match
+the distribution of the chain's output against real images corrupted
+directly to t_end, via RBF-kernel maximum mean discrepancy.
+
+Timestep sampling is biased toward small t (where the measured MMD gap is
+largest — Fig. 11 left), as in the paper.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.diffusion import schedule as sch
+from repro.models import dit as dit_mod
+from repro.models.common import dtype_of
+from repro.optim import adamw
+
+
+def rbf_mmd2(x: jax.Array, y: jax.Array,
+             bandwidths: Sequence[float] = (1.0, 2.0, 4.0, 8.0)) -> jax.Array:
+    """Unbiased-ish MMD² with a mixture of RBF kernels. x,y: [B, D]."""
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+
+    def pdist2(a, b):
+        return (jnp.sum(a * a, 1)[:, None] + jnp.sum(b * b, 1)[None]
+                - 2.0 * a @ b.T)
+
+    dxx, dyy, dxy = pdist2(x, x), pdist2(y, y), pdist2(x, y)
+    # median-heuristic bandwidth: not a differentiation target — stop the
+    # gradient BEFORE the sort (this jaxlib's sort-JVP gather rule is broken)
+    flat = jnp.sort(jax.lax.stop_gradient(dxy).reshape(-1))
+    med = flat[flat.shape[0] // 2] + 1e-6
+    total = 0.0
+    for bw in bandwidths:
+        g = 1.0 / (bw * med)
+        kxx = jnp.exp(-g * dxx)
+        kyy = jnp.exp(-g * dyy)
+        kxy = jnp.exp(-g * dxy)
+        n = x.shape[0]
+        total = total + (jnp.sum(kxx) - n) / (n * (n - 1)) \
+            + (jnp.sum(kyy) - n) / (n * (n - 1)) \
+            - 2.0 * jnp.mean(kxy)
+    return total
+
+
+def _chain_denoise(params: Any, x: jax.Array, cond: Any, cfg: ModelConfig,
+                   sched: sch.DiffusionSchedule, timesteps: jax.Array,
+                   modes: Sequence[int], key: jax.Array) -> jax.Array:
+    """Run len(modes) DDPM steps with per-step (static) patch modes."""
+    for i, mode in enumerate(modes):
+        t = timesteps[:, i]
+        out = dit_mod.dit_forward(params, x, t, cond, cfg, mode=mode)
+        eps = dit_mod.eps_prediction(out, cfg)
+        logvar = out[..., cfg.dit.latent_shape[-1]:] if cfg.dit.learn_sigma else None
+        x = sch.ddpm_step(sched, x, eps, t, jax.random.fold_in(key, i),
+                          logvar)
+    return x
+
+
+def bootstrap_mmd_loss(params: Any, batch: Dict[str, jax.Array],
+                       key: jax.Array, cfg: ModelConfig,
+                       sched: sch.DiffusionSchedule, *,
+                       n_weak: int = 2, n_powerful: int = 2,
+                       weak_mode: int = 1,
+                       t_bias: float = 2.0
+                       ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Fig. 11 (right): corrupt x̃0 to t_start, denoise n_weak weak steps then
+    n_powerful powerful steps down to t_end, and MMD-match against q(x_{t_end}|x0)
+    samples of independent reals."""
+    x0 = batch["x0"].astype(dtype_of(cfg.compute_dtype))
+    x0_other = batch.get("x0_target", x0[::-1]).astype(x0.dtype)
+    B = x0.shape[0]
+    n_chain = n_weak + n_powerful
+    k_t, k_n1, k_n2, k_c = jax.random.split(key, 4)
+
+    # biased sampling of t_end toward 0 (MMD gap grows near x0)
+    u = jax.random.uniform(k_t, (B,))
+    t_end = (u ** t_bias * (sched.num_steps - n_chain - 1)).astype(jnp.int32)
+    steps = t_end[:, None] + jnp.arange(n_chain, 0, -1)[None]    # descending
+    t_start = steps[:, 0]
+
+    noise = jax.random.normal(k_n1, x0.shape, x0.dtype)
+    x_t = sch.q_sample(sched, x0, t_start, noise)
+    modes = [weak_mode] * n_weak + [0] * n_powerful
+    x_pred = _chain_denoise(params, x_t, batch.get("cond"), cfg, sched,
+                            steps, modes, k_c)
+
+    noise2 = jax.random.normal(k_n2, x0.shape, x0.dtype)
+    x_target = sch.q_sample(sched, x0_other, t_end, noise2)
+
+    loss = rbf_mmd2(x_pred.reshape(B, -1), x_target.reshape(B, -1))
+    return loss, {"mmd_loss": loss}
+
+
+def make_mmd_finetune_step(cfg: ModelConfig, tc: TrainConfig,
+                           sched: Optional[sch.DiffusionSchedule] = None,
+                           denoise_weight: float = 1.0,
+                           mmd_weight: float = 0.1,
+                           weak_mode: int = 1, train_mode: int = 0):
+    """Shared-params recipe (§4.1): standard denoising loss at a (per-step
+    static) patch mode + the bootstrapped MMD correction."""
+    sched = sched or sch.linear_schedule(1000)
+
+    def loss_fn(params, batch, key):
+        from repro.launch.steps import make_dit_train_step  # noqa: F401
+        x0 = batch["x0"].astype(dtype_of(cfg.compute_dtype))
+        k1, k2, k3 = jax.random.split(key, 3)
+        B = x0.shape[0]
+        t = jax.random.randint(k1, (B,), 0, sched.num_steps)
+        noise = jax.random.normal(k2, x0.shape, x0.dtype)
+        x_t = sch.q_sample(sched, x0, t, noise)
+        out = dit_mod.dit_forward(params, x_t, t, batch.get("cond"), cfg,
+                                  mode=train_mode)
+        eps = dit_mod.eps_prediction(out, cfg).astype(jnp.float32)
+        den = jnp.mean(jnp.square(eps - noise.astype(jnp.float32)))
+        mmd, _ = bootstrap_mmd_loss(params, batch, k3, cfg, sched,
+                                    weak_mode=weak_mode)
+        loss = denoise_weight * den + mmd_weight * mmd
+        return loss, {"denoise_loss": den, "mmd_loss": mmd}
+
+    def step(params, opt_state, batch, key):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch, key)
+        params, opt_state, om = adamw.adamw_update(params, grads, opt_state, tc)
+        return params, opt_state, {**metrics, **om}
+
+    return step

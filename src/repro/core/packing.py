@@ -1,0 +1,178 @@
+"""Packed CFG inference (App. B.2, Fig. 12).
+
+When the conditional and guidance branches use different patch sizes, the
+two NFEs propagate different sequence lengths. Four approaches:
+
+  1. two separate NFEs (one powerful, one weak);
+  2. one NFE per patch size with batch-2 stacking when both branches share a
+     size (vanilla CFG fast path — ``core.guidance`` implements it);
+  3. pad the weak sequence to the powerful length and batch both → 1 call,
+     wasted FLOPs on padding;
+  4. pack r = N_p/N_w weak sequences into one powerful-length row with
+     block-diagonal (segment-id) attention masks (NaViT-style).
+
+On TPU shapes must be static, so approach 4 packs to a fixed row length and
+masks via segment ids inside attention (never materializing a [N,N] bool
+mask in HBM). ``packed_weak_forward`` runs mode-m NFEs for ``r`` different
+samples in one fused sequence; FLOPs/latency accounting for all four
+approaches is in ``packing_cost``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.scheduler import dit_nfe_flops
+from repro.models import dit as dit_mod
+
+
+def pack_ratio(cfg: ModelConfig, mode: int) -> int:
+    """How many mode-``mode`` sequences fit in one powerful-length row."""
+    return dit_mod.tokens_for_mode(cfg, 0) // dit_mod.tokens_for_mode(cfg, mode)
+
+
+def packed_weak_forward(params: Any, x_ts: jax.Array, t: jax.Array,
+                        conds: jax.Array, cfg: ModelConfig, mode: int
+                        ) -> jax.Array:
+    """Run ``r`` weak NFEs packed into one sequence row per batch element.
+
+    x_ts: [r, B, F, H, W, C] — r independent latents (e.g. the conditional
+    and unconditional branches of several samples);
+    t: [B]; conds: [r, B] class labels.
+    Returns eps for each: [r, B, F, H, W, c_out].
+
+    Implementation: tokens of the r latents are concatenated along the
+    sequence axis with segment ids, attention is block-diagonal, adaLN
+    conditioning is applied per segment.
+    """
+    r, B = x_ts.shape[:2]
+    dit = cfg.dit
+    p = dit_mod.patch_sizes(cfg)[mode]
+    pp = dit.underlying_patch_size
+    from repro.core import patch as patch_mod
+    from repro.models.common import dtype_of, layer_norm
+    dtype = dtype_of(cfg.compute_dtype)
+
+    # tokenize each latent (shared flex weights → same as unpacked)
+    toks = []
+    for i in range(r):
+        x_i = x_ts[i].astype(dtype)
+        if mode > 0 and "embed_new" in params:
+            pn = params["embed_new"][f"m{mode}"]
+            patches = patch_mod.patchify(x_i, p)
+            tok = jnp.einsum("bnqc,qcd->bnd", patches, pn["w"].astype(dtype)
+                             ) + pn["b"].astype(dtype)
+        else:
+            tok = patch_mod.embed_tokens_flex(params["embed"]["w_flex"],
+                                              params["embed"]["b"], x_i, p, pp)
+        pos = jnp.asarray(dit_mod._pos_embed_np(dit.latent_shape, p,
+                                                cfg.d_model), dtype)
+        tok = tok + pos[None]
+        if mode > 0:
+            tok = tok + params["ps_embed"][mode - 1].astype(dtype)[None, None]
+            tok = layer_norm(tok, 1.0 + params["ps_ln"]["scale"][mode - 1],
+                             params["ps_ln"]["bias"][mode - 1])
+        toks.append(tok)
+    N_w = toks[0].shape[1]
+    packed = jnp.concatenate(toks, axis=1)               # [B, r·N_w, d]
+    segment_ids = jnp.repeat(jnp.arange(r, dtype=jnp.int32), N_w)[None]
+    segment_ids = jnp.broadcast_to(segment_ids, (B, r * N_w))
+
+    # per-segment conditioning vector: broadcast to token level via adaLN
+    # (we fold the r conditionings by running blocks with per-token c).
+    cs = [dit_mod.condition_vector(params, t, conds[i], cfg, dtype)
+          for i in range(r)]                             # r × [B, d]
+    c_tok = jnp.concatenate([jnp.repeat(c[:, None], N_w, axis=1)
+                             for c in cs], axis=1)       # [B, r·N_w, d]
+
+    def body(h, bp):
+        h = _packed_block(bp, h, c_tok, cfg, mode, segment_ids)
+        return h, None
+
+    from repro.models.common import scan_or_unroll
+    tok, _ = scan_or_unroll(body, packed, params["blocks"], cfg.unroll)
+
+    ada = dit_mod._linear(jax.nn.silu(c_tok.astype(jnp.float32)).astype(dtype),
+                          params["final"]["ada"]["w"],
+                          params["final"]["ada"]["b"])
+    sh, sc = jnp.split(ada, 2, axis=-1)
+    tok = dit_mod._ln(tok) * (1.0 + sc) + sh
+
+    outs = []
+    for i in range(r):
+        ti = tok[:, i * N_w:(i + 1) * N_w]
+        if mode > 0 and "deembed_new" in params:
+            pn = params["deembed_new"][f"m{mode}"]
+            patches = jnp.einsum("bnd,dcq->bnqc", ti, pn["w"].astype(dtype))
+            patches = patches + pn["b"].T.astype(patches.dtype)[None, None]
+            out = patch_mod.unpatchify(patches, dit.latent_shape, p)
+        else:
+            out = patch_mod.deembed_tokens_flex(
+                params["deembed"]["w_flex"], params["deembed"]["b_flex"],
+                ti, dit.latent_shape, p, pp, dit_mod.c_out_dim(cfg))
+        outs.append(out)
+    return jnp.stack(outs)
+
+
+def _packed_block(p: Any, x: jax.Array, c_tok: jax.Array, cfg: ModelConfig,
+                  mode: int, segment_ids: jax.Array) -> jax.Array:
+    """DiT block with per-token adaLN conditioning + segment-masked attention."""
+    from repro.models.common import dtype_of
+    H = cfg.attn.num_heads
+    dtype = x.dtype
+    ada = dit_mod._linear(jax.nn.silu(c_tok.astype(jnp.float32)).astype(dtype),
+                          p["ada"]["w"], p["ada"]["b"])
+    sh1, sc1, g1, sh2, sc2, g2 = jnp.split(ada, 6, axis=-1)
+    lora = p.get("lora", {})
+    h = dit_mod._ln(x) * (1.0 + sc1) + sh1
+    attn = dit_mod._mha(p["attn"], h, H, lora=lora.get("attn"), mode=mode,
+                        segment_ids=segment_ids)
+    x = x + g1 * attn
+    h2 = dit_mod._ln(x) * (1.0 + sc2) + sh2
+    mlp_lora = lora.get("mlp", {})
+    h2 = dit_mod._linear(h2, p["mlp"]["w_in"], p["mlp"]["b_in"],
+                         lora=mlp_lora.get("w_in"), mode=mode)
+    h2 = jax.nn.gelu(h2.astype(jnp.float32), approximate=True).astype(dtype)
+    h2 = dit_mod._linear(h2, p["mlp"]["w_out"], p["mlp"]["b_out"],
+                         lora=mlp_lora.get("w_out"), mode=mode)
+    return x + g2 * h2
+
+
+# ---------------------------------------------------------------------------
+# FLOPs / latency accounting for the four approaches (Fig. 12)
+
+
+@dataclasses.dataclass(frozen=True)
+class PackingCost:
+    approach: int
+    nfe_calls: int          # sequential NFE launches
+    flops: float            # total FLOPs
+    longest_row_tokens: int  # latency proxy: tokens in the critical NFE
+
+
+def packing_cost(cfg: ModelConfig, mode_weak: int, n_images: int
+                 ) -> List[PackingCost]:
+    """Costs for generating ``n_images`` with CFG where the conditional runs
+    powerful and the guidance weak (per denoising step)."""
+    f_p = dit_nfe_flops(cfg, 0)
+    f_w = dit_nfe_flops(cfg, mode_weak)
+    N_p = dit_mod.tokens_for_mode(cfg, 0)
+    N_w = dit_mod.tokens_for_mode(cfg, mode_weak)
+    r = max(1, N_p // N_w)
+    n = n_images
+    out = [
+        # 1: separate sequential calls per branch
+        PackingCost(1, 2, n * (f_p + f_w), N_p),
+        # 2: batch conditional calls together; batch weak calls together
+        PackingCost(2, 2, n * (f_p + f_w), N_p),
+        # 3: pad weak rows to powerful length, single batched call
+        PackingCost(3, 1, n * 2 * f_p, N_p),
+        # 4: pack r weak rows into powerful-length rows, single call
+        PackingCost(4, 1, n * f_p + int(np.ceil(n / r)) * f_p, N_p),
+    ]
+    return out

@@ -1,0 +1,113 @@
+"""Flexible (de-)tokenization: patchify / unpatchify for 2D images and 3D
+videos, plus the flexible patch embed / de-embed built on ``core.resize``.
+
+Latents are laid out ``[B, F, H, W, C]`` (F=1 for images). A patch size is a
+triple ``(p_f, p_h, p_w)``. Tokenization with patch size p gives
+``N = (F/p_f)·(H/p_h)·(W/p_w)`` tokens.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import resize
+
+Patch = Tuple[int, int, int]
+
+
+def num_tokens(latent_shape: Tuple[int, int, int, int], p: Patch) -> int:
+    F, H, W, _ = latent_shape
+    assert F % p[0] == 0 and H % p[1] == 0 and W % p[2] == 0, (latent_shape, p)
+    return (F // p[0]) * (H // p[1]) * (W // p[2])
+
+
+def patchify(x: jax.Array, p: Patch) -> jax.Array:
+    """[B,F,H,W,C] → [B,N,prod(p),C]"""
+    B, F, H, W, C = x.shape
+    pf, ph, pw = p
+    x = x.reshape(B, F // pf, pf, H // ph, ph, W // pw, pw, C)
+    x = x.transpose(0, 1, 3, 5, 2, 4, 6, 7)
+    return x.reshape(B, (F // pf) * (H // ph) * (W // pw), pf * ph * pw, C)
+
+
+def unpatchify(tok: jax.Array, latent_shape: Tuple[int, int, int, int],
+               p: Patch) -> jax.Array:
+    """[B,N,prod(p),C] → [B,F,H,W,C]"""
+    F, H, W, _ = latent_shape
+    pf, ph, pw = p
+    B, N, PP, C = tok.shape
+    gf, gh, gw = F // pf, H // ph, W // pw
+    x = tok.reshape(B, gf, gh, gw, pf, ph, pw, C)
+    x = x.transpose(0, 1, 4, 2, 5, 3, 6, 7)
+    return x.reshape(B, F, H, W, C)
+
+
+def patch_centers(latent_shape: Tuple[int, int, int, int], p: Patch
+                  ) -> np.ndarray:
+    """Pixel-coordinate centers of every patch in the ORIGINAL latent frame
+    (paper App. C.2: positions are identified by original-image coordinates,
+    so all patch sizes share one coordinate system).  → [N, 3] float."""
+    F, H, W, _ = latent_shape
+    pf, ph, pw = p
+    f = (np.arange(F // pf) + 0.5) * pf
+    h = (np.arange(H // ph) + 0.5) * ph
+    w = (np.arange(W // pw) + 0.5) * pw
+    grid = np.stack(np.meshgrid(f, h, w, indexing="ij"), axis=-1)
+    return grid.reshape(-1, 3)
+
+
+def sincos_pos_embed(d: int, coords: np.ndarray) -> np.ndarray:
+    """Fixed sin-cos embedding evaluated at fractional pixel coords [N,3].
+
+    d is split across the 3 axes (f gets the remainder). Matches the DiT
+    convention of sincos grids, generalized to arbitrary (shared) coords.
+    """
+    n_axes = coords.shape[1]
+    d_axis = d // n_axes
+    outs = []
+    for ax in range(n_axes):
+        dd = d - d_axis * (n_axes - 1) if ax == 0 else d_axis
+        half = dd // 2
+        freqs = 1.0 / (10_000.0 ** (np.arange(half) / max(1, half)))
+        args = coords[:, ax:ax + 1] * freqs[None]
+        emb = np.concatenate([np.sin(args), np.cos(args)], axis=1)
+        if emb.shape[1] < dd:
+            emb = np.pad(emb, ((0, 0), (0, dd - emb.shape[1])))
+        outs.append(emb)
+    return np.concatenate(outs, axis=1).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Flexible embed / de-embed application
+
+
+def embed_tokens_flex(w_flex: jax.Array, b: jax.Array, x: jax.Array,
+                      p: Patch, p_prime: Patch) -> jax.Array:
+    """Tokenize latent x [B,F,H,W,C] with patch size p using flexible weights.
+
+    w_flex: [prod(p'), C, d]; b: [d] → tokens [B,N,d].
+    Equivalent to a strided conv whose kernel is the PI-resized weight.
+    """
+    W = resize.project_embed(w_flex, p, p_prime)       # [prod(p), C, d]
+    patches = patchify(x, p)                           # [B,N,prod(p),C]
+    tok = jnp.einsum("bnpc,pcd->bnd", patches, W.astype(x.dtype),
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return tok + b.astype(x.dtype)
+
+
+def deembed_tokens_flex(w_flex: jax.Array, b_flex: jax.Array, tok: jax.Array,
+                        latent_shape: Tuple[int, int, int, int], p: Patch,
+                        p_prime: Patch, c_out: int) -> jax.Array:
+    """De-tokenize [B,N,d] → latent [B,F,H,W,c_out] with patch size p.
+
+    w_flex: [d, c_out, prod(p')]; b_flex: [c_out, prod(p')].
+    """
+    W = resize.project_deembed(w_flex, p, p_prime)     # [d, c_out, prod(p)]
+    Bb = resize.project_deembed_bias(b_flex, p, p_prime)
+    patches = jnp.einsum("bnd,dcq->bnqc", tok, W.astype(tok.dtype),
+                         preferred_element_type=jnp.float32)
+    patches = (patches + Bb.T.astype(jnp.float32)[None, None]).astype(tok.dtype)
+    return unpatchify(patches, latent_shape, p)

@@ -1,0 +1,114 @@
+"""PI-resize (pseudo-inverse bilinear) weight projections — FlexiDiT §3.1.
+
+Conventions (matching the paper exactly; see DESIGN.md §1):
+
+* ``b_up(a, p')`` — the (tri)linear *upsampling* matrix ``B ∈ R^{Πp'ᵢ × Πaᵢ}``
+  mapping a flattened patch at resolution ``a`` to resolution ``p'`` (p' ≥ a
+  elementwise). Built by resizing basis vectors with ``jax.image.resize``.
+* Embedding instantiation:   ``W(a)   = Q_embed(a) · w_flex`` with
+  ``Q_embed(a) = pinv(B)``  (paper: "pseudo-inverse of the bilinear
+  interpolation projection", ``Q ∈ R^{a²×p'²}``), applied per channel.
+* Embedding init:            ``w_flex = B(p_pre→p') · w_pre`` — i.e.
+  ``Q_embed(p_pre)† w_pre``. Then ``W(p_pre) = pinv(B)·B·w_pre = w_pre``
+  **exactly** (B has full column rank), preserving the pre-trained forward.
+* De-embedding instantiation: ``W_de(a) = w_de_flex · Q_de(a)`` with
+  ``Q_de(a) = pinv(Bᵀ) = pinv(B)ᵀ ∈ R^{p'²×a²}`` ("flipped dimensions").
+* De-embedding init:          ``w_de_flex = w_de_pre · Bᵀ`` — then
+  ``W_de(p_pre) = w_de_pre·Bᵀ·pinv(Bᵀ) = w_de_pre`` exactly (Bᵀ full row
+  rank).
+
+All projection matrices are tiny (≤ p'³ × p³) and computed once with numpy;
+they are constants folded into the instantiated weights, so switching modes
+costs nothing at inference (paper App. C.2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.lru_cache(maxsize=64)
+def b_up(a: Tuple[int, ...], p_prime: Tuple[int, ...]) -> np.ndarray:
+    """(Tri)linear upsampling matrix B: R^{prod(a)} → R^{prod(p')}.
+
+    ``a`` and ``p_prime`` are patch shapes, e.g. (2, 2) or (1, 4, 4).
+    Requires p'ᵢ ≥ aᵢ for full column rank (checked).
+    """
+    a = tuple(int(x) for x in a)
+    p_prime = tuple(int(x) for x in p_prime)
+    assert len(a) == len(p_prime)
+    assert all(q >= b for q, b in zip(p_prime, a)), (a, p_prime)
+    n_in = int(np.prod(a))
+    n_out = int(np.prod(p_prime))
+    basis = np.eye(n_in, dtype=np.float64).reshape((n_in,) + a)
+    # ensure_compile_time_eval: this constant may first be requested while
+    # tracing inside jit; the resize must still evaluate eagerly.
+    with jax.ensure_compile_time_eval():
+        resized = jax.image.resize(jnp.asarray(basis),
+                                   (n_in,) + p_prime, method="linear")
+        mat = np.asarray(resized, np.float64).reshape(n_in, n_out).T
+    return mat  # [out, in]
+
+
+@functools.lru_cache(maxsize=64)
+def q_embed(a: Tuple[int, ...], p_prime: Tuple[int, ...]) -> np.ndarray:
+    """Q_embed(a) = pinv(B_up(a→p')) ∈ R^{prod(a) × prod(p')}"""
+    return np.linalg.pinv(b_up(a, p_prime))
+
+
+@functools.lru_cache(maxsize=64)
+def q_deembed(a: Tuple[int, ...], p_prime: Tuple[int, ...]) -> np.ndarray:
+    """Q_de(a) = pinv(B_upᵀ) = Q_embed(a)ᵀ ∈ R^{prod(p') × prod(a)}"""
+    return q_embed(a, p_prime).T
+
+
+# ---------------------------------------------------------------------------
+# Weight projection helpers. Embedding weights are stored as
+#   w_flex: [prod(p'), c_in, d]        (per-channel projection)
+# and de-embedding weights as
+#   w_de_flex: [d, c_out, prod(p')],  b_de_flex: [c_out, prod(p')]
+
+
+def project_embed(w_flex: jax.Array, a: Tuple[int, ...],
+                  p_prime: Tuple[int, ...]) -> jax.Array:
+    """[prod(p'), c, d] → [prod(a), c, d]"""
+    Q = jnp.asarray(q_embed(a, p_prime), w_flex.dtype)
+    return jnp.einsum("qp,pcd->qcd", Q, w_flex)
+
+
+def project_deembed(w_flex: jax.Array, a: Tuple[int, ...],
+                    p_prime: Tuple[int, ...]) -> jax.Array:
+    """[d, c, prod(p')] → [d, c, prod(a)]"""
+    Q = jnp.asarray(q_deembed(a, p_prime), w_flex.dtype)
+    return jnp.einsum("dcp,pq->dcq", w_flex, Q)
+
+
+def project_deembed_bias(b_flex: jax.Array, a: Tuple[int, ...],
+                         p_prime: Tuple[int, ...]) -> jax.Array:
+    """[c, prod(p')] → [c, prod(a)]"""
+    Q = jnp.asarray(q_deembed(a, p_prime), b_flex.dtype)
+    return jnp.einsum("cp,pq->cq", b_flex, Q)
+
+
+def lift_embed(w_pre: jax.Array, p_pre: Tuple[int, ...],
+               p_prime: Tuple[int, ...]) -> jax.Array:
+    """Init: w_flex = B_up(p_pre→p') · w_pre.  [prod(p_pre),c,d] → [prod(p'),c,d]"""
+    B = jnp.asarray(b_up(p_pre, p_prime), w_pre.dtype)
+    return jnp.einsum("qp,pcd->qcd", B, w_pre)
+
+
+def lift_deembed(w_pre: jax.Array, p_pre: Tuple[int, ...],
+                 p_prime: Tuple[int, ...]) -> jax.Array:
+    """Init: w_de_flex = w_de_pre · B_upᵀ.  [d,c,prod(p_pre)] → [d,c,prod(p')]"""
+    B = jnp.asarray(b_up(p_pre, p_prime), w_pre.dtype)
+    return jnp.einsum("dcp,qp->dcq", w_pre, B)
+
+
+def lift_deembed_bias(b_pre: jax.Array, p_pre: Tuple[int, ...],
+                      p_prime: Tuple[int, ...]) -> jax.Array:
+    B = jnp.asarray(b_up(p_pre, p_prime), b_pre.dtype)
+    return jnp.einsum("cp,qp->cq", b_pre, B)

@@ -1,0 +1,99 @@
+"""Sampling loops. A *phase* is (eps_fn, timesteps): the FlexiDiT inference
+scheduler (core.scheduler) chains a weak phase and a powerful phase — each
+phase is one ``lax.scan`` over its timesteps with a single compiled NFE body,
+so no recompilation ever happens inside the loop (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.diffusion import schedule as sch
+
+# eps_fn(x_t, t[B]) -> (eps, logvar_frac | None)
+EpsFn = Callable[[jax.Array, jax.Array], Tuple[jax.Array, Optional[jax.Array]]]
+
+
+def ddpm_phase(eps_fn: EpsFn, sched: sch.DiffusionSchedule, x: jax.Array,
+               timesteps: np.ndarray, key: jax.Array,
+               clip_x0: float = 0.0) -> jax.Array:
+    """Run DDPM ancestral steps for the given (descending) timesteps."""
+    ts = jnp.asarray(timesteps, jnp.int32)
+    keys = jax.random.split(key, len(timesteps))
+
+    def body(x, inp):
+        t, k = inp
+        tb = jnp.full((x.shape[0],), t, jnp.int32)
+        eps, logvar = eps_fn(x, tb)
+        x = sch.ddpm_step(sched, x, eps, tb, k, logvar, clip_x0)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, (ts, keys))
+    return x
+
+
+def ddim_phase(eps_fn: EpsFn, sched: sch.DiffusionSchedule, x: jax.Array,
+               timesteps: np.ndarray, key: jax.Array,
+               eta: float = 0.0, t_final: int = -1) -> jax.Array:
+    """``t_final``: the timestep the NEXT phase starts at (-1 = final x0
+    step) — keeps phase chaining identical to a single un-split run."""
+    ts = jnp.asarray(timesteps, jnp.int32)
+    ts_prev = jnp.concatenate([ts[1:], jnp.asarray([t_final], jnp.int32)])
+    keys = jax.random.split(key, len(timesteps))
+
+    def body(x, inp):
+        t, tp, k = inp
+        tb = jnp.full((x.shape[0],), t, jnp.int32)
+        tpb = jnp.full((x.shape[0],), tp, jnp.int32)
+        eps, _ = eps_fn(x, tb)
+        return sch.ddim_step(sched, x, eps, tb, tpb, eta, k), None
+
+    x, _ = jax.lax.scan(body, x, (ts, ts_prev, keys))
+    return x
+
+
+def dpm2_phase(eps_fn: EpsFn, sched: sch.DiffusionSchedule, x: jax.Array,
+               timesteps: np.ndarray, key: jax.Array,
+               t_final: int = 0) -> jax.Array:
+    ts = jnp.asarray(timesteps, jnp.int32)
+    ts_prev = jnp.concatenate([ts[1:], jnp.asarray([max(t_final, 0)],
+                                                   jnp.int32)])
+
+    def eps_only(xx, tb):
+        return eps_fn(xx, tb)[0]
+
+    def body(x, inp):
+        t, tp = inp
+        tb = jnp.full((x.shape[0],), t, jnp.int32)
+        tpb = jnp.full((x.shape[0],), tp, jnp.int32)
+        return sch.dpm_solver2_step(sched, x, eps_only, tb, tpb), None
+
+    x, _ = jax.lax.scan(body, x, (ts, ts_prev))
+    return x
+
+
+PHASE_FNS = {"ddpm": ddpm_phase, "ddim": ddim_phase, "dpm2": dpm2_phase}
+
+
+def sample_phased(phases: Sequence[Tuple[EpsFn, np.ndarray]],
+                  sched: sch.DiffusionSchedule, x_T: jax.Array,
+                  key: jax.Array, solver: str = "ddpm",
+                  clip_x0: float = 0.0) -> jax.Array:
+    """Chain phases: each (eps_fn, its slice of the timestep ladder)."""
+    phase_fn = PHASE_FNS[solver]
+    x = x_T
+    active = [(f, ts) for f, ts in phases if len(ts)]
+    for i, (eps_fn, ts) in enumerate(active):
+        k = jax.random.fold_in(key, i)
+        # boundary: hand the next phase's first timestep to the solver
+        t_final = int(active[i + 1][1][0]) if i + 1 < len(active) else -1
+        if solver == "ddpm":
+            x = phase_fn(eps_fn, sched, x, ts, k, clip_x0)
+        elif solver == "ddim":
+            x = phase_fn(eps_fn, sched, x, ts, k, t_final=t_final)
+        else:
+            x = phase_fn(eps_fn, sched, x, ts, k, t_final=t_final)
+    return x

@@ -1,0 +1,155 @@
+"""DDPM noise schedule and per-step transition math.
+
+Faithful to the DiT / ADM conventions (linear betas, ε-prediction, optional
+learned variance as an interpolation between β and β̃).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DiffusionSchedule:
+    betas: np.ndarray                    # [T]
+
+    @property
+    def num_steps(self) -> int:
+        return len(self.betas)
+
+    @functools.cached_property
+    def _derived(self):
+        betas = self.betas.astype(np.float64)
+        alphas = 1.0 - betas
+        acp = np.cumprod(alphas)
+        acp_prev = np.concatenate([[1.0], acp[:-1]])
+        post_var = betas * (1.0 - acp_prev) / (1.0 - acp)
+        return dict(
+            alphas=alphas, acp=acp, acp_prev=acp_prev,
+            sqrt_acp=np.sqrt(acp), sqrt_1macp=np.sqrt(1.0 - acp),
+            post_var=post_var,
+            post_log_var=np.log(np.maximum(post_var, 1e-20)),
+            post_c0=betas * np.sqrt(acp_prev) / (1.0 - acp),
+            post_ct=(1.0 - acp_prev) * np.sqrt(alphas) / (1.0 - acp),
+        )
+
+
+def linear_schedule(T: int = 1000, beta_start: float = 1e-4,
+                    beta_end: float = 0.02) -> DiffusionSchedule:
+    return DiffusionSchedule(np.linspace(beta_start, beta_end, T,
+                                         dtype=np.float64))
+
+
+def cosine_schedule(T: int = 1000, s: float = 0.008) -> DiffusionSchedule:
+    t = np.arange(T + 1) / T
+    f = np.cos((t + s) / (1 + s) * np.pi / 2) ** 2
+    acp = f / f[0]
+    betas = np.clip(1 - acp[1:] / acp[:-1], 0, 0.999)
+    return DiffusionSchedule(betas)
+
+
+def respaced_timesteps(T: int, num_steps: int) -> np.ndarray:
+    """Uniformly spaced subset of [0, T), descending (sampling order)."""
+    ts = np.linspace(0, T - 1, num_steps).round().astype(np.int64)
+    return ts[::-1].copy()
+
+
+# ---------------------------------------------------------------------------
+# Array-side helpers (gather schedule constants by traced t)
+
+
+def _g(arr: np.ndarray, t: jax.Array, ndim: int) -> jax.Array:
+    v = jnp.take(jnp.asarray(arr, jnp.float32), t)
+    return v.reshape(v.shape + (1,) * (ndim - v.ndim))
+
+
+def q_sample(sched: DiffusionSchedule, x0: jax.Array, t: jax.Array,
+             noise: jax.Array) -> jax.Array:
+    d = sched._derived
+    return (_g(d["sqrt_acp"], t, x0.ndim) * x0
+            + _g(d["sqrt_1macp"], t, x0.ndim) * noise)
+
+
+def predict_x0_from_eps(sched: DiffusionSchedule, x_t: jax.Array, t: jax.Array,
+                        eps: jax.Array) -> jax.Array:
+    d = sched._derived
+    return ((x_t - _g(d["sqrt_1macp"], t, x_t.ndim) * eps)
+            / _g(d["sqrt_acp"], t, x_t.ndim))
+
+
+def posterior_mean(sched: DiffusionSchedule, x0: jax.Array, x_t: jax.Array,
+                   t: jax.Array) -> jax.Array:
+    d = sched._derived
+    return (_g(d["post_c0"], t, x_t.ndim) * x0
+            + _g(d["post_ct"], t, x_t.ndim) * x_t)
+
+
+def ddpm_step(sched: DiffusionSchedule, x_t: jax.Array, eps: jax.Array,
+              t: jax.Array, key: jax.Array,
+              logvar_frac: Optional[jax.Array] = None,
+              clip_x0: float = 0.0) -> jax.Array:
+    """One ancestral DDPM step x_t → x_{t-1}.
+
+    ``logvar_frac`` ∈ [0,1] (model output) interpolates log σ² between β̃
+    (posterior) and β, as in ADM/DiT learned-variance models.
+    """
+    d = sched._derived
+    x0 = predict_x0_from_eps(sched, x_t, t, eps)
+    if clip_x0 > 0:
+        x0 = jnp.clip(x0, -clip_x0, clip_x0)
+    mean = posterior_mean(sched, x0, x_t, t)
+    if logvar_frac is not None:
+        frac = (logvar_frac + 1.0) / 2.0          # model outputs in [-1,1]
+        log_beta = jnp.log(jnp.maximum(_g(sched.betas, t, x_t.ndim), 1e-20))
+        logvar = frac * log_beta + (1 - frac) * _g(d["post_log_var"], t, x_t.ndim)
+    else:
+        logvar = _g(d["post_log_var"], t, x_t.ndim)
+    noise = jax.random.normal(key, x_t.shape, x_t.dtype)
+    nonzero = (t > 0).astype(x_t.dtype).reshape((-1,) + (1,) * (x_t.ndim - 1))
+    return mean + nonzero * jnp.exp(0.5 * logvar) * noise
+
+
+def ddim_step(sched: DiffusionSchedule, x_t: jax.Array, eps: jax.Array,
+              t: jax.Array, t_prev: jax.Array, eta: float = 0.0,
+              key: Optional[jax.Array] = None) -> jax.Array:
+    d = sched._derived
+    acp_t = _g(d["acp"], t, x_t.ndim)
+    acp_prev = jnp.where(t_prev.reshape(acp_t.shape) >= 0,
+                         _g(d["acp"], jnp.maximum(t_prev, 0), x_t.ndim), 1.0)
+    x0 = predict_x0_from_eps(sched, x_t, t, eps)
+    sigma = eta * jnp.sqrt((1 - acp_prev) / (1 - acp_t)
+                           * (1 - acp_t / acp_prev))
+    dir_xt = jnp.sqrt(jnp.maximum(1 - acp_prev - sigma ** 2, 0.0)) * eps
+    x_prev = jnp.sqrt(acp_prev) * x0 + dir_xt
+    if eta > 0 and key is not None:
+        x_prev = x_prev + sigma * jax.random.normal(key, x_t.shape, x_t.dtype)
+    return x_prev
+
+
+def dpm_solver2_step(sched: DiffusionSchedule, x_t: jax.Array,
+                     eps_fn, t: jax.Array, t_prev: jax.Array) -> jax.Array:
+    """DPM-Solver-2 (midpoint) step using λ = log(√acp/√(1−acp))."""
+    d = sched._derived
+    lam = np.log(d["sqrt_acp"] / np.maximum(d["sqrt_1macp"], 1e-20))
+
+    def at(arr, tt):
+        return _g(arr, jnp.maximum(tt, 0), x_t.ndim)
+
+    lam_t, lam_s = at(lam, t), at(lam, t_prev)
+    h = lam_s - lam_t
+    # midpoint in λ-space → nearest integer timestep
+    lam_np = lam
+    t_mid = jnp.argmin(jnp.abs(jnp.asarray(lam_np, jnp.float32)[None, :]
+                               - (lam_t + h / 2).reshape(-1, 1)), axis=-1)
+    eps_t = eps_fn(x_t, t)
+    x_mid = (at(d["sqrt_acp"], t_mid) / at(d["sqrt_acp"], t)) * x_t \
+        - at(d["sqrt_1macp"], t_mid) * jnp.expm1(h / 2) * eps_t
+    eps_mid = eps_fn(x_mid, t_mid)
+    x_prev = (at(d["sqrt_acp"], t_prev) / at(d["sqrt_acp"], t)) * x_t \
+        - at(d["sqrt_1macp"], t_prev) * jnp.expm1(h) * eps_mid
+    return x_prev

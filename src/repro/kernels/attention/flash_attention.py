@@ -1,0 +1,120 @@
+"""Pallas TPU flash attention (blocked online softmax).
+
+TPU-native layout: grid ``(batch·q_heads, num_q_blocks, num_kv_blocks)``, the
+kv-block axis iterated sequentially ("arbitrary" semantics) with the running
+max / normalizer / accumulator held in VMEM scratch. Block sizes default to
+128 (MXU-aligned). Supports GQA (kv-head index map), causal masks, sliding
+windows, and Gemma-style logit soft-capping — the same semantics as the XLA
+reference in ``repro.models.attention`` (= ``ref.py``'s oracle).
+
+Validated with ``interpret=True`` on CPU; compiled path targets TPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  causal: bool, softcap: float, window: int,
+                  block_q: int, block_k: int, sm_scale: float, num_kv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                                   # [bq, hd]
+    k = k_ref[0]                                   # [bk, hd]
+    v = v_ref[0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+    if softcap > 0.0:
+        s = jnp.tanh(s / softcap) * softcap
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = jnp.ones(s.shape, jnp.bool_)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos < window) & (k_pos - q_pos < window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+    m_scr[...] = m_cur
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ki == num_kv - 1)
+    def _done():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "softcap", "window", "block_q", "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, softcap: float = 0.0,
+                    window: int = 0, segment_ids=None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """q: [B,S,H,hd]; k,v: [B,Sk,K,hd] (GQA) → [B,S,H,hd].
+
+    ``interpret=True`` runs the kernel body on CPU (this container);
+    pass False on real TPU hardware.
+    """
+    assert segment_ids is None, "packing masks: use the XLA path"
+    B, S, H, hd = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = H // K
+    bq = min(block_q, S)
+    bk = min(block_k, Sk)
+    nq = -(-S // bq)
+    nk = -(-Sk // bk)
+    assert S % bq == 0 and Sk % bk == 0, "pad sequences to block multiples"
+
+    qt = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kt = k.transpose(0, 2, 1, 3).reshape(B * K, Sk, hd)
+    vt = v.transpose(0, 2, 1, 3).reshape(B * K, Sk, hd)
+
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, softcap=softcap, window=window,
+        block_q=bq, block_k=bk, sm_scale=1.0 / np.sqrt(hd), num_kv=nk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j, G=G: (b // G, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j, G=G: (b // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

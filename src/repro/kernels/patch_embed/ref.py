@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the patch embed/de-embed kernels."""
+import jax
+import jax.numpy as jnp
+
+
+def patch_embed_ref(patches: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    out = jnp.einsum("nk,kd->nd", patches.astype(jnp.float32),
+                     w.astype(jnp.float32)) + b.astype(jnp.float32)
+    return out.astype(patches.dtype)
+
+
+def patch_deembed_ref(tokens: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    out = jnp.einsum("nd,dk->nk", tokens.astype(jnp.float32),
+                     w.astype(jnp.float32)) + b.astype(jnp.float32)
+    return out.astype(tokens.dtype)

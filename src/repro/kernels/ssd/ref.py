@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the SSD kernel: the chunked algorithm AND the naive
+O(S·N·P) sequential recurrence (ground truth)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd_chunked as ssd_chunked_ref  # noqa: F401
+
+
+def ssd_recurrence_ref(x: jax.Array, dt: jax.Array, A: jax.Array,
+                       Bm: jax.Array, Cm: jax.Array,
+                       h0: Optional[jax.Array] = None
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Naive step-by-step recurrence — the mathematical definition."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    h = h0 if h0 is not None else jnp.zeros((B, H, P, N), jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp
+        a = jnp.exp(dt_t * A[None, :])                        # [B,H]
+        h = h * a[:, :, None, None] \
+            + (dt_t[:, :, None] * x_t.astype(jnp.float32))[..., None] \
+            * B_t[:, None, None, :].astype(jnp.float32)
+        y = jnp.einsum("bhpn,bn->bhp", h, C_t.astype(jnp.float32))
+        return h, y
+
+    h, ys = jax.lax.scan(step, h, (x.transpose(1, 0, 2, 3),
+                                   dt.transpose(1, 0, 2),
+                                   Bm.transpose(1, 0, 2),
+                                   Cm.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), h

@@ -1,0 +1,321 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("REPRO_XLA_FLAGS",
+                                         "--xla_force_host_platform_device_count=512")
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count on first initialization).
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production mesh, print memory/cost analysis, extract roofline terms.
+
+Usage:
+  python -m repro.launch.dryrun --arch mamba2-130m --shape train_4k
+  python -m repro.launch.dryrun --sweep                 # all cells, 16x16
+  python -m repro.launch.dryrun --sweep --multi-pod     # all cells, 2x16x16
+
+Single-cell runs write JSON to results/dryrun/<mesh>/<arch>__<shape>.json.
+The sweep shells out one subprocess per cell (compile-memory isolation).
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import (ASSIGNED_ARCHS, DIT_ARCHS, LM_SHAPES, get_config,
+                           cell_is_skipped, get_shape)
+from repro.configs.base import TrainConfig
+from repro.launch import roofline as rl
+from repro.launch import specs as sp
+from repro.launch import steps as st
+from repro.launch.mesh import make_production_mesh
+from repro.models import dit as dit_mod
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def input_specs(arch: str, shape_name: str, mesh) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    cfg = get_config(arch)
+    if cfg.family == "dit":
+        return sp.dit_inputs(cfg, shape_name, mesh)
+    shape = get_shape(shape_name)
+    if shape.kind == "train":
+        return sp.train_inputs(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return sp.prefill_inputs(cfg, shape, mesh)
+    return sp.decode_inputs(cfg, shape, mesh)
+
+
+def build_cell(arch: str, shape_name: str, mesh, profile: str = "auto",
+               cfg=None, force_single_microbatch: bool = False,
+               n_microbatches=None):
+    """Returns (jitted_fn, args tuple of ShapeDtypeStructs)."""
+    cfg = cfg if cfg is not None else get_config(arch)
+    if "_sp" in profile and not cfg.sequence_parallel:
+        cfg = dataclasses.replace(cfg, sequence_parallel=True)
+    if "_kvq" in profile and cfg.kv_cache_dtype != "int8":
+        cfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    params_abs, _ = sp.abstract_params(cfg, mesh, profile)
+
+    if cfg.family == "dit":
+        inputs = sp.dit_inputs(cfg, shape_name, mesh)
+        if shape_name == "train_base":
+            tc = TrainConfig()
+            fn = st.make_dit_train_step(cfg, tc)
+            opt_abs = sp.abstract_opt_state(params_abs, mesh, jnp.float32)
+            batch = {k: inputs[k] for k in ("x0", "cond")}
+            return (jax.jit(fn, donate_argnums=(0, 1)),
+                    (params_abs, opt_abs, batch, inputs["key"]))
+        mode = 0 if shape_name == "serve_powerful" else \
+            len(cfg.dit.flex_patch_sizes)
+        mode_uncond = len(cfg.dit.flex_patch_sizes) if shape_name == "serve_powerful" else mode
+        fn = st.make_dit_serve_step(cfg, mode_cond=mode, mode_uncond=mode_uncond)
+        return (jax.jit(fn),
+                (params_abs, inputs["x_t"], inputs["t"], inputs["cond"],
+                 inputs["null_cond"]))
+
+    shape = get_shape(shape_name)
+    if shape.kind == "train":
+        big = cfg.num_params() > 5e10
+        tc = TrainConfig(opt_dtype="bfloat16" if big else "float32")
+        n_mb = (n_microbatches if n_microbatches is not None else
+                1 if force_single_microbatch else
+                sp.choose_microbatches(cfg, shape, mesh))
+        fn = st.make_train_step(cfg, tc, n_microbatches=n_mb)
+        opt_abs = sp.abstract_opt_state(
+            params_abs, mesh,
+            jnp.bfloat16 if big else jnp.float32)
+        batch = sp.train_inputs(cfg, shape, mesh)
+        return (jax.jit(fn, donate_argnums=(0, 1)),
+                (params_abs, opt_abs, batch))
+    if shape.kind == "prefill":
+        fn = st.make_prefill_step(cfg)
+        inputs = sp.prefill_inputs(cfg, shape, mesh)
+        return jax.jit(fn), (params_abs, inputs)
+    fn = st.make_decode_step(cfg)
+    inputs = sp.decode_inputs(cfg, shape, mesh)
+    return (jax.jit(fn, donate_argnums=(1,)),
+            (params_abs, inputs["cache"], inputs["token"], inputs["pos"]))
+
+
+def _tokens_for_cell(cfg, shape_name: str) -> float:
+    if cfg.family == "dit":
+        B = sp.DIT_SHAPES[cfg.name][shape_name]
+        n_tok = dit_mod.tokens_for_mode(
+            cfg, 0 if "powerful" in shape_name or "train" in shape_name
+            else len(cfg.dit.flex_patch_sizes))
+        return B * n_tok
+    shape = get_shape(shape_name)
+    if shape.kind == "decode":
+        return shape.global_batch          # one new token per sequence
+    return shape.global_batch * shape.seq_len
+
+
+import dataclasses
+
+
+def _unit_cfg(cfg, n_units: int):
+    """Reduced-depth, fully-unrolled variant for the cost calibration
+    (XLA cost_analysis counts while-loop bodies once, so scanned costs are
+    undercounted by ~L×; we compile unrolled 1- and 2-unit variants and
+    extrapolate linearly to the real depth)."""
+    kw = dict(unroll=True, remat="none")
+    if cfg.family == "vlm":
+        kw["num_layers"] = n_units * (cfg.cross_attn_every or 5)
+    elif cfg.family == "audio":
+        kw["num_layers"] = n_units
+        kw["encoder_layers"] = n_units
+    else:
+        kw["num_layers"] = n_units
+    return dataclasses.replace(cfg, **kw)
+
+
+def _real_units(cfg) -> int:
+    if cfg.family == "vlm":
+        return cfg.num_layers // (cfg.cross_attn_every or 5)
+    return cfg.num_layers
+
+
+def _cost_of_variant(arch, shape_name, mesh, profile, cfg_variant,
+                     n_microbatches=None):
+    # REAL model's microbatch count (the reduced-depth variant would compute
+    # n_mb=1); the accumulation loop is unrolled under cfg.unroll so
+    # per-microbatch collectives are counted honestly
+    jitted, args = build_cell(arch, shape_name, mesh, profile,
+                              cfg=cfg_variant,
+                              n_microbatches=n_microbatches)
+    compiled = jitted.lower(*args).compile()
+    cost = compiled.cost_analysis()
+    coll = rl.parse_collectives(compiled.as_text())
+    return cost, coll
+
+
+def _extrapolate(c1, c2, units: int):
+    """c(u) = fixed + u·per_unit → value at ``units``."""
+    out = {}
+    for k in set(c1) | set(c2):
+        v1 = float(c1.get(k, 0.0) or 0.0)
+        v2 = float(c2.get(k, 0.0) or 0.0)
+        per = v2 - v1
+        out[k] = max(v1 + (units - 1) * per, 0.0)
+    return out
+
+
+def _extrapolate_coll(coll1, coll2, units: int):
+    out = {}
+    for kind in coll1:
+        out[kind] = _extrapolate(coll1[kind], coll2[kind], units)
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             profile: str = "auto", out_path=None) -> dict:
+    cfg = get_config(arch)
+    from repro.runtime.sharding import resolve_profile
+    profile = resolve_profile(cfg, profile)
+    skip = cell_is_skipped(arch, shape_name) if cfg.family != "dit" else None
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "profile": profile, "status": "skipped", "skip_reason": skip}
+    if skip:
+        if out_path:
+            out_path.parent.mkdir(parents=True, exist_ok=True)
+            out_path.write_text(json.dumps(rec, indent=1))
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(mesh.devices.shape))
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        # 1) REAL config (scan-over-layers): the memory-fit proof.
+        jitted, args = build_cell(arch, shape_name, mesh, profile)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        print(mem)                                # proves it fits
+        cost_scanned = compiled.cost_analysis()
+        print({k: cost_scanned.get(k) for k in ("flops", "bytes accessed")})
+        del compiled, lowered
+
+        # 2) Unrolled 1-unit / 2-unit variants → per-layer cost calibration.
+        units = _real_units(cfg)
+        n_mb = None
+        if (cfg.family != "dit" and get_shape(shape_name).kind == "train"):
+            cfg_mb = (dataclasses.replace(cfg, sequence_parallel=True)
+                      if profile.endswith("_sp") else cfg)
+            n_mb = sp.choose_microbatches(cfg_mb, get_shape(shape_name), mesh)
+        c1, coll1 = _cost_of_variant(arch, shape_name, mesh, profile,
+                                     _unit_cfg(cfg, 1), n_mb)
+        c2, coll2 = _cost_of_variant(arch, shape_name, mesh, profile,
+                                     _unit_cfg(cfg, 2), n_mb)
+    cost = _extrapolate(
+        {k: c1.get(k) for k in ("flops", "bytes accessed", "transcendentals")},
+        {k: c2.get(k) for k in ("flops", "bytes accessed", "transcendentals")},
+        units)
+    coll = _extrapolate_coll(coll1, coll2, units)
+    shape_kind = ("train" if ("train" in shape_name) else
+                  get_shape(shape_name).kind if cfg.family != "dit" else "serve")
+    mf = rl.model_flops(cfg, "train" if shape_kind == "train" else "serve",
+                        _tokens_for_cell(cfg, shape_name))
+    terms = rl.roofline_terms(cost, coll, n_dev, mf)
+
+    mem_rec = {}
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        mem_rec[attr] = getattr(mem, attr, None)
+    args_bytes = sum(
+        int(np.prod(x.shape)) * x.dtype.itemsize
+        for x in jax.tree.leaves(args)) / n_dev
+
+    rec.update({
+        "status": "ok", "n_devices": n_dev,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": mem_rec,
+        "sharded_args_bytes_per_device": args_bytes,
+        "cost_analysis": {k: float(v) for k, v in cost.items()},
+        "cost_analysis_scanned_raw": {
+            k: float(cost_scanned.get(k) or 0.0)
+            for k in ("flops", "bytes accessed")},
+        "collectives": coll,
+        "roofline": terms,
+        "params": cfg.num_params(),
+        "active_params": cfg.active_params(),
+    })
+    if out_path:
+        out_path.parent.mkdir(parents=True, exist_ok=True)
+        out_path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def all_cells():
+    cells = []
+    for arch in ASSIGNED_ARCHS:
+        for shape in LM_SHAPES:
+            cells.append((arch, shape.name))
+    for arch in DIT_ARCHS:
+        for shape in ("train_base", "serve_powerful", "serve_weak"):
+            cells.append((arch, shape))
+    return cells
+
+
+def sweep(multi_pod: bool, profile: str = "auto", only_missing: bool = True):
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    outdir = RESULTS / mesh_name
+    outdir.mkdir(parents=True, exist_ok=True)
+    for arch, shape in all_cells():
+        out = outdir / f"{arch}__{shape}.json"
+        if only_missing and out.exists():
+            print(f"[skip-existing] {arch} {shape}")
+            continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--profile", profile,
+               "--out", str(out)]
+        if multi_pod:
+            cmd.append("--multi-pod")
+        print(f"[run] {arch} {shape} ({mesh_name})", flush=True)
+        t0 = time.time()
+        r = subprocess.run(cmd, capture_output=True, text=True)
+        dt = time.time() - t0
+        if r.returncode != 0:
+            out.write_text(json.dumps({
+                "arch": arch, "shape": shape, "mesh": mesh_name,
+                "status": "error",
+                "error": r.stderr[-4000:] if r.stderr else r.stdout[-2000:],
+            }, indent=1))
+            print(f"[FAIL {dt:.0f}s] {arch} {shape}\n{r.stderr[-1500:]}",
+                  flush=True)
+        else:
+            print(f"[ok {dt:.0f}s] {arch} {shape}", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--profile", default="auto")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--sweep", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    if args.sweep:
+        sweep(args.multi_pod, args.profile, only_missing=not args.force)
+        return
+    out = Path(args.out) if args.out else None
+    rec = run_cell(args.arch, args.shape, args.multi_pod, args.profile, out)
+    print(json.dumps({k: v for k, v in rec.items()
+                      if k not in ("collectives",)}, indent=1, default=str))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,184 @@
+"""Abstract input specs (ShapeDtypeStruct + NamedSharding) for every
+(architecture × shape) dry-run cell. No device allocation happens here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ModelConfig, ShapeConfig, TrainConfig,
+                                cell_is_skipped, get_shape)
+from repro.models import dit as dit_mod
+from repro.models import lm
+from repro.models.common import dtype_of, spec_tree
+from repro.optim import adamw
+from repro.runtime import sharding as shd
+
+Params = Any
+
+# Per-device activation budget used to pick gradient-accumulation depth.
+ACT_BUDGET_BYTES = 3.0e9
+
+
+def _sds(mesh: Mesh, shape, dtype, spec: P):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def choose_microbatches(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> int:
+    n_dp = int(np.prod([s for a, s in zip(mesh.axis_names, mesh.devices.shape)
+                        if a in ("pod", "data")]))
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    per_dev = max(1, shape.global_batch // n_dp)
+    act_per_sample = cfg.num_layers * shape.seq_len * cfg.d_model * 2
+    if cfg.sequence_parallel:
+        act_per_sample //= sizes.get("model", 1)
+    n = int(np.ceil(per_dev * act_per_sample / ACT_BUDGET_BYTES))
+    # microbatch count must divide per-device batch
+    while per_dev % n != 0 and n < per_dev:
+        n += 1
+    return min(n, per_dev)
+
+
+def abstract_params(cfg: ModelConfig, mesh: Mesh, profile: str = "fsdp2d"
+                    ) -> Tuple[Params, Params]:
+    """(ShapeDtypeStruct tree with shardings, PartitionSpec tree)."""
+    rules = shd.rules_for(cfg, mesh, profile)
+    sizes = shd.axis_sizes(mesh)
+    if cfg.family == "dit":
+        schema = dit_mod.dit_schema(cfg)
+    else:
+        schema = lm.lm_schema(cfg)
+    specs = spec_tree(schema, rules, sizes)
+    from repro.models.common import abstract_tree
+    abstract = abstract_tree(schema, dtype_of(cfg.param_dtype))
+    shaped = jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype,
+                                          sharding=NamedSharding(mesh, s)),
+        abstract, specs)
+    return shaped, specs
+
+
+def abstract_opt_state(params_abs: Params, mesh: Mesh,
+                       opt_dtype: jnp.dtype) -> Params:
+    def mom(p):
+        return jax.ShapeDtypeStruct(p.shape, opt_dtype, sharding=p.sharding)
+    return {"m": jax.tree.map(mom, params_abs),
+            "v": jax.tree.map(mom, params_abs),
+            "step": jax.ShapeDtypeStruct(
+                (), jnp.int32, sharding=NamedSharding(mesh, P()))}
+
+
+def _extra_inputs(cfg: ModelConfig, B: int, mesh: Mesh, bspec: P
+                  ) -> Dict[str, jax.ShapeDtypeStruct]:
+    dt = dtype_of(cfg.compute_dtype)
+    out = {}
+    if cfg.family == "vlm":
+        out["vision"] = _sds(mesh, (B, cfg.vision_tokens, cfg.d_model), dt,
+                             P(bspec[0] if len(bspec) else None, None, None))
+    if cfg.family == "audio":
+        out["frames"] = _sds(mesh, (B, cfg.audio_frames, cfg.d_model), dt,
+                             P(bspec[0] if len(bspec) else None, None, None))
+    return out
+
+
+def train_inputs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh
+                 ) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    bspec = shd.batch_spec(B, mesh)
+    batch = {
+        "tokens": _sds(mesh, (B, S), jnp.int32, P(*bspec, None)),
+        "targets": _sds(mesh, (B, S), jnp.int32, P(*bspec, None)),
+    }
+    batch.update(_extra_inputs(cfg, B, mesh, bspec))
+    return batch
+
+
+def prefill_inputs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh
+                   ) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    bspec = shd.batch_spec(B, mesh)
+    inputs = {"tokens": _sds(mesh, (B, S), jnp.int32, P(*bspec, None))}
+    inputs.update(_extra_inputs(cfg, B, mesh, bspec))
+    return inputs
+
+
+def cache_specs(cfg: ModelConfig, B: int, S: int, mesh: Mesh) -> Params:
+    """Sharded ShapeDtypeStructs for the decode cache (context-parallel:
+    sequence dim over the model axis; see DESIGN.md §5)."""
+    b_ax, s_ax = shd.seq_axes_for_cache(B, mesh)
+    abstract = lm.init_cache(cfg, B, S, abstract=True)
+    out = {}
+    for k, v in abstract.items():
+        nd = len(v.shape)
+        if k in ("k", "v"):
+            if nd == 6:      # vlm self cache [G, k-1, B, S, K, hd]
+                spec = P(None, None, b_ax, s_ax, None, None)
+            else:            # [L, B, S, K, hd]
+                spec = P(None, b_ax, s_ax, None, None)
+        elif k in ("k_scale", "v_scale"):
+            if nd == 5:      # vlm [G, k-1, B, S, K]
+                spec = P(None, None, b_ax, s_ax, None)
+            else:            # [L, B, S, K]
+                spec = P(None, b_ax, s_ax, None)
+        elif k in ("xk", "xv"):   # [G, B, Tv, K, hd]
+            spec = P(None, b_ax, None, None, None)
+        elif k == "enc":          # [B, F, d]
+            spec = P(b_ax, None, None)
+        elif k == "h":            # [L, B, H, P, N]
+            spec = P(None, b_ax, None, None, None)
+        elif k == "conv":         # [L, B, W-1, C]
+            spec = P(None, b_ax, None, None)
+        else:
+            spec = P(*([None] * nd))
+        out[k] = jax.ShapeDtypeStruct(v.shape, v.dtype,
+                                      sharding=NamedSharding(mesh, spec))
+    return out
+
+
+def decode_inputs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh
+                  ) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    bspec = shd.batch_spec(B, mesh)
+    return {
+        "cache": cache_specs(cfg, B, S, mesh),
+        "token": _sds(mesh, (B, 1), jnp.int32, P(*bspec, None)),
+        "pos": _sds(mesh, (B,), jnp.int32, bspec),
+    }
+
+
+# ---------------------------------------------------------------------------
+# DiT cells
+
+
+DIT_SHAPES = {
+    "dit-xl-2": {"train_base": 256, "serve_powerful": 32, "serve_weak": 32},
+    "t2i-transformer": {"train_base": 64, "serve_powerful": 32, "serve_weak": 32},
+    "video-dit": {"train_base": 8, "serve_powerful": 4, "serve_weak": 4},
+}
+
+
+def dit_inputs(cfg: ModelConfig, shape_name: str, mesh: Mesh
+               ) -> Dict[str, Any]:
+    B = DIT_SHAPES[cfg.name][shape_name]
+    bspec = shd.batch_spec(B, mesh)
+    dt = dtype_of(cfg.compute_dtype)
+    F, H, W, C = cfg.dit.latent_shape
+    x = _sds(mesh, (B, F, H, W, C), dt, P(*bspec, None, None, None, None))
+    if cfg.dit.conditioning == "class":
+        cond = _sds(mesh, (B,), jnp.int32, bspec)
+        null = _sds(mesh, (B,), jnp.int32, bspec)
+    else:
+        dc = cfg.dit.text_dim or cfg.d_model
+        cond = _sds(mesh, (B, cfg.dit.text_len, dc), dt, P(*bspec, None, None))
+        null = _sds(mesh, (B, cfg.dit.text_len, dc), dt, P(*bspec, None, None))
+    if shape_name == "train_base":
+        return {"x0": x, "cond": cond,
+                "key": jax.ShapeDtypeStruct((2,), jnp.uint32)}
+    t = _sds(mesh, (B,), jnp.float32, bspec)
+    return {"x_t": x, "t": t, "cond": cond, "null_cond": null}

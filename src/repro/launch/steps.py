@@ -1,0 +1,140 @@
+"""Builders for the jitted step functions (train / prefill / decode / DiT).
+
+These are the functions the dry-run lowers and the launchers execute.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.diffusion import schedule as sch
+from repro.models import dit as dit_mod
+from repro.models import lm
+from repro.models.common import dtype_of
+from repro.optim import adamw
+
+Params = Any
+
+
+def _tree_zeros_like_f32(tree: Params) -> Params:
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig,
+                    n_microbatches: int = 1,
+                    trainable: Optional[Params] = None,
+                    backend: str = "xla") -> Callable:
+    """(params, opt_state, batch) → (params, opt_state, metrics).
+
+    Gradient accumulation: batch leaves [B, ...] are split into
+    ``n_microbatches`` chunks scanned sequentially (bounds activation
+    memory; see DESIGN.md §5)."""
+
+    def loss_fn(params, batch):
+        return lm.lm_loss(params, batch, cfg, backend=backend)
+
+    def train_step(params, opt_state, batch):
+        if n_microbatches <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def split(x):
+                return x.reshape((n_microbatches, x.shape[0] // n_microbatches)
+                                 + x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+
+            def body(acc, mb):
+                g_acc, l_acc = acc
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32) / n_microbatches,
+                    g_acc, g)
+                return (g_acc, l_acc + l / n_microbatches), m
+
+            from repro.models.common import scan_or_unroll
+            (grads, loss), ms = scan_or_unroll(
+                body, (_tree_zeros_like_f32(params), jnp.zeros((), jnp.float32)),
+                mbs, cfg.unroll)
+            metrics = jax.tree.map(lambda x: x[-1], ms)
+            grads = jax.tree.map(lambda g, p: g.astype(p.dtype), grads, params)
+        params, opt_state, om = adamw.adamw_update(params, grads, opt_state,
+                                                   tc, trainable)
+        return params, opt_state, {**metrics, **om}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, backend: str = "xla") -> Callable:
+    def prefill_step(params, inputs):
+        logits, cache = lm.prefill(params, inputs["tokens"], cfg,
+                                   extra=inputs, backend=backend)
+        return logits, cache
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    def decode_step(params, cache, token, pos):
+        return lm.decode_step(params, cache, token, pos, cfg)
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# DiT steps
+
+
+def make_dit_train_step(cfg: ModelConfig, tc: TrainConfig,
+                        sched: Optional[sch.DiffusionSchedule] = None,
+                        mode: int = 0,
+                        trainable: Optional[Params] = None) -> Callable:
+    """Denoising-objective train step at a fixed patch mode. The FlexiDiT
+    fine-tuning driver alternates modes across steps (different compiled
+    executables), matching §4.1: 'learn to denoise using one of the
+    available patch sizes'."""
+    sched = sched or sch.linear_schedule(1000)
+
+    def loss_fn(params, batch, key):
+        x0 = batch["x0"].astype(dtype_of(cfg.compute_dtype))
+        k_t, k_n = jax.random.split(key)
+        B = x0.shape[0]
+        t = jax.random.randint(k_t, (B,), 0, sched.num_steps)
+        noise = jax.random.normal(k_n, x0.shape, x0.dtype)
+        x_t = sch.q_sample(sched, x0, t, noise)
+        out = dit_mod.dit_forward(params, x_t, t, batch.get("cond"), cfg,
+                                  mode=mode)
+        eps = dit_mod.eps_prediction(out, cfg)
+        loss = jnp.mean(jnp.square(eps.astype(jnp.float32)
+                                   - noise.astype(jnp.float32)))
+        return loss, {"loss": loss}
+
+    def train_step(params, opt_state, batch, key):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch, key)
+        params, opt_state, om = adamw.adamw_update(params, grads, opt_state,
+                                                   tc, trainable)
+        return params, opt_state, {**metrics, **om}
+
+    return train_step
+
+
+def make_dit_serve_step(cfg: ModelConfig, mode_cond: int = 0,
+                        mode_uncond: Optional[int] = None,
+                        cfg_scale: float = 4.0) -> Callable:
+    """One guided NFE (the unit of FlexiDiT sampling): conditional at
+    ``mode_cond``, guidance at ``mode_uncond`` (paper §3.4)."""
+    mode_uncond = mode_cond if mode_uncond is None else mode_uncond
+
+    def serve_step(params, x_t, t, cond, null_cond):
+        from repro.core.guidance import GuidanceConfig, make_eps_fn
+        kind = "uncond" if mode_cond == mode_uncond else "weak_cond"
+        g = GuidanceConfig(scale=cfg_scale, mode_cond=mode_cond,
+                           mode_uncond=mode_uncond, kind=kind)
+        eps_fn = make_eps_fn(params, cfg, cond, null_cond, g)
+        eps, logvar = eps_fn(x_t, t)
+        return eps if logvar is None else (eps, logvar)
+
+    return serve_step

@@ -1,0 +1,135 @@
+"""Training launcher.
+
+Examples (CPU, reduced configs):
+  python -m repro.launch.train --arch deepseek-7b --smoke --steps 20
+  python -m repro.launch.train --arch dit-xl-2 --smoke --steps 50
+  python -m repro.launch.train --arch dit-xl-2 --smoke --steps 50 --flexi \
+      --recipe shared        # FlexiDiT fine-tune, alternating patch modes
+
+On a real cluster, drop ``--smoke`` and point JAX at the TPU topology; the
+mesh/profile/step plumbing is identical to the dry-run's.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs import get_config
+from repro.configs.base import TrainConfig
+from repro.data import pipeline as dp
+from repro.launch import steps as st
+from repro.models import dit as dit_mod
+from repro.models import lm
+from repro.optim import adamw, ema
+from repro.runtime.fault_tolerance import HeartbeatMonitor
+from repro.runtime.straggler import StragglerDetector
+
+
+def build_lm_training(cfg, tc, batch, seq):
+    params = lm.init_params(cfg, jax.random.PRNGKey(tc.seed))
+    opt = adamw.init_opt_state(params)
+    step_fn = jax.jit(st.make_train_step(cfg, tc))
+    loader = dp.HostShardedLoader(
+        dp.make_lm_batch_fn(cfg.vocab_size, seq, batch), seed=tc.seed)
+    return params, opt, step_fn, loader
+
+
+def build_dit_training(cfg, tc, batch, mode=0, trainable=None):
+    params = dit_mod.init_dit(cfg, jax.random.PRNGKey(tc.seed))
+    opt = adamw.init_opt_state(params)
+    step_fn = jax.jit(st.make_dit_train_step(cfg, tc, mode=mode,
+                                             trainable=trainable))
+    loader = dp.HostShardedLoader(
+        dp.make_dit_batch_fn(cfg.dit.latent_shape, cfg.dit.num_classes,
+                             batch), seed=tc.seed)
+    return params, opt, step_fn, loader
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="dit-xl-2")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--flexi", action="store_true",
+                    help="FlexiDiT fine-tune: alternate patch modes")
+    ap.add_argument("--recipe", default="shared", choices=["shared", "lora"])
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    tc = TrainConfig(learning_rate=args.lr, warmup_steps=10,
+                     total_steps=args.steps)
+    ckpt = Checkpointer(Path(args.ckpt_dir) / cfg.name.replace("/", "_"))
+    hb = HeartbeatMonitor(n_workers=1, timeout_s=600)
+    sd = StragglerDetector(n_workers=1)
+
+    if cfg.family == "dit":
+        if args.flexi:
+            from repro.core import flexify, trainable_mask
+            base_params = dit_mod.init_dit(cfg, jax.random.PRNGKey(0))
+            params, cfg = flexify(base_params, cfg, [(1, 4, 4)],
+                                  lora_rank=8 if args.recipe == "lora" else 0)
+            mask = (trainable_mask(params, args.recipe)
+                    if args.recipe == "lora" else None)
+            opt = adamw.init_opt_state(params)
+            # two step fns — the paper trains both patch sizes
+            step_fns = [jax.jit(st.make_dit_train_step(cfg, tc, mode=m,
+                                                       trainable=mask))
+                        for m in (0, 1)]
+            loader = dp.HostShardedLoader(
+                dp.make_dit_batch_fn(cfg.dit.latent_shape,
+                                     cfg.dit.num_classes, args.batch))
+        else:
+            params, opt, fn, loader = build_dit_training(cfg, tc, args.batch)
+            step_fns = [fn]
+    else:
+        params, opt, fn, loader = build_lm_training(cfg, tc, args.batch,
+                                                    args.seq)
+        step_fns = [fn]
+
+    ema_state = ema.init_ema(params)
+    key = jax.random.PRNGKey(42)
+    t_start = time.time()
+    for step in range(args.steps):
+        t0 = time.time()
+        batch = next(loader)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()
+                 if k in ("tokens", "targets", "x0", "cond")}
+        fn = step_fns[step % len(step_fns)]
+        if cfg.family == "dit":
+            params, opt, metrics = fn(params, opt, batch,
+                                      jax.random.fold_in(key, step))
+        else:
+            params, opt, metrics = fn(params, opt, batch)
+        ema_state = ema.ema_update(ema_state, params, tc.ema_rate)
+        hb.heartbeat(0)
+        sd.record(0, (time.time() - t0) * 1e3)
+        if step % 10 == 0 or step == args.steps - 1:
+            loss = float(metrics.get("loss", metrics.get("distill_loss", 0.0)))
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"({(time.time()-t0)*1e3:.0f} ms)", flush=True)
+        if step and step % args.ckpt_every == 0:
+            ckpt.save(step, {"params": params, "opt": opt})
+    ckpt.save(args.steps, {"params": params, "opt": opt})
+    ckpt.wait()
+    loader.close()
+    print(f"done in {time.time()-t_start:.1f}s; "
+          f"checkpoints at {ckpt.root}; straggler report: "
+          f"{sd.report(args.steps)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,362 @@
+"""Grouped-query attention with RoPE, sliding windows, soft-capping, packing
+segment masks, QKV bias, QK-norm, KV-cache decode, and cross-attention.
+
+The XLA path below is the reference; ``repro.kernels.attention`` provides the
+Pallas TPU kernel with identical semantics (selected via ``backend``).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttnConfig
+from repro.models.common import (ParamSpec, apply_rope, norm_schema, rms_norm,
+                                 softcap)
+
+Params = Dict[str, Any]
+
+
+def attention_schema(d_model: int, cfg: AttnConfig) -> Params:
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    s: Params = {
+        "wq": ParamSpec((d_model, H, hd), ("embed", "heads", None)),
+        "wk": ParamSpec((d_model, K, hd), ("embed", "kv_heads", None)),
+        "wv": ParamSpec((d_model, K, hd), ("embed", "kv_heads", None)),
+        "wo": ParamSpec((H, hd, d_model), ("heads", None, "embed")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ParamSpec((H, hd), ("heads", None), init="zeros")
+        s["bk"] = ParamSpec((K, hd), ("kv_heads", None), init="zeros")
+        s["bv"] = ParamSpec((K, hd), ("kv_heads", None), init="zeros")
+    if cfg.qk_norm:
+        s["q_norm"] = {"scale": ParamSpec((hd,), (None,), init="zeros")}
+        s["k_norm"] = {"scale": ParamSpec((hd,), (None,), init="zeros")}
+    return s
+
+
+def cross_attention_schema(d_model: int, cfg: AttnConfig, kv_dim: int = 0) -> Params:
+    kv_dim = kv_dim or d_model
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    return {
+        "wq": ParamSpec((d_model, H, hd), ("embed", "heads", None)),
+        "wk": ParamSpec((kv_dim, K, hd), ("embed", "kv_heads", None)),
+        "wv": ParamSpec((kv_dim, K, hd), ("embed", "kv_heads", None)),
+        "wo": ParamSpec((H, hd, d_model), ("heads", None, "embed")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Masking
+
+
+def make_attention_bias(q_pos: jax.Array, k_pos: jax.Array, *, causal: bool,
+                        window: jax.Array | int = 0,
+                        q_segment: Optional[jax.Array] = None,
+                        k_segment: Optional[jax.Array] = None,
+                        k_valid: Optional[jax.Array] = None) -> jax.Array:
+    """Additive bias [..., Sq, Sk] built from arithmetic (scan-friendly) masks.
+
+    ``window`` may be a traced int32 scalar: 0 means full attention; w>0 means
+    only keys with q_pos - k_pos < w are visible (plus causality if set).
+    """
+    allowed = jnp.ones(q_pos.shape[:-1] + (q_pos.shape[-1], k_pos.shape[-1]), bool)
+    dq = q_pos[..., :, None]
+    dk = k_pos[..., None, :]
+    if causal:
+        allowed &= dq >= dk
+    window = jnp.asarray(window, jnp.int32)
+    in_window = (dq - dk < window) & (dq - dk > -window)
+    allowed &= jnp.where(window > 0, in_window, True)
+    if q_segment is not None and k_segment is not None:
+        allowed &= q_segment[..., :, None] == k_segment[..., None, :]
+    if k_valid is not None:
+        allowed &= k_valid[..., None, :]
+    return jnp.where(allowed, 0.0, -1e30).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Core attention math (GQA, no repeated-KV materialization)
+
+
+def gqa_attend(q: jax.Array, k: jax.Array, v: jax.Array, bias: jax.Array,
+               cfg: AttnConfig) -> jax.Array:
+    """q: [B,Sq,H,hd]; k,v: [B,Sk,K,hd]; bias: [B,Sq,Sk] additive (f32).
+
+    QK^T and PV run with bf16 inputs and f32 accumulation
+    (``preferred_element_type``) — the MXU-native mixed-precision contract.
+    """
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qh = q.reshape(B, Sq, K, G, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qh, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    scores = softcap(scores, cfg.logit_softcap)
+    if bias.ndim == 3:
+        bias = bias[:, None, None]                       # [B,1,1,Sq,Sk]
+    scores = scores + bias
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def blocked_gqa_attend(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                       positions: jax.Array, causal: bool,
+                       window: jax.Array | int, cfg: AttnConfig,
+                       q_block: int = 1024, unroll: bool = False) -> jax.Array:
+    """Flash-style attention for long sequences: ``lax.scan`` over query
+    blocks, each block attending over the full K with an arithmetic mask.
+
+    Peak memory per step is O(B·H·q_block·Sk) instead of O(B·H·Sq·Sk) —
+    required for prefill_32k to fit per-device HBM without a Pallas kernel
+    (the dry-run graph must be pure XLA on the CPU backend).
+    """
+    import numpy as _np
+    from jax.sharding import PartitionSpec as _P
+    from repro.runtime.sharding import constrain as _constrain
+
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    nq = -(-S // q_block)
+    pad = nq * q_block - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        positions = jnp.pad(positions, ((0, 0), (0, pad)), constant_values=-1)
+    qb = q.reshape(B, nq, q_block, H, hd).transpose(1, 0, 2, 3, 4)
+    pb = positions.reshape(B, nq, q_block).transpose(1, 0, 2)
+    k_pos_full = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    # Static per-layer window (unrolled cost path / eager) → sliced-K fast
+    # path: each causal q block only visits keys in [start, start+qb+w).
+    static_window = isinstance(window, (int, _np.integer)) and int(window) > 0
+    if static_window and causal and int(window) < S:
+        w = int(window)
+        k_span = min(q_block + w, S)
+
+        def step(_, inp):
+            i, q_i, pos_i = inp
+            # shard queries within the block over the model axis: balances
+            # attention compute when head count doesn't divide the axis
+            q_i = _constrain(q_i, _P(("pod", "data"), "model", None, None))
+            start = jnp.clip(i * q_block - w, 0, S - k_span)
+            k_s = jax.lax.dynamic_slice_in_dim(k, start, k_span, axis=1)
+            v_s = jax.lax.dynamic_slice_in_dim(v, start, k_span, axis=1)
+            kp = start + jnp.arange(k_span, dtype=jnp.int32)
+            qh = q_i.reshape(B, q_block, K, G, hd)
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qh, k_s,
+                           preferred_element_type=jnp.float32)
+            s = s / jnp.sqrt(hd).astype(jnp.float32)
+            s = softcap(s, cfg.logit_softcap)
+            dq = pos_i[:, :, None]
+            dk = kp[None, None, :]
+            allowed = (dq >= dk) & (dq - dk < w) & (dq >= 0)
+            s = s + jnp.where(allowed, 0.0, -1e30)[:, None, None]
+            p = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v_s,
+                           preferred_element_type=jnp.float32)
+            return None, o.reshape(B, q_block, H, hd).astype(q_i.dtype)
+
+        from repro.models.common import scan_or_unroll
+        idx = jnp.arange(nq, dtype=jnp.int32)
+        _, out = scan_or_unroll(step, None, (idx, qb, pb), unroll)
+        out = out.transpose(1, 0, 2, 3, 4).reshape(B, nq * q_block, H, hd)
+        return out[:, :S]
+
+    window = jnp.asarray(window, jnp.int32)
+
+    def step(_, inp):
+        q_i, pos_i = inp                                 # [B,qb,H,hd], [B,qb]
+        q_i = _constrain(q_i, _P(("pod", "data"), "model", None, None))
+        qh = q_i.reshape(B, q_block, K, G, hd)
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qh, k,
+                       preferred_element_type=jnp.float32)
+        s = s / jnp.sqrt(hd).astype(jnp.float32)
+        s = softcap(s, cfg.logit_softcap)
+        dq = pos_i[:, :, None]
+        dk = k_pos_full[:, None, :]
+        allowed = (dq >= dk) if causal else jnp.ones_like(dq >= dk)
+        in_w = (dq - dk < window) & (dq - dk > -window)
+        allowed &= jnp.where(window > 0, in_w, True)
+        allowed &= dq >= 0                               # padded queries
+        s = s + jnp.where(allowed, 0.0, -1e30)[:, None, None]
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v,
+                       preferred_element_type=jnp.float32)
+        return None, o.reshape(B, q_block, H, hd).astype(q_i.dtype)
+
+    from repro.models.common import scan_or_unroll
+    _, out = scan_or_unroll(step, None, (qb, pb), unroll)
+    out = out.transpose(1, 0, 2, 3, 4).reshape(B, nq * q_block, H, hd)
+    return out[:, :S]
+
+
+# Sequence length above which the blocked path is used.
+BLOCKED_ATTN_THRESHOLD = 8192
+
+
+def project_qkv(params: Params, x: jax.Array, kv_x: jax.Array, cfg: AttnConfig
+                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", kv_x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", kv_x, params["wv"].astype(x.dtype))
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    if "q_norm" in params:
+        q = rms_norm(q, params["q_norm"]["scale"])
+        k = rms_norm(k, params["k_norm"]["scale"])
+    return q, k, v
+
+
+def attention(params: Params, x: jax.Array, cfg: AttnConfig, *,
+              positions: Optional[jax.Array] = None,
+              causal: bool = True,
+              window: jax.Array | int = 0,
+              segment_ids: Optional[jax.Array] = None,
+              backend: str = "xla", unroll: bool = False) -> jax.Array:
+    """Self-attention over x: [B,S,d] → [B,S,d]."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    q, k, v = project_qkv(params, x, x, cfg)
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if backend == "pallas":
+        from repro.kernels.attention import ops as attn_ops
+        out = attn_ops.flash_attention(
+            q, k, v, causal=causal, window=int(window) if not hasattr(window, "dtype") else 0,
+            softcap=cfg.logit_softcap, segment_ids=segment_ids)
+    elif S > BLOCKED_ATTN_THRESHOLD and segment_ids is None:
+        out = blocked_gqa_attend(q, k, v, positions=positions, causal=causal,
+                                 window=window, cfg=cfg, unroll=unroll)
+    else:
+        bias = make_attention_bias(positions, positions, causal=causal,
+                                   window=window, q_segment=segment_ids,
+                                   k_segment=segment_ids)
+        out = gqa_attend(q, k, v, bias, cfg)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+
+
+def cross_attention(params: Params, x: jax.Array, kv: jax.Array, cfg: AttnConfig,
+                    kv_valid: Optional[jax.Array] = None) -> jax.Array:
+    """x: [B,Sq,d] attends to kv: [B,Sk,d_kv] (non-causal, no RoPE)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", kv, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", kv, params["wv"].astype(x.dtype))
+    B, Sq = x.shape[:2]
+    Sk = kv.shape[1]
+    zeros_q = jnp.zeros((B, Sq), jnp.int32)
+    zeros_k = jnp.zeros((B, Sk), jnp.int32)
+    bias = make_attention_bias(zeros_q, zeros_k, causal=False, window=0,
+                               k_valid=kv_valid)
+    out = gqa_attend(q, k, v, bias, cfg)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode
+
+
+def init_kv_cache(batch: int, max_len: int, cfg: AttnConfig,
+                  dtype: jnp.dtype) -> Params:
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, K, hd), dtype),
+        "v": jnp.zeros((batch, max_len, K, hd), dtype),
+    }
+
+
+def kv_cache_spec(batch: int, max_len: int, cfg: AttnConfig, dtype: jnp.dtype) -> Params:
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jax.ShapeDtypeStruct((batch, max_len, K, hd), dtype),
+        "v": jax.ShapeDtypeStruct((batch, max_len, K, hd), dtype),
+    }
+
+
+def _quantize_kv(t: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """[.., hd] → (int8, per-(...)-absmax scale)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1),
+                        1e-6) / 127.0
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def decode_attention(params: Params, cache: Params, x: jax.Array,
+                     pos: jax.Array, cfg: AttnConfig, *,
+                     window: jax.Array | int = 0) -> Tuple[jax.Array, Params]:
+    """One decode step. x: [B,1,d]; pos: [B] current position (int32).
+
+    Writes the new K/V at ``pos`` then attends over the whole cache with a
+    validity mask ``k_pos <= pos`` (and optional sliding window). When the
+    cache carries ``k_scale``/``v_scale`` it is int8-quantized (per
+    position+head absmax): the new entry is quantized on write and the
+    cache dequantized on read (halved HBM cache traffic).
+    """
+    B, one, _ = x.shape
+    assert one == 1
+    q, k_new, v_new = project_qkv(params, x, x, cfg)
+    if cfg.use_rope:
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        k_new = apply_rope(k_new, pos[:, None], cfg.rope_theta)
+
+    S = cache["k"].shape[1]
+    onehot = jax.nn.one_hot(pos, S, dtype=jnp.float32)              # [B,S]
+    quantized = "k_scale" in cache
+    new_cache: Params = {}
+    if quantized:
+        kq, ks = _quantize_kv(k_new)        # [B,1,K,hd], [B,1,K]
+        vq, vs = _quantize_kv(v_new)
+        sel = onehot[..., None, None]
+        k_int = jnp.where(sel > 0, kq, cache["k"])
+        v_int = jnp.where(sel > 0, vq, cache["v"])
+        k_sc = jnp.where(onehot[..., None] > 0, ks, cache["k_scale"])
+        v_sc = jnp.where(onehot[..., None] > 0, vs, cache["v_scale"])
+        k = k_int.astype(x.dtype) * k_sc[..., None].astype(x.dtype)
+        v = v_int.astype(x.dtype) * v_sc[..., None].astype(x.dtype)
+        new_cache = {"k": k_int, "v": v_int, "k_scale": k_sc, "v_scale": v_sc}
+    else:
+        oh = onehot.astype(cache["k"].dtype)
+        k = cache["k"] * (1 - oh)[..., None, None] + oh[..., None, None] * k_new
+        v = cache["v"] * (1 - oh)[..., None, None] + oh[..., None, None] * v_new
+        new_cache = {"k": k, "v": v}
+
+    k_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    bias = make_attention_bias(pos[:, None], k_pos, causal=True, window=window)
+    out = gqa_attend(q, k, v, bias, cfg)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return y, new_cache
+
+
+def prefill_attention(params: Params, x: jax.Array, cfg: AttnConfig, *,
+                      window: jax.Array | int = 0,
+                      backend: str = "xla",
+                      unroll: bool = False) -> Tuple[jax.Array, Params]:
+    """Prefill: causal self-attention that also returns the populated cache."""
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    q, k, v = project_qkv(params, x, x, cfg)
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if backend == "pallas":
+        from repro.kernels.attention import ops as attn_ops
+        out = attn_ops.flash_attention(q, k, v, causal=True,
+                                       window=int(window) if not hasattr(window, "dtype") else 0,
+                                       softcap=cfg.logit_softcap)
+    elif S > BLOCKED_ATTN_THRESHOLD:
+        out = blocked_gqa_attend(q, k, v, positions=positions, causal=True,
+                                 window=window, cfg=cfg, unroll=unroll)
+    else:
+        bias = make_attention_bias(positions, positions, causal=True, window=window)
+        out = gqa_attend(q, k, v, bias, cfg)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return y, {"k": k, "v": v}

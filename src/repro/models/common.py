@@ -1,0 +1,238 @@
+"""Common model components and the parameter-schema system.
+
+Parameters are plain nested dicts of ``jnp.ndarray``. To keep parameter
+initialization and sharding specs in one place, each module declares a
+*schema*: a nested dict whose leaves are :class:`ParamSpec` (shape + logical
+axes + init). ``init_tree`` materializes arrays; ``spec_tree`` materializes
+``jax.sharding.PartitionSpec`` given logical→mesh rules. This is the same
+idea as MaxText's logical axis rules, without a framework dependency.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec
+
+# ---------------------------------------------------------------------------
+# Parameter schema
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]          # logical axis name per dim
+    init: str = "normal"                     # normal | zeros | ones | embed
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_leaf(x: Any) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_tree(schema: Any, key: jax.Array, dtype: jnp.dtype) -> Any:
+    """Materialize a parameter pytree from a schema tree."""
+    leaves, treedef = jax.tree.flatten(schema, is_leaf=is_leaf)
+    keys = jax.random.split(key, max(1, len(leaves)))
+    out = []
+    for spec, k in zip(leaves, keys):
+        if spec.init == "zeros":
+            arr = jnp.zeros(spec.shape, dtype)
+        elif spec.init == "ones":
+            arr = jnp.ones(spec.shape, dtype)
+        elif spec.init == "embed":
+            arr = (jax.random.normal(k, spec.shape, jnp.float32) * spec.scale).astype(dtype)
+        else:  # truncated-normal fan-in style
+            fan_in = spec.shape[0] if len(spec.shape) > 1 else max(1, spec.shape[0])
+            if len(spec.shape) >= 2:
+                fan_in = int(np.prod(spec.shape[:-1]))
+            std = spec.scale if spec.scale != 0.02 else 1.0 / math.sqrt(max(1, fan_in))
+            arr = (jax.random.truncated_normal(k, -2.0, 2.0, spec.shape, jnp.float32)
+                   * std).astype(dtype)
+        out.append(arr)
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_tree(schema: Any, dtype: jnp.dtype) -> Any:
+    """ShapeDtypeStruct tree (for dry-run lowering without allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), schema, is_leaf=is_leaf)
+
+
+def spec_tree(schema: Any, rules: Dict[str, Optional[Any]],
+              axis_sizes: Optional[Dict[str, int]] = None) -> Any:
+    """PartitionSpec tree from logical→mesh axis rules.
+
+    ``rules`` maps logical axis name → mesh axis name (str or tuple) or None.
+    Unknown logical axes are unsharded. A mesh axis may appear at most once in
+    a spec; later duplicate uses are dropped (replicated) automatically.
+    ``axis_sizes`` (mesh axis → size) drops shardings that do not divide the
+    dimension evenly.
+    """
+    def one(spec: ParamSpec) -> PartitionSpec:
+        used: set = set()
+        parts = []
+        for dim, ax in zip(spec.shape, spec.axes):
+            mesh_ax = rules.get(ax) if ax is not None else None
+            if mesh_ax is None:
+                parts.append(None)
+                continue
+            flat = (mesh_ax,) if isinstance(mesh_ax, str) else tuple(mesh_ax)
+            keep = tuple(a for a in flat if a not in used)
+            if axis_sizes is not None:
+                # greedily keep the prefix of axes that divides the dim
+                ok = []
+                prod = 1
+                for a in keep:
+                    prod *= axis_sizes.get(a, 1)
+                    if dim % prod == 0:
+                        ok.append(a)
+                    else:
+                        prod //= axis_sizes.get(a, 1)
+                keep = tuple(ok)
+            if not keep:
+                parts.append(None)
+                continue
+            used.update(keep)
+            parts.append(keep[0] if len(keep) == 1 else keep)
+        return PartitionSpec(*parts)
+
+    return jax.tree.map(one, schema, is_leaf=is_leaf)
+
+
+def stack_schema(schema: Any, n: int, axis_name: Optional[str] = "layers") -> Any:
+    """Prepend a stacking dimension (for scan-over-layers parameters)."""
+    def one(s: ParamSpec) -> ParamSpec:
+        return ParamSpec((n,) + s.shape, (axis_name,) + s.axes, s.init, s.scale)
+    return jax.tree.map(one, schema, is_leaf=is_leaf)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6,
+             zero_centered: bool = True) -> jax.Array:
+    """RMSNorm. Gemma-style ``(1 + scale)`` when ``zero_centered``."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    w = (1.0 + scale.astype(jnp.float32)) if zero_centered else scale.astype(jnp.float32)
+    return (y * w).astype(dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: Optional[jax.Array] = None,
+               eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def norm_schema(d: int, norm_type: str) -> Any:
+    if norm_type == "rmsnorm":
+        return {"scale": ParamSpec((d,), ("embed",), init="zeros")}
+    return {"scale": ParamSpec((d,), ("embed",), init="ones"),
+            "bias": ParamSpec((d,), ("embed",), init="zeros")}
+
+
+def apply_norm(params: Dict[str, jax.Array], x: jax.Array, norm_type: str) -> jax.Array:
+    if norm_type == "rmsnorm":
+        return rms_norm(x, params["scale"])
+    return layer_norm(x, params["scale"], params.get("bias"))
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, head_dim]; positions: [..., S] int32."""
+    freqs = rope_frequencies(x.shape[-1], theta)                 # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs    # [..., S, hd/2]
+    angles = angles[..., None, :]                                # [..., S, 1, hd/2]
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Misc
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    """Gemma-2 style logit soft-capping; no-op when cap == 0."""
+    if cap <= 0.0:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x, approximate=True)
+
+
+def mlp_act(gate: jax.Array, up: Optional[jax.Array], kind: str) -> jax.Array:
+    if kind == "swiglu":
+        assert up is not None
+        return jax.nn.silu(gate) * up
+    if kind == "geglu":
+        assert up is not None
+        return gelu(gate) * up
+    return gelu(gate)
+
+
+def dtype_of(name: str) -> jnp.dtype:
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+def count_params(tree: Any) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def scan_or_unroll(body, init, xs, unroll: bool = False):
+    """``lax.scan`` or a python unroll (straight-line HLO for the dry-run
+    cost calibration — see ModelConfig.unroll)."""
+    if not unroll:
+        return jax.lax.scan(body, init, xs)
+    length = jax.tree.leaves(xs)[0].shape[0]
+    carry = init
+    ys = []
+    for i in range(length):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+# Timestep embedding (sinusoidal) used by DiT.
+def timestep_embedding(t: jax.Array, dim: int, max_period: float = 10_000.0) -> jax.Array:
+    half = dim // 2
+    freqs = jnp.exp(-math.log(max_period) * jnp.arange(half, dtype=jnp.float32) / half)
+    args = t.astype(jnp.float32)[:, None] * freqs[None]
+    emb = jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
+    if dim % 2:
+        emb = jnp.pad(emb, ((0, 0), (0, 1)))
+    return emb

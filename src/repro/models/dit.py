@@ -1,0 +1,344 @@
+"""Diffusion Transformer (DiT) with FlexiDiT patch-size modes.
+
+Covers the paper's three model classes:
+  * class-conditioned DiT (adaLN-Zero, DiT-XL/2 style)      — cfg.dit.conditioning == 'class'
+  * text-conditioned T2I/Emu (cross-attention conditioning) — 'text'
+  * video DiT (3D patches; same blocks, longer sequences)   — latent_shape[0] > 1
+
+A *mode* is an index into ``patch_sizes(cfg) = [p_powerful, *flex sizes]``.
+mode 0 is the pre-trained ("powerful") patch size; higher modes are "weak".
+Mode selection is static (token count changes), so each mode jit-compiles to
+its own executable — exactly the two-executable scheme used at inference.
+
+LoRA recipe (§3.2): ``blocks.lora`` holds per-new-mode adapters on the self-
+attention and MLP projections (cross-attention deliberately frozen, App. C.2).
+mode 0 never touches LoRAs / the patch-size embedding / the per-mode LN, so
+the pre-trained forward pass is preserved bit-exactly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import patch as patch_mod
+from repro.core import resize
+from repro.models.common import (ParamSpec, dtype_of, init_tree, layer_norm,
+                                 softcap, spec_tree, stack_schema,
+                                 timestep_embedding)
+
+Params = Dict[str, Any]
+Patch = Tuple[int, int, int]
+
+T_EMB_DIM = 256
+
+
+def patch_sizes(cfg: ModelConfig) -> Tuple[Patch, ...]:
+    return (cfg.dit.patch_size,) + tuple(cfg.dit.flex_patch_sizes)
+
+
+def tokens_for_mode(cfg: ModelConfig, mode: int) -> int:
+    return patch_mod.num_tokens(cfg.dit.latent_shape, patch_sizes(cfg)[mode])
+
+
+def c_out_dim(cfg: ModelConfig) -> int:
+    c_in = cfg.dit.latent_shape[-1]
+    return 2 * c_in if cfg.dit.learn_sigma else c_in
+
+
+# ---------------------------------------------------------------------------
+# Schema
+
+
+def _lora_pair(d_in: int, d_out: int, n_new: int, r: int) -> Params:
+    return {"a": ParamSpec((n_new, d_in, r), (None, "embed", None), scale=0.02),
+            "b": ParamSpec((n_new, r, d_out), (None, None, "embed"), init="zeros")}
+
+
+def dit_block_schema(cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    dc = cfg.dit.text_dim or d
+    n_new = len(cfg.dit.flex_patch_sizes)
+    r = cfg.dit.lora_rank
+    s: Params = {
+        "ada": {"w": ParamSpec((d, 6 * d), ("embed", "mlp"), init="zeros"),
+                "b": ParamSpec((6 * d,), ("mlp",), init="zeros")},
+        "attn": {"wq": ParamSpec((d, d), ("embed", "heads")),
+                 "wk": ParamSpec((d, d), ("embed", "heads")),
+                 "wv": ParamSpec((d, d), ("embed", "heads")),
+                 "wo": ParamSpec((d, d), ("heads", "embed"))},
+        "mlp": {"w_in": ParamSpec((d, cfg.d_ff), ("embed", "mlp")),
+                "b_in": ParamSpec((cfg.d_ff,), ("mlp",), init="zeros"),
+                "w_out": ParamSpec((cfg.d_ff, d), ("mlp", "embed")),
+                "b_out": ParamSpec((d,), ("embed",), init="zeros")},
+    }
+    if cfg.dit.conditioning == "text":
+        s["xattn"] = {"wq": ParamSpec((d, d), ("embed", "heads")),
+                      "wk": ParamSpec((dc, d), ("embed", "heads")),
+                      "wv": ParamSpec((dc, d), ("embed", "heads")),
+                      "wo": ParamSpec((d, d), ("heads", "embed"), init="zeros")}
+    if r > 0 and n_new > 0:
+        s["lora"] = {
+            "attn": {k: _lora_pair(d, d, n_new, r) for k in ("wq", "wk", "wv", "wo")},
+            "mlp": {"w_in": _lora_pair(d, cfg.d_ff, n_new, r),
+                    "w_out": _lora_pair(cfg.d_ff, d, n_new, r)},
+        }
+    return s
+
+
+def dit_schema(cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    dit = cfg.dit
+    pp = dit.underlying_patch_size
+    c_in = dit.latent_shape[-1]
+    n_modes = 1 + len(dit.flex_patch_sizes)
+    s: Params = {
+        "embed": {"w_flex": ParamSpec((int(np.prod(pp)), c_in, d),
+                                      (None, None, "embed")),
+                  "b": ParamSpec((d,), ("embed",), init="zeros")},
+        "deembed": {"w_flex": ParamSpec((d, c_out_dim(cfg), int(np.prod(pp))),
+                                        ("embed", None, None), init="zeros"),
+                    "b_flex": ParamSpec((c_out_dim(cfg), int(np.prod(pp))),
+                                        (None, None), init="zeros")},
+        "t_embed": {"w1": ParamSpec((T_EMB_DIM, d), (None, "embed")),
+                    "b1": ParamSpec((d,), ("embed",), init="zeros"),
+                    "w2": ParamSpec((d, d), ("embed", "mlp")),
+                    "b2": ParamSpec((d,), ("embed",), init="zeros")},
+        "final": {"ada": {"w": ParamSpec((d, 2 * d), ("embed", "mlp"), init="zeros"),
+                          "b": ParamSpec((2 * d,), ("mlp",), init="zeros")}},
+        "blocks": stack_schema(dit_block_schema(cfg), cfg.num_layers),
+    }
+    if n_modes > 1:
+        s["ps_embed"] = ParamSpec((n_modes - 1, d), (None, "embed"), init="zeros")
+        s["ps_ln"] = {"scale": ParamSpec((n_modes - 1, d), (None, "embed"), init="zeros"),
+                      "bias": ParamSpec((n_modes - 1, d), (None, "embed"), init="zeros")}
+    if dit.lora_rank > 0 and n_modes > 1:
+        # LoRA recipe (§3.2): brand-new (de-)embedding layers per new patch
+        # size — the shared flex weights stay frozen so the pre-trained
+        # forward pass is bit-exact at mode 0.
+        s["embed_new"] = {}
+        s["deembed_new"] = {}
+        for m, p in enumerate(dit.flex_patch_sizes, start=1):
+            npix = int(np.prod(p))
+            s["embed_new"][f"m{m}"] = {
+                "w": ParamSpec((npix, c_in, d), (None, None, "embed")),
+                "b": ParamSpec((d,), ("embed",), init="zeros")}
+            s["deembed_new"][f"m{m}"] = {
+                "w": ParamSpec((d, c_out_dim(cfg), npix), ("embed", None, None),
+                               init="zeros"),
+                "b": ParamSpec((c_out_dim(cfg), npix), (None, None), init="zeros")}
+    if dit.conditioning == "class":
+        s["class_embed"] = ParamSpec((dit.num_classes + 1, d), (None, "embed"),
+                                     init="embed")
+    elif dit.conditioning == "text":
+        dc = dit.text_dim or d
+        s["text_proj"] = ParamSpec((dc, dc), (None, "embed"))
+    return s
+
+
+def init_dit(cfg: ModelConfig, key: jax.Array) -> Params:
+    return init_tree(dit_schema(cfg), key, dtype_of(cfg.param_dtype))
+
+
+def dit_partition_specs(cfg: ModelConfig, rules: Dict[str, Any]) -> Params:
+    return spec_tree(dit_schema(cfg), rules)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+
+
+def _linear(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
+            lora: Optional[Params] = None, mode: int = 0,
+            lora_scale: float = 2.0) -> jax.Array:
+    y = jnp.einsum("...d,de->...e", x, w.astype(x.dtype),
+                   preferred_element_type=jnp.float32)
+    if lora is not None and mode > 0:
+        a = lora["a"][mode - 1].astype(x.dtype)
+        bb = lora["b"][mode - 1].astype(x.dtype)
+        r = a.shape[-1]
+        y = y + jnp.einsum("...r,re->...e", jnp.einsum("...d,dr->...r", x, a), bb,
+                           preferred_element_type=jnp.float32) * (lora_scale / r)
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def _modulate(x: jax.Array, shift: jax.Array, scale: jax.Array) -> jax.Array:
+    return x * (1.0 + scale[:, None]) + shift[:, None]
+
+
+def _mha(p: Params, x: jax.Array, num_heads: int, *,
+         lora: Optional[Params] = None, mode: int = 0,
+         segment_ids: Optional[jax.Array] = None,
+         unroll: bool = False) -> jax.Array:
+    B, N, d = x.shape
+    hd = d // num_heads
+    la = (lora or {})
+    q = _linear(x, p["wq"], lora=la.get("wq"), mode=mode).reshape(B, N, num_heads, hd)
+    k = _linear(x, p["wk"], lora=la.get("wk"), mode=mode).reshape(B, N, num_heads, hd)
+    v = _linear(x, p["wv"], lora=la.get("wv"), mode=mode).reshape(B, N, num_heads, hd)
+    if N > 8192 and segment_ids is None:
+        # long video sequences: flash-style blocked path with q blocks
+        # sharded over the model axis (see models.attention)
+        from repro.configs.base import AttnConfig
+        from repro.models.attention import blocked_gqa_attend
+        acfg = AttnConfig(num_heads=num_heads, num_kv_heads=num_heads,
+                          head_dim=hd, use_rope=False)
+        pos = jnp.broadcast_to(jnp.arange(N, dtype=jnp.int32), (B, N))
+        o = blocked_gqa_attend(q, k, v, positions=pos, causal=False,
+                               window=0, cfg=acfg, unroll=unroll)
+        return _linear(o.reshape(B, N, d), p["wo"], lora=la.get("wo"),
+                       mode=mode)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) / np.sqrt(hd)
+    if segment_ids is not None:
+        mask = segment_ids[:, :, None] == segment_ids[:, None, :]
+        scores = scores + jnp.where(mask, 0.0, -1e30)[:, None]
+    probs = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    return _linear(o.reshape(B, N, d), p["wo"], lora=la.get("wo"), mode=mode)
+
+
+def _cross_mha(p: Params, x: jax.Array, kv: jax.Array, num_heads: int,
+               kv_mask: Optional[jax.Array] = None) -> jax.Array:
+    B, N, d = x.shape
+    hd = d // num_heads
+    q = _linear(x, p["wq"]).reshape(B, N, num_heads, hd)
+    k = _linear(kv, p["wk"]).reshape(B, kv.shape[1], num_heads, hd)
+    v = _linear(kv, p["wv"]).reshape(B, kv.shape[1], num_heads, hd)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) / np.sqrt(hd)
+    if kv_mask is not None:
+        scores = scores + jnp.where(kv_mask[:, None, None], 0.0, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    return _linear(o.reshape(B, N, d), p["wo"])
+
+
+def _ln(x: jax.Array) -> jax.Array:
+    """LayerNorm without learned affine (DiT blocks use adaLN modulation)."""
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + 1e-6)).astype(x.dtype)
+
+
+def dit_block_apply(p: Params, x: jax.Array, c: jax.Array, cfg: ModelConfig, *,
+                    mode: int = 0, text: Optional[jax.Array] = None,
+                    text_mask: Optional[jax.Array] = None,
+                    segment_ids: Optional[jax.Array] = None) -> jax.Array:
+    H = cfg.attn.num_heads
+    ada = _linear(jax.nn.silu(c.astype(jnp.float32)).astype(x.dtype),
+                  p["ada"]["w"], p["ada"]["b"])
+    sh1, sc1, g1, sh2, sc2, g2 = jnp.split(ada, 6, axis=-1)
+    lora = p.get("lora", {})
+    h = _modulate(_ln(x), sh1, sc1)
+    x = x + g1[:, None] * _mha(p["attn"], h, H, lora=lora.get("attn"),
+                               mode=mode, segment_ids=segment_ids,
+                               unroll=cfg.unroll)
+    if "xattn" in p and text is not None:
+        x = x + _cross_mha(p["xattn"], _ln(x), text, H, kv_mask=text_mask)
+    h2 = _modulate(_ln(x), sh2, sc2)
+    mlp_lora = lora.get("mlp", {})
+    h2 = _linear(h2, p["mlp"]["w_in"], p["mlp"]["b_in"],
+                 lora=mlp_lora.get("w_in"), mode=mode)
+    h2 = jax.nn.gelu(h2.astype(jnp.float32), approximate=True).astype(x.dtype)
+    h2 = _linear(h2, p["mlp"]["w_out"], p["mlp"]["b_out"],
+                 lora=mlp_lora.get("w_out"), mode=mode)
+    return x + g2[:, None] * h2
+
+
+@functools.lru_cache(maxsize=64)
+def _pos_embed_np(latent_shape: Tuple[int, int, int, int], p: Patch,
+                  d: int) -> np.ndarray:
+    coords = patch_mod.patch_centers(latent_shape, p)
+    return patch_mod.sincos_pos_embed(d, coords)
+
+
+def condition_vector(params: Params, t: jax.Array, cond: Any,
+                     cfg: ModelConfig, dtype: jnp.dtype) -> jax.Array:
+    """c = t_emb (+ class emb). t: [B] float; cond: labels [B] or None."""
+    te = timestep_embedding(t, T_EMB_DIM).astype(dtype)
+    te = _linear(te, params["t_embed"]["w1"], params["t_embed"]["b1"])
+    te = jax.nn.silu(te.astype(jnp.float32)).astype(dtype)
+    te = _linear(te, params["t_embed"]["w2"], params["t_embed"]["b2"])
+    if cfg.dit.conditioning == "class" and cond is not None:
+        te = te + jnp.take(params["class_embed"], cond, axis=0).astype(dtype)
+    return te
+
+
+def dit_forward(params: Params, x_t: jax.Array, t: jax.Array, cond: Any,
+                cfg: ModelConfig, *, mode: int = 0,
+                text_mask: Optional[jax.Array] = None,
+                latent_shape: Optional[Tuple[int, int, int, int]] = None
+                ) -> jax.Array:
+    """Denoiser NFE.  x_t: [B,F,H,W,C]; t: [B]; cond: labels [B] int32 (class)
+    or text embeddings [B,T,dc] (text). Returns [B,F,H,W,c_out]."""
+    dit = cfg.dit
+    ls = latent_shape or dit.latent_shape
+    p = patch_sizes(cfg)[mode]
+    pp = dit.underlying_patch_size
+    dtype = dtype_of(cfg.compute_dtype)
+    x_t = x_t.astype(dtype)
+
+    if mode > 0 and "embed_new" in params:
+        pn = params["embed_new"][f"m{mode}"]
+        patches = patch_mod.patchify(x_t, p)
+        tok = jnp.einsum("bnqc,qcd->bnd", patches, pn["w"].astype(dtype),
+                         preferred_element_type=jnp.float32).astype(dtype)
+        tok = tok + pn["b"].astype(dtype)
+    else:
+        tok = patch_mod.embed_tokens_flex(params["embed"]["w_flex"],
+                                          params["embed"]["b"], x_t, p, pp)
+    pos = jnp.asarray(_pos_embed_np(ls, p, cfg.d_model), dtype)
+    tok = tok + pos[None]
+    if mode > 0:
+        tok = tok + params["ps_embed"][mode - 1].astype(dtype)[None, None]
+        tok = layer_norm(tok, 1.0 + params["ps_ln"]["scale"][mode - 1],
+                         params["ps_ln"]["bias"][mode - 1])
+
+    text = None
+    if dit.conditioning == "text":
+        text = _linear(cond.astype(dtype), params["text_proj"])
+        c = condition_vector(params, t, None, cfg, dtype)
+    else:
+        c = condition_vector(params, t, cond, cfg, dtype)
+
+    def body(h, bp):
+        h = dit_block_apply(bp, h, c, cfg, mode=mode, text=text,
+                            text_mask=text_mask)
+        return h, None
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body, prevent_cse=False)
+    from repro.models.common import scan_or_unroll
+    tok, _ = scan_or_unroll(body, tok, params["blocks"], cfg.unroll)
+
+    ada = _linear(jax.nn.silu(c.astype(jnp.float32)).astype(dtype),
+                  params["final"]["ada"]["w"], params["final"]["ada"]["b"])
+    sh, sc = jnp.split(ada, 2, axis=-1)
+    tok = _modulate(_ln(tok), sh, sc)
+    if mode > 0 and "deembed_new" in params:
+        pn = params["deembed_new"][f"m{mode}"]
+        patches = jnp.einsum("bnd,dcq->bnqc", tok, pn["w"].astype(dtype),
+                             preferred_element_type=jnp.float32)
+        patches = (patches + pn["b"].T.astype(jnp.float32)[None, None]).astype(dtype)
+        out = patch_mod.unpatchify(patches, ls, p)
+    else:
+        out = patch_mod.deembed_tokens_flex(params["deembed"]["w_flex"],
+                                            params["deembed"]["b_flex"], tok,
+                                            ls, p, pp, c_out_dim(cfg))
+    return out
+
+
+def eps_prediction(out: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Extract the ε-prediction (first c_in channels when learning Σ)."""
+    c_in = cfg.dit.latent_shape[-1]
+    return out[..., :c_in] if cfg.dit.learn_sigma else out

@@ -1,0 +1,45 @@
+"""Dense feed-forward blocks (SwiGLU / GeGLU / GELU)."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, mlp_act
+
+Params = Dict[str, Any]
+
+
+def mlp_schema(d_model: int, d_ff: int, activation: str = "swiglu",
+               bias: bool = False) -> Params:
+    gated = activation in ("swiglu", "geglu")
+    s: Params = {
+        "w_in": ParamSpec((d_model, d_ff), ("embed", "mlp")),
+        "w_out": ParamSpec((d_ff, d_model), ("mlp", "embed")),
+    }
+    if gated:
+        s["w_gate"] = ParamSpec((d_model, d_ff), ("embed", "mlp"))
+    if bias:
+        s["b_in"] = ParamSpec((d_ff,), ("mlp",), init="zeros")
+        s["b_out"] = ParamSpec((d_model,), ("embed",), init="zeros")
+    return s
+
+
+def mlp_apply(params: Params, x: jax.Array, activation: str = "swiglu") -> jax.Array:
+    dt = x.dtype
+    # NOTE: no preferred_element_type=f32 — bf16 outputs keep activation
+    # (and their GSPMD collective) bytes at 2B; the MXU still accumulates
+    # in f32 internally (EXPERIMENTS.md §Perf iteration 4).
+    up = jnp.einsum("...d,df->...f", x, params["w_in"].astype(dt))
+    if "b_in" in params:
+        up = up + params["b_in"].astype(dt)
+    if activation in ("swiglu", "geglu"):
+        gate = jnp.einsum("...d,df->...f", x, params["w_gate"].astype(dt))
+        h = mlp_act(gate, up, activation)
+    else:
+        h = mlp_act(up, None, activation)
+    out = jnp.einsum("...f,fd->...d", h.astype(dt), params["w_out"].astype(dt))
+    if "b_out" in params:
+        out = out + params["b_out"].astype(dt)
+    return out.astype(dt)

@@ -1,0 +1,224 @@
+"""Mixture-of-Experts layer.
+
+Two implementations:
+
+* ``moe_apply_sorted`` — production path. Sort-based dispatch (Megablocks
+  style): flatten (token, expert) assignments, argsort by expert, place into
+  a static ``[E, capacity, d]`` buffer, run a single batched expert matmul,
+  scatter-add back weighted by the router gate. FLOPs stay at the
+  *active-parameter* level (one-hot capacity einsums would cost
+  O(B·S·E·C·d) — 40× the expert FFN for grok-1 at 32k tokens; see DESIGN.md).
+* ``moe_apply_dense`` — O(E) oracle computing every expert for every token,
+  used by unit tests to validate the sorted path.
+
+Shared experts (deepseek-moe) are a dense FFN always applied.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.common import ParamSpec, mlp_act
+from repro.models.mlp import mlp_apply, mlp_schema
+
+Params = Dict[str, Any]
+
+
+def moe_schema(d_model: int, cfg: MoEConfig, d_ff_dense: int,
+               activation: str = "swiglu") -> Params:
+    e_ff = cfg.expert_d_ff or d_ff_dense
+    E = cfg.num_experts
+    gated = activation in ("swiglu", "geglu")
+    s: Params = {
+        "router": ParamSpec((d_model, E), ("embed", None), scale=0.02),
+        "w_in": ParamSpec((E, d_model, e_ff), ("expert", "embed", "mlp")),
+        "w_out": ParamSpec((E, e_ff, d_model), ("expert", "mlp", "embed")),
+    }
+    if gated:
+        s["w_gate"] = ParamSpec((E, d_model, e_ff), ("expert", "embed", "mlp"))
+    if cfg.num_shared_experts:
+        s["shared"] = mlp_schema(d_model, cfg.num_shared_experts * e_ff, activation)
+    return s
+
+
+def _router(params: Params, x2d: jax.Array, cfg: MoEConfig
+            ) -> Tuple[jax.Array, jax.Array, jax.Array, Dict[str, jax.Array]]:
+    """x2d: [T,d] → (gates [T,k], idx [T,k] int32, probs [T,E], aux losses)."""
+    logits = jnp.einsum("td,de->te", x2d, params["router"].astype(x2d.dtype),
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.num_experts_per_tok)
+    gates = gates / jnp.maximum(jnp.sum(gates, -1, keepdims=True), 1e-9)
+    # Aux losses (Switch-style load balance + router z-loss).
+    E = cfg.num_experts
+    me = jnp.mean(probs, axis=0)                                  # [E]
+    one_hot_top1 = jax.nn.one_hot(idx[:, 0], E, dtype=jnp.float32)
+    ce = jnp.mean(one_hot_top1, axis=0)
+    lb = E * jnp.sum(me * ce)
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    aux = {"load_balance": lb * cfg.load_balance_loss,
+           "router_z": z * cfg.router_z_loss}
+    return gates.astype(jnp.float32), idx.astype(jnp.int32), probs, aux
+
+
+def _expert_ffn(params: Params, xb: jax.Array, activation: str) -> jax.Array:
+    """xb: [E, C, d] → [E, C, d] batched expert matmuls."""
+    dt = xb.dtype
+    up = jnp.einsum("ecd,edf->ecf", xb, params["w_in"].astype(dt))
+    if "w_gate" in params:
+        gate = jnp.einsum("ecd,edf->ecf", xb, params["w_gate"].astype(dt))
+        h = mlp_act(gate, up, activation)
+    else:
+        h = mlp_act(up, None, activation)
+    return jnp.einsum("ecf,efd->ecd", h.astype(dt),
+                      params["w_out"].astype(dt)).astype(dt)
+
+
+def capacity(num_tokens: int, cfg: MoEConfig) -> int:
+    c = int(num_tokens * cfg.num_experts_per_tok * cfg.capacity_factor
+            / cfg.num_experts)
+    return max(8, -(-c // 8) * 8)
+
+
+def moe_apply_sorted(params: Params, x: jax.Array, cfg: MoEConfig,
+                     activation: str = "swiglu"
+                     ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Per-row sort-based dispatch: each batch row sorts and dispatches its
+    own tokens (axis=-1 sort → NO cross-data-shard collectives under GSPMD;
+    the global-sort variant cost grok-1 ~8 TB/device of all-reduce in the
+    dry-run — see EXPERIMENTS.md §Perf iteration 2). Capacity is per
+    (row, expert); over-capacity tokens are dropped (residual keeps them).
+    """
+    B, S, d = x.shape
+    k = cfg.num_experts_per_tok
+    E = cfg.num_experts
+    T = S * k
+    x2d = x.reshape(B * S, d)
+    gates, idx, _, aux = _router(params, x2d, cfg)
+    gates = gates.reshape(B, T)
+    e_flat = idx.reshape(B, T)
+    tok_flat = jnp.repeat(jnp.arange(S, dtype=jnp.int32), k)[None]
+    tok_flat = jnp.broadcast_to(tok_flat, (B, T))
+
+    C = capacity(S, cfg)
+    order = jnp.argsort(e_flat, axis=-1, stable=True)
+    e_sorted = jnp.take_along_axis(e_flat, order, -1)
+    tok_sorted = jnp.take_along_axis(tok_flat, order, -1)
+
+    counts = jnp.sum(jax.nn.one_hot(e_flat, E, dtype=jnp.int32), axis=1)
+    starts = jnp.cumsum(counts, axis=-1) - counts               # [B,E]
+    pos = jnp.arange(T, dtype=jnp.int32)[None] \
+        - jnp.take_along_axis(starts, e_sorted, -1)
+    keep = pos < C
+    buf_idx = jnp.where(keep, e_sorted * C + pos, E * C)        # [B,T]
+    bi = jnp.arange(B)[:, None]
+
+    # GATHER-ONLY dispatch: the only scatter is of int32 token indices —
+    # scattering [B,T,d] activations lowered to a u32[B,T,d] all-gather
+    # under GSPMD (≈50 GB/layer on grok-1; EXPERIMENTS.md §Perf iter 3).
+    idx_buf = jnp.full((B, E * C + 1), S, jnp.int32)
+    idx_buf = idx_buf.at[bi, buf_idx].set(tok_sorted)[:, :E * C]
+    valid = (idx_buf < S)[..., None].astype(x.dtype)
+    x_buf = jnp.take_along_axis(x, jnp.minimum(idx_buf, S - 1)[..., None], 1)
+    x_buf = x_buf * valid
+    # keep expert buffers sharded like the batch (stop GSPMD gathering them)
+    from jax.sharding import PartitionSpec as _P
+    from repro.runtime.sharding import constrain as _constrain
+    x_buf = _constrain(x_buf, _P(("pod", "data"), None, None))
+    y_buf = _expert_ffn_batched(params, x_buf.reshape(B, E, C, d), activation)
+    y_buf = _constrain(y_buf.reshape(B, E * C, d), _P(("pod", "data"), None, None))
+
+    # back to token-major via the inverse permutation (pure gathers)
+    inv = jnp.argsort(order, axis=-1)
+    buf_pos = jnp.take_along_axis(buf_idx, inv, -1)             # [B,T]
+    keep_tok = jnp.take_along_axis(keep, inv, -1)
+    y_slots = jnp.take_along_axis(y_buf,
+                                  jnp.minimum(buf_pos, E * C - 1)[..., None], 1)
+    w_tok = (gates * keep_tok.astype(jnp.float32))[..., None].astype(x.dtype)
+    y_tok = (y_slots * w_tok).reshape(B, S, k, d).sum(axis=2)
+
+    out = y_tok
+    if "shared" in params:
+        out = out + mlp_apply(params["shared"], x, activation)
+    aux["dropped_fraction"] = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    return out, aux
+
+
+def _expert_ffn_batched(params: Params, xb: jax.Array, activation: str
+                        ) -> jax.Array:
+    """xb: [B, E, C, d] → [B, E, C, d]"""
+    dt = xb.dtype
+    up = jnp.einsum("becd,edf->becf", xb, params["w_in"].astype(dt))
+    if "w_gate" in params:
+        gate = jnp.einsum("becd,edf->becf", xb, params["w_gate"].astype(dt))
+        h = mlp_act(gate, up, activation)
+    else:
+        h = mlp_act(up, None, activation)
+    return jnp.einsum("becf,efd->becd", h.astype(dt),
+                      params["w_out"].astype(dt)).astype(dt)
+
+
+def moe_apply_sorted_global(params: Params, x: jax.Array, cfg: MoEConfig,
+                            activation: str = "swiglu"
+                            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Global-sort variant (reference; collective-heavy under GSPMD)."""
+    B, S, d = x.shape
+    T = B * S
+    k = cfg.num_experts_per_tok
+    E = cfg.num_experts
+    x2d = x.reshape(T, d)
+    gates, idx, _, aux = _router(params, x2d, cfg)
+
+    C = capacity(T, cfg)
+    e_flat = idx.reshape(T * k)                                   # expert ids
+    tok_flat = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)      # token ids
+    g_flat = gates.reshape(T * k)
+
+    order = jnp.argsort(e_flat, stable=True)
+    e_sorted = e_flat[order]
+    tok_sorted = tok_flat[order]
+    g_sorted = g_flat[order]
+
+    # Position of each slot within its expert group.
+    counts = jnp.bincount(e_flat, length=E)                       # [E]
+    starts = jnp.cumsum(counts) - counts                          # exclusive
+    pos_in_e = jnp.arange(T * k, dtype=jnp.int32) - starts[e_sorted]
+    keep = pos_in_e < C
+
+    buf_idx = jnp.where(keep, e_sorted * C + pos_in_e, E * C)     # overflow row
+    x_gathered = x2d[tok_sorted] * keep[:, None].astype(x2d.dtype)
+    x_buf = jnp.zeros((E * C + 1, d), x2d.dtype).at[buf_idx].set(x_gathered)
+    y_buf = _expert_ffn(params, x_buf[:E * C].reshape(E, C, d), activation)
+
+    y_slots = y_buf.reshape(E * C, d)[jnp.minimum(buf_idx, E * C - 1)]
+    y_slots = y_slots * (g_sorted * keep.astype(jnp.float32))[:, None].astype(x2d.dtype)
+    out = jnp.zeros((T, d), x2d.dtype).at[tok_sorted].add(y_slots)
+
+    if "shared" in params:
+        out = out + mlp_apply(params["shared"], x2d, activation)
+    aux["dropped_fraction"] = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    return out.reshape(B, S, d), aux
+
+
+def moe_apply_dense(params: Params, x: jax.Array, cfg: MoEConfig,
+                    activation: str = "swiglu"
+                    ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Oracle: every expert on every token, gated combine. Test-only."""
+    B, S, d = x.shape
+    T = B * S
+    x2d = x.reshape(T, d)
+    gates, idx, probs, aux = _router(params, x2d, cfg)
+    E = cfg.num_experts
+    combine = jnp.zeros((T, E), jnp.float32)
+    for j in range(cfg.num_experts_per_tok):
+        combine = combine + jax.nn.one_hot(idx[:, j], E) * gates[:, j:j + 1]
+    y_all = _expert_ffn(params, jnp.broadcast_to(x2d, (E, T, d)).transpose(0, 1, 2),
+                        activation)                               # [E,T,d]
+    out = jnp.einsum("te,etd->td", combine.astype(x2d.dtype), y_all)
+    if "shared" in params:
+        out = out + mlp_apply(params["shared"], x2d, activation)
+    aux["dropped_fraction"] = jnp.zeros(())
+    return out.reshape(B, S, d), aux

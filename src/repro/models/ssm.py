@@ -1,0 +1,221 @@
+"""Mamba2 (SSD — state-space duality) layer.
+
+Implements the chunked SSD algorithm (Dao & Gu, 2024) in pure JAX for
+training/prefill, and the O(1)-per-token recurrence for decode. The Pallas
+kernel in ``repro.kernels.ssd`` accelerates the intra-chunk part on TPU.
+
+Layer layout (n_groups = 1):
+  in_proj:  d → [z (d_in), x (d_in), B (N), C (N), dt (H)]
+  conv1d:   depthwise causal conv width W over the (x, B, C) channels
+  SSD:      h_t = a_t h_{t-1} + dt_t · x_t ⊗ B_t ;  y_t = C_t · h_t + D x_t
+            with a_t = exp(-exp(A_log) · dt_t), dt_t = softplus(raw + bias)
+  gate:     y = RMSNorm(y) * silu(z), then out_proj: d_in → d
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.common import ParamSpec, rms_norm
+
+Params = Dict[str, Any]
+
+
+def ssm_dims(d_model: int, cfg: SSMConfig) -> Tuple[int, int, int]:
+    d_in = cfg.expand * d_model
+    nheads = cfg.num_heads or max(1, d_in // cfg.head_dim)
+    return d_in, nheads, cfg.head_dim
+
+
+def ssm_schema(d_model: int, cfg: SSMConfig) -> Params:
+    d_in, H, P = ssm_dims(d_model, cfg)
+    N = cfg.state_dim
+    conv_ch = d_in + 2 * N
+    return {
+        "in_proj": ParamSpec((d_model, 2 * d_in + 2 * N + H), ("embed", "mlp")),
+        "conv_w": ParamSpec((cfg.conv_width, conv_ch), (None, "mlp"), scale=0.5),
+        "conv_b": ParamSpec((conv_ch,), ("mlp",), init="zeros"),
+        "A_log": ParamSpec((H,), (None,), init="zeros"),
+        "D": ParamSpec((H,), (None,), init="ones"),
+        "dt_bias": ParamSpec((H,), (None,), init="zeros"),
+        "norm": {"scale": ParamSpec((d_in,), ("mlp",), init="zeros")},
+        "out_proj": ParamSpec((d_in, d_model), ("mlp", "embed")),
+    }
+
+
+def _split_proj(params: Params, u: jax.Array, d_in: int, N: int, H: int):
+    zxbcdt = jnp.einsum("...d,de->...e", u, params["in_proj"].astype(u.dtype),
+                        preferred_element_type=jnp.float32).astype(u.dtype)
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in:d_in + d_in + 2 * N]
+    dt_raw = zxbcdt[..., d_in + d_in + 2 * N:]
+    return z, xBC, dt_raw
+
+
+def _causal_conv(params: Params, xBC: jax.Array,
+                 conv_state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. xBC: [B,S,Cch]. Returns (out, new_conv_state).
+
+    ``conv_state``: [B, W-1, Cch] holds the last W-1 inputs for decode.
+    """
+    W = params["conv_w"].shape[0]
+    B, S, Cch = xBC.shape
+    if conv_state is None:
+        conv_state = jnp.zeros((B, W - 1, Cch), xBC.dtype)
+    padded = jnp.concatenate([conv_state, xBC], axis=1)           # [B,S+W-1,C]
+    out = jnp.zeros((B, S, Cch), jnp.float32)
+    for i in range(W):
+        out = out + padded[:, i:i + S].astype(jnp.float32) * \
+            params["conv_w"][i].astype(jnp.float32)
+    out = out + params["conv_b"].astype(jnp.float32)
+    out = jax.nn.silu(out).astype(xBC.dtype)
+    new_state = padded[:, S:]
+    return out, new_state
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, chunk: int,
+                h0: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x:  [B,S,H,P]  (already multiplied by nothing; dt applied inside)
+    dt: [B,S,H]    (softplus'd, positive)
+    A:  [H]        (negative decay rates)
+    Bm, Cm: [B,S,N]
+    Returns (y [B,S,H,P], h_final [B,H,P,N]).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    S_orig = S
+    nc = -(-S // chunk)
+    pad = nc * chunk - S
+    if pad:
+        # Zero padding is exact: dt=0 → decay exp(0)=1 and contribution 0,
+        # so the final state and the unpadded outputs are unchanged.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        S = nc * chunk
+
+    xc = x.reshape(Bsz, nc, chunk, H, P)
+    dtc = dt.reshape(Bsz, nc, chunk, H)
+    Bc = Bm.reshape(Bsz, nc, chunk, N)
+    Cc = Cm.reshape(Bsz, nc, chunk, N)
+
+    # log decay per step: log a_t = A * dt_t  (A < 0)
+    la = dtc * A[None, None, None, :]                             # [B,nc,Q,H]
+    L = jnp.cumsum(la, axis=2)                                    # inclusive cumsum
+    Ltot = L[:, :, -1, :]                                         # [B,nc,H]
+
+    # --- intra-chunk (quadratic within chunk) ----------------------------
+    # M[q,k] = C_q·B_k * exp(L_q - L_k) * dt_k  for k <= q
+    CB = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc,
+                    preferred_element_type=jnp.float32)           # [B,nc,Q,Q]
+    diff = L[:, :, :, None, :] - L[:, :, None, :, :]              # [B,nc,Q,Q,H]
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    M = CB[..., None] * decay * dtc[:, :, None, :, :]             # [B,nc,Q,K,H]
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", M, xc.astype(jnp.float32))
+
+    # --- chunk summaries ---------------------------------------------------
+    # S_c = sum_k exp(Ltot - L_k) dt_k x_k ⊗ B_k   → [B,nc,H,P,N]
+    w = jnp.exp(Ltot[:, :, None, :] - L) * dtc                    # [B,nc,Q,H]
+    Sc = jnp.einsum("bcqh,bcqhp,bcqn->bchpn", w, xc.astype(jnp.float32), Bc)
+
+    # --- inter-chunk recurrence over chunk index ---------------------------
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+
+    def step(h, inp):
+        Sc_c, Ltot_c = inp                                        # [B,H,P,N],[B,H]
+        h_new = h * jnp.exp(Ltot_c)[:, :, None, None] + Sc_c
+        return h_new, h                                           # emit h_prev
+
+    (h_final, h_prevs) = jax.lax.scan(
+        step, h0, (Sc.transpose(1, 0, 2, 3, 4), Ltot.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)                    # [B,nc,H,P,N]
+
+    # y_inter[q] = exp(L_q) * C_q · h_prev
+    y_inter = jnp.einsum("bcqh,bcqn,bchpn->bcqhp",
+                         jnp.exp(L), Cc, h_prevs)
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)[:, :S_orig]
+    return y.astype(x.dtype), h_final
+
+
+def ssd_recurrent_step(h: jax.Array, x: jax.Array, dt: jax.Array, A: jax.Array,
+                       Bm: jax.Array, Cm: jax.Array
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """One decode step. h: [B,H,P,N]; x: [B,H,P]; dt: [B,H]; Bm,Cm: [B,N]."""
+    a = jnp.exp(dt * A[None, :])                                  # [B,H]
+    h_new = h * a[:, :, None, None] + \
+        (dt[:, :, None] * x.astype(jnp.float32))[..., None] * Bm[:, None, None, :]
+    y = jnp.einsum("bhpn,bn->bhp", h_new, Cm)
+    return h_new, y.astype(x.dtype)
+
+
+def ssm_apply(params: Params, u: jax.Array, cfg: SSMConfig, d_model: int,
+              state: Optional[Params] = None, use_kernel: bool = False
+              ) -> Tuple[jax.Array, Params]:
+    """Full Mamba2 layer. u: [B,S,d]. ``state`` enables streaming decode:
+    {"h": [B,H,P,N], "conv": [B,W-1,Cch]}. Returns (out, new_state)."""
+    B, S, d = u.shape
+    d_in, H, P = ssm_dims(d_model, cfg)
+    N = cfg.state_dim
+    z, xBC, dt_raw = _split_proj(params, u, d_in, N, H)
+    conv_state = state["conv"] if state is not None else None
+    xBC, new_conv = _causal_conv(params, xBC, conv_state)
+    xs = xBC[..., :d_in].reshape(B, S, H, P)
+    Bm = xBC[..., d_in:d_in + N]
+    Cm = xBC[..., d_in + N:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # [B,S,H]
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))              # [H]
+
+    if S == 1 and state is not None:
+        h_new, y = ssd_recurrent_step(state["h"], xs[:, 0], dt[:, 0], A,
+                                      Bm[:, 0].astype(jnp.float32),
+                                      Cm[:, 0].astype(jnp.float32))
+        y = y[:, None]
+    else:
+        h0 = state["h"] if state is not None else None
+        if use_kernel:
+            from repro.kernels.ssd import ops as ssd_ops
+            y, h_new = ssd_ops.ssd(xs, dt, A, Bm.astype(jnp.float32),
+                                   Cm.astype(jnp.float32), cfg.chunk_size)
+        else:
+            y, h_new = ssd_chunked(xs, dt, A, Bm.astype(jnp.float32),
+                                   Cm.astype(jnp.float32), cfg.chunk_size, h0)
+
+    y = y + xs * params["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(B, S, d_in)
+    y = rms_norm(y, params["norm"]["scale"]) * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(y.dtype),
+                     preferred_element_type=jnp.float32).astype(u.dtype)
+    new_state = {"h": h_new, "conv": new_conv}
+    return out, new_state
+
+
+def init_ssm_state(batch: int, d_model: int, cfg: SSMConfig,
+                   dtype: jnp.dtype) -> Params:
+    d_in, H, P = ssm_dims(d_model, cfg)
+    N = cfg.state_dim
+    return {
+        "h": jnp.zeros((batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, d_in + 2 * N), dtype),
+    }
+
+
+def ssm_state_spec(batch: int, d_model: int, cfg: SSMConfig,
+                   dtype: jnp.dtype) -> Params:
+    d_in, H, P = ssm_dims(d_model, cfg)
+    N = cfg.state_dim
+    return {
+        "h": jax.ShapeDtypeStruct((batch, H, P, N), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.conv_width - 1, d_in + 2 * N), dtype),
+    }

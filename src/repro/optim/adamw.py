@@ -1,0 +1,102 @@
+"""AdamW + LR schedules + global-norm clipping (no optax offline).
+
+Optimizer state is a pytree mirroring params — under the fsdp2d sharding
+profile it inherits the fully-2D-sharded specs, i.e. ZeRO-sharded for free.
+``opt_dtype`` allows bf16 moments for the 314B-class models (see DESIGN.md
+memory budget)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+Params = Any
+
+
+def init_opt_state(params: Params, opt_dtype: jnp.dtype = jnp.float32) -> Dict:
+    zeros = lambda p: jnp.zeros(p.shape, opt_dtype)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_opt_state(params: Params, opt_dtype: jnp.dtype = jnp.float32) -> Dict:
+    sds = lambda p: jax.ShapeDtypeStruct(p.shape, opt_dtype)
+    return {"m": jax.tree.map(sds, params),
+            "v": jax.tree.map(sds, params),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def lr_at(tc: TrainConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1.0) / max(1, tc.warmup_steps))
+    frac = jnp.clip((step - tc.warmup_steps)
+                    / max(1, tc.total_steps - tc.warmup_steps), 0.0, 1.0)
+    if tc.schedule == "cosine":
+        decay = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    elif tc.schedule == "linear":
+        decay = 1.0 - frac
+    else:
+        decay = jnp.asarray(1.0)
+    return tc.learning_rate * warm * decay
+
+
+def global_norm(tree: Params) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads: Params, max_norm: float
+                        ) -> Tuple[Params, jax.Array]:
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-12))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype),
+                        grads), g
+
+
+def adamw_update(params: Params, grads: Params, opt_state: Dict,
+                 tc: TrainConfig,
+                 trainable: Optional[Params] = None
+                 ) -> Tuple[Params, Dict, Dict[str, jax.Array]]:
+    """One AdamW step. ``trainable``: optional bool pytree freezing leaves
+    (used by the FlexiDiT LoRA recipe)."""
+    step = opt_state["step"] + 1
+    lr = lr_at(tc, step)
+    if tc.grad_clip > 0:
+        grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+    b1, b2, eps = tc.beta1, tc.beta2, tc.eps
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v, t=True):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        mh = m_new / c1
+        vh = v_new / c2
+        delta = lr * (mh / (jnp.sqrt(vh) + eps) + tc.weight_decay
+                      * p.astype(jnp.float32))
+        p_new = (p.astype(jnp.float32) - delta).astype(p.dtype)
+        if t is not True:    # traced/bool leaf freezing
+            keep = jnp.asarray(t, jnp.bool_)
+            p_new = jnp.where(keep, p_new, p)
+            m_new = jnp.where(keep, m_new, m.astype(jnp.float32))
+            v_new = jnp.where(keep, v_new, v.astype(jnp.float32))
+        return p_new, m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    if trainable is None:
+        out = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"])
+    else:
+        out = jax.tree.map(upd, params, grads, opt_state["m"],
+                           opt_state["v"], trainable)
+    p_new = jax.tree.map(lambda x: x[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    m_new = jax.tree.map(lambda x: x[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    v_new = jax.tree.map(lambda x: x[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_state = {"m": m_new, "v": v_new, "step": step}
+    return p_new, new_state, {"lr": lr, "grad_norm": gnorm}

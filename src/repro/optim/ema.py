@@ -1,0 +1,21 @@
+"""Exponential moving average of parameters (paper trains with EMA 0.9999)."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def init_ema(params: Any) -> Any:
+    return jax.tree.map(lambda p: p.astype(jnp.float32), params)
+
+
+def ema_update(ema: Any, params: Any, rate: float = 0.9999) -> Any:
+    return jax.tree.map(
+        lambda e, p: e * rate + p.astype(jnp.float32) * (1.0 - rate),
+        ema, params)
+
+
+def ema_params(ema: Any, like: Any) -> Any:
+    return jax.tree.map(lambda e, p: e.astype(p.dtype), ema, like)

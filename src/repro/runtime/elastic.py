@@ -1,0 +1,56 @@
+"""Elastic scaling: replan the mesh for a changed device count and restore
+the latest checkpoint with the new shardings (the checkpointer already
+loads to host and ``device_put``s onto the new mesh)."""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def plan_mesh_shape(n_devices: int, model_parallel: int = 0
+                    ) -> Tuple[int, int]:
+    """(data, model) factors for an arbitrary surviving device count.
+
+    Keeps model-parallel width if it still divides; otherwise the largest
+    power-of-two divisor ≤ the previous width.
+    """
+    if model_parallel <= 0:
+        model_parallel = 1
+    while model_parallel > 1 and n_devices % model_parallel != 0:
+        model_parallel //= 2
+    return n_devices // model_parallel, model_parallel
+
+
+def make_elastic_mesh(n_devices: Optional[int] = None,
+                      model_parallel: int = 1):
+    devs = jax.devices()
+    n = n_devices if n_devices is not None else len(devs)
+    data, model = plan_mesh_shape(n, model_parallel)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         devices=devs[:data * model])
+
+
+def elastic_restore(checkpointer, cfg, mesh, profile: str = "auto",
+                    step: Optional[int] = None):
+    """Restore a checkpoint onto a (possibly different) mesh."""
+    from jax.sharding import NamedSharding
+    from repro.models import dit as dit_mod
+    from repro.models import lm
+    from repro.models.common import spec_tree
+    from repro.runtime import sharding as shd
+
+    rules = shd.rules_for(cfg, mesh, profile)
+    sizes = shd.axis_sizes(mesh)
+    schema = (dit_mod.dit_schema(cfg) if cfg.family == "dit"
+              else lm.lm_schema(cfg))
+    specs = spec_tree(schema, rules, sizes)
+    shardings = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    state, extra = checkpointer.restore(step)
+    if "params" in state:
+        state["params"] = jax.tree.map(
+            lambda a, s: jax.device_put(a, s), state["params"], shardings)
+    return state, extra

@@ -1,0 +1,54 @@
+import os
+import sys
+from pathlib import Path
+
+# NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests
+# and benches must see 1 device (the 512-device flag is dryrun.py-only).
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import AttnConfig, DiTConfig, ModelConfig
+
+
+def pad_cache_seq(cache, extra: int):
+    """Pad only the KV caches ('k'/'v' keys) along the sequence dim."""
+    def rec(node):
+        if isinstance(node, dict):
+            return {k: (jnp.pad(v, [(0, 0)] * (v.ndim - 3)
+                                + [(0, extra), (0, 0), (0, 0)])
+                        if k in ("k", "v") else rec(v))
+                    for k, v in node.items()}
+        return node
+    return rec(cache)
+
+
+@pytest.fixture(scope="session")
+def tiny_dit_cfg() -> ModelConfig:
+    return ModelConfig(
+        name="tiny-dit", family="dit", num_layers=2, d_model=64, d_ff=256,
+        vocab_size=0, attn=AttnConfig(4, 4, 16, use_rope=False),
+        dit=DiTConfig(latent_shape=(1, 16, 16, 4), patch_size=(1, 2, 2),
+                      flex_patch_sizes=(), underlying_patch_size=(1, 2, 2),
+                      conditioning="class", num_classes=10),
+        mlp_activation="gelu", norm_type="layernorm",
+        param_dtype="float32", compute_dtype="float32", remat="none",
+        max_seq_len=256)
+
+
+@pytest.fixture(scope="session")
+def trained_like_dit(tiny_dit_cfg):
+    """A tiny DiT with non-degenerate de-embed / adaLN gates (as if trained)."""
+    from repro.models import dit as dit_mod
+    key = jax.random.PRNGKey(0)
+    params = dit_mod.init_dit(tiny_dit_cfg, key)
+    params["deembed"]["w_flex"] = jax.random.normal(
+        jax.random.fold_in(key, 1), params["deembed"]["w_flex"].shape) * 0.1
+    params["final"]["ada"]["w"] = jax.random.normal(
+        jax.random.fold_in(key, 2), params["final"]["ada"]["w"].shape) * 0.05
+    params["blocks"]["ada"]["w"] = jax.random.normal(
+        jax.random.fold_in(key, 3), params["blocks"]["ada"]["w"].shape) * 0.05
+    return params

@@ -1,0 +1,86 @@
+"""Diffusion schedule identities + samplers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.diffusion import sampler, schedule as sch
+
+
+def test_q_sample_interpolates():
+    s = sch.linear_schedule(100)
+    x0 = jnp.ones((2, 4, 4, 1))
+    noise = jnp.zeros_like(x0)
+    t = jnp.asarray([0, 99])
+    x_t = sch.q_sample(s, x0, t, noise)
+    d = s._derived
+    np.testing.assert_allclose(np.asarray(x_t[0]).mean(),
+                               d["sqrt_acp"][0], atol=1e-5)
+    np.testing.assert_allclose(np.asarray(x_t[1]).mean(),
+                               d["sqrt_acp"][99], atol=1e-5)
+
+
+def test_eps_x0_roundtrip():
+    s = sch.linear_schedule(100)
+    key = jax.random.PRNGKey(0)
+    x0 = jax.random.normal(key, (2, 8, 8, 3))
+    eps = jax.random.normal(jax.random.fold_in(key, 1), x0.shape)
+    t = jnp.asarray([10, 70])
+    x_t = sch.q_sample(s, x0, t, eps)
+    x0_hat = sch.predict_x0_from_eps(s, x_t, t, eps)
+    np.testing.assert_allclose(np.asarray(x0_hat), np.asarray(x0), atol=1e-4)
+
+
+def test_posterior_at_t1_recovers_x0_direction():
+    s = sch.linear_schedule(100)
+    x0 = jnp.ones((1, 4, 4, 1)) * 2.0
+    x_t = x0 * 0.5
+    mean = sch.posterior_mean(s, x0, x_t, jnp.asarray([1]))
+    assert np.isfinite(np.asarray(mean)).all()
+
+
+def test_respaced_descending_unique():
+    ts = sch.respaced_timesteps(1000, 50)
+    assert len(ts) == 50 and ts[0] == 999 and ts[-1] == 0
+    assert (np.diff(ts) < 0).all()
+
+
+def _const_eps_fn(x, t):
+    return jnp.zeros_like(x), None
+
+
+def test_ddim_deterministic():
+    s = sch.linear_schedule(100)
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 4, 4, 1))
+    ts = sch.respaced_timesteps(100, 10)
+    a = sampler.ddim_phase(_const_eps_fn, s, x, ts, jax.random.PRNGKey(1))
+    b = sampler.ddim_phase(_const_eps_fn, s, x, ts, jax.random.PRNGKey(2))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_ddpm_zero_eps_contracts_toward_x0_scale():
+    s = sch.linear_schedule(100)
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 4, 4, 1)) * 3
+    ts = sch.respaced_timesteps(100, 100)
+    out = sampler.ddpm_phase(_const_eps_fn, s, x, ts, jax.random.PRNGKey(1))
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_phased_equals_single_phase_when_same_fn():
+    """Chaining phases with the same eps_fn == one phase over all steps."""
+    s = sch.linear_schedule(50)
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 4, 4, 1))
+    ts = sch.respaced_timesteps(50, 10)
+    whole = sampler.ddim_phase(_const_eps_fn, s, x, ts, jax.random.PRNGKey(9))
+    parts = sampler.sample_phased(
+        [(_const_eps_fn, ts[:6]), (_const_eps_fn, ts[6:])], s, x,
+        jax.random.PRNGKey(9), solver="ddim")
+    np.testing.assert_allclose(np.asarray(parts), np.asarray(whole), atol=1e-5)
+
+
+def test_dpm2_runs():
+    s = sch.linear_schedule(100)
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 4, 4, 1))
+    ts = sch.respaced_timesteps(100, 8)
+    out = sampler.dpm2_phase(_const_eps_fn, s, x, ts, jax.random.PRNGKey(1))
+    assert np.isfinite(np.asarray(out)).all()

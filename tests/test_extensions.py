@@ -1,0 +1,165 @@
+"""Beyond-paper extensions: flow matching (paper App. A: 'applies out of
+the box'), the adaptive per-sample scheduler (paper future work), and the
+int8 KV cache."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import AttnConfig, ModelConfig
+from repro.core.adaptive import adaptive_sample, make_mode_eps_fns
+from repro.core import flexify
+from repro.diffusion import flow, schedule as sch
+from repro.models import lm
+
+
+# ---------------------------------------------------------------------------
+# Flow matching
+
+
+def test_flow_interpolation_endpoints():
+    x0 = jnp.ones((2, 4, 4, 1))
+    eps = -jnp.ones((2, 4, 4, 1))
+    np.testing.assert_allclose(
+        np.asarray(flow.interpolate(x0, eps, jnp.zeros(2))), np.asarray(x0))
+    np.testing.assert_allclose(
+        np.asarray(flow.interpolate(x0, eps, jnp.ones(2))), np.asarray(eps))
+
+
+def test_flow_euler_exact_for_linear_field():
+    """With the TRUE velocity v = ε − x0 (constant along the path), Euler
+    integration from τ=1 recovers x0 exactly in one step or many."""
+    key = jax.random.PRNGKey(0)
+    x0 = jax.random.normal(key, (2, 4, 4, 1))
+    eps = jax.random.normal(jax.random.fold_in(key, 1), x0.shape)
+    v_true = flow.velocity_target(x0, eps)
+
+    def v_fn(x, tau):
+        return v_true
+
+    for steps in (1, 4, 16):
+        taus = flow.tau_ladder(steps)
+        out = flow.euler_phase(v_fn, eps, taus)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(x0),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_flow_phased_split_invariant():
+    key = jax.random.PRNGKey(1)
+    x_T = jax.random.normal(key, (2, 4, 4, 1))
+
+    def v_fn(x, tau):
+        return jnp.tanh(x) * (1.0 + tau.reshape(-1, 1, 1, 1))
+
+    taus = flow.tau_ladder(8)
+    whole = flow.euler_phase(v_fn, x_T, taus)
+    parts = flow.sample_flow_phased(
+        [(v_fn, taus[:5]), (v_fn, taus[4:])], x_T)
+    np.testing.assert_allclose(np.asarray(parts), np.asarray(whole),
+                               atol=1e-5)
+
+
+def test_flow_heun_more_accurate_than_euler():
+    """Heun (2nd order) beats Euler on a curved field at equal step count."""
+    key = jax.random.PRNGKey(2)
+    x_T = jax.random.normal(key, (2, 8))
+
+    def v_fn(x, tau):                     # τ-dependent → curved trajectories
+        return -x * (2.0 * tau.reshape(-1, 1))
+
+    # dense-Euler reference ≈ ground truth
+    ref = flow.euler_phase(v_fn, x_T, flow.tau_ladder(512))
+    e = flow.euler_phase(v_fn, x_T, flow.tau_ladder(8))
+    h = flow.heun_phase(v_fn, x_T, flow.tau_ladder(8))
+    err_e = float(jnp.abs(e - ref).max())
+    err_h = float(jnp.abs(h - ref).max())
+    assert err_h < err_e, (err_h, err_e)
+
+
+def test_flexidit_flow_sampling(tiny_dit_cfg, trained_like_dit):
+    """FlexiDiT weak→powerful schedule under flow matching end-to-end."""
+    fparams, fcfg = flexify(trained_like_dit, tiny_dit_cfg, [(1, 4, 4)])
+    cond = jnp.asarray([1, 2])
+    taus = flow.tau_ladder(8)
+    phases = flow.split_tau_ladder(taus, [(1, 5), (0, 3)])
+    v_fns = {m: flow.make_flow_v_fn(fparams, fcfg, cond, mode=m)
+             for m in (0, 1)}
+    x_T = jax.random.normal(jax.random.PRNGKey(3), (2, 1, 16, 16, 4))
+    out = flow.sample_flow_phased([(v_fns[m], t) for m, t in phases], x_T)
+    assert out.shape == x_T.shape
+    assert np.isfinite(np.asarray(out)).all()
+
+
+# ---------------------------------------------------------------------------
+# Adaptive scheduler
+
+
+def test_adaptive_sampler_switches_and_saves_flops(tiny_dit_cfg,
+                                                   trained_like_dit):
+    fparams, fcfg = flexify(trained_like_dit, tiny_dit_cfg, [(1, 4, 4)])
+    sched = sch.linear_schedule(100)
+    ts = sch.respaced_timesteps(100, 10)
+    cond = jnp.asarray([1, 2])
+    null = jnp.asarray([10, 10])
+    fns = make_mode_eps_fns(fparams, fcfg, cond, null, cfg_scale=1.5)
+    x_T = jax.random.normal(jax.random.PRNGKey(4), (2, 1, 16, 16, 4))
+    res = adaptive_sample(fns, sched, x_T, ts, jax.random.PRNGKey(5), fcfg,
+                          threshold=0.5, probe_every=2)
+    assert np.isfinite(np.asarray(res.x0)).all()
+    assert 0 <= res.switch_step <= len(ts)
+    assert len(res.gaps) >= 1
+    # a zero threshold must switch immediately (all-powerful + probes)
+    res0 = adaptive_sample(fns, sched, x_T, ts, jax.random.PRNGKey(5), fcfg,
+                           threshold=0.0)
+    assert res0.switch_step == 0
+    # an infinite threshold never switches → cheapest
+    res_inf = adaptive_sample(fns, sched, x_T, ts, jax.random.PRNGKey(5),
+                              fcfg, threshold=1e9)
+    assert res_inf.switch_step == len(ts)
+    assert res_inf.flops < res0.flops
+
+
+# ---------------------------------------------------------------------------
+# int8 KV cache
+
+
+@pytest.mark.parametrize("family", ["dense", "gqa"])
+def test_int8_kv_cache_close_to_bf16(family):
+    kv = 4 if family == "dense" else 2
+    cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=64,
+                      d_ff=128, vocab_size=97,
+                      attn=AttnConfig(4, kv, 16), param_dtype="float32",
+                      compute_dtype="float32", remat="none", max_seq_len=32)
+    qcfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    key = jax.random.PRNGKey(0)
+    params = lm.init_params(cfg, key)
+    B, S = 2, 10
+    tokens = jax.random.randint(key, (B, S), 0, 97)
+    cache_q = lm.init_cache(qcfg, B, S)
+    cache_f = lm.init_cache(cfg, B, S)
+    assert cache_q["k"].dtype == jnp.int8 and "k_scale" in cache_q
+    max_rel = 0.0
+    for i in range(S):
+        tok = tokens[:, i:i + 1]
+        pos = jnp.full((B,), i, jnp.int32)
+        lq, cache_q = lm.decode_step(params, cache_q, tok, pos, qcfg)
+        lf, cache_f = lm.decode_step(params, cache_f, tok, pos, cfg)
+        rel = float(jnp.abs(lq - lf).max() / jnp.maximum(jnp.abs(lf).max(),
+                                                         1e-9))
+        max_rel = max(max_rel, rel)
+    assert max_rel < 0.05, max_rel
+
+
+def test_int8_cache_halves_storage():
+    cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=64,
+                      d_ff=128, vocab_size=97, attn=AttnConfig(4, 2, 16),
+                      param_dtype="bfloat16", compute_dtype="bfloat16",
+                      remat="none", max_seq_len=64)
+    qcfg = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    full = sum(x.size * x.dtype.itemsize
+               for x in jax.tree.leaves(lm.init_cache(cfg, 2, 64)))
+    quant = sum(x.size * x.dtype.itemsize
+                for x in jax.tree.leaves(lm.init_cache(qcfg, 2, 64)))
+    assert quant < 0.6 * full, (quant, full)

@@ -1,0 +1,86 @@
+"""Flexification invariants (§3.1 / §3.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import flexify, merge_lora, trainable_mask
+from repro.models import dit as dit_mod
+
+
+def _fwd(params, cfg, mode=0, key=jax.random.PRNGKey(7)):
+    B = 2
+    F, H, W, C = cfg.dit.latent_shape
+    x = jax.random.normal(key, (B, F, H, W, C))
+    t = jnp.asarray([10.0, 500.0])
+    y = jnp.asarray([1, 3])
+    return dit_mod.dit_forward(params, x, t, y, cfg, mode=mode)
+
+
+def test_shared_recipe_mode0_preservation(tiny_dit_cfg, trained_like_dit):
+    base = _fwd(trained_like_dit, tiny_dit_cfg)
+    fparams, fcfg = flexify(trained_like_dit, tiny_dit_cfg, [(1, 4, 4)])
+    out0 = _fwd(fparams, fcfg, mode=0)
+    # shared recipe: exact up to float roundoff of the PI-resize lift
+    np.testing.assert_allclose(np.asarray(out0), np.asarray(base),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_lora_recipe_mode0_bit_exact(tiny_dit_cfg, trained_like_dit):
+    base = _fwd(trained_like_dit, tiny_dit_cfg)
+    lparams, lcfg = flexify(trained_like_dit, tiny_dit_cfg, [(1, 4, 4)],
+                            lora_rank=4)
+    out0 = _fwd(lparams, lcfg, mode=0)
+    np.testing.assert_array_equal(np.asarray(out0), np.asarray(base))
+
+
+def test_weak_mode_runs_and_differs(tiny_dit_cfg, trained_like_dit):
+    fparams, fcfg = flexify(trained_like_dit, tiny_dit_cfg, [(1, 4, 4)])
+    out0 = _fwd(fparams, fcfg, mode=0)
+    out1 = _fwd(fparams, fcfg, mode=1)
+    assert out1.shape == out0.shape
+    assert np.isfinite(np.asarray(out1)).all()
+    assert np.abs(np.asarray(out1) - np.asarray(out0)).max() > 1e-6
+
+
+def test_merged_lora_equals_unmerged(tiny_dit_cfg, trained_like_dit):
+    lparams, lcfg = flexify(trained_like_dit, tiny_dit_cfg, [(1, 4, 4)],
+                            lora_rank=4)
+    # give LoRA b some mass so the merge actually changes weights
+    lparams["blocks"]["lora"]["attn"]["wq"]["b"] = jax.random.normal(
+        jax.random.PRNGKey(5),
+        lparams["blocks"]["lora"]["attn"]["wq"]["b"].shape) * 0.1
+    unmerged = _fwd(lparams, lcfg, mode=1)
+    merged = merge_lora(lparams, lcfg, 1)
+    out = _fwd(merged, lcfg, mode=1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(unmerged),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_trainable_mask_recipes(tiny_dit_cfg, trained_like_dit):
+    lparams, _ = flexify(trained_like_dit, tiny_dit_cfg, [(1, 4, 4)],
+                         lora_rank=4)
+    m = trainable_mask(lparams, "lora")
+    assert m["blocks"]["lora"]["attn"]["wq"]["a"] is True
+    assert m["blocks"]["attn"]["wq"] is False
+    assert m["embed"]["w_flex"] is False
+    assert m["embed_new"]["m1"]["w"] is True
+    m2 = trainable_mask(lparams, "shared")
+    assert all(jax.tree.leaves(m2))
+
+
+def test_video_temporal_flexify(tiny_dit_cfg, trained_like_dit):
+    """3D patches incl. temporal weak mode (paper §4.3)."""
+    import dataclasses
+    cfg = dataclasses.replace(
+        tiny_dit_cfg, dit=dataclasses.replace(
+            tiny_dit_cfg.dit, latent_shape=(4, 16, 16, 4)))
+    params = dit_mod.init_dit(cfg, jax.random.PRNGKey(0))
+    params["deembed"]["w_flex"] = jax.random.normal(
+        jax.random.PRNGKey(1), params["deembed"]["w_flex"].shape) * 0.1
+    base = _fwd(params, cfg)
+    fparams, fcfg = flexify(params, cfg, [(2, 2, 2), (1, 4, 4)])
+    out0 = _fwd(fparams, fcfg, mode=0)
+    np.testing.assert_allclose(np.asarray(out0), np.asarray(base), atol=1e-5)
+    for mode in (1, 2):
+        out = _fwd(fparams, fcfg, mode=mode)
+        assert out.shape == base.shape and np.isfinite(np.asarray(out)).all()

@@ -1,0 +1,98 @@
+"""Packing (App. B.2) + distillation (§3.2) + MMD (App. B.1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TrainConfig
+from repro.core import flexify, trainable_mask
+from repro.core.distill import make_distill_step
+from repro.core.mmd import bootstrap_mmd_loss, make_mmd_finetune_step, rbf_mmd2
+from repro.core.packing import packed_weak_forward, packing_cost, pack_ratio
+from repro.diffusion import schedule as sch
+from repro.models import dit as dit_mod
+
+
+def test_pack_ratio(tiny_dit_cfg, trained_like_dit):
+    _, fcfg = flexify(trained_like_dit, tiny_dit_cfg, [(1, 4, 4)])
+    assert pack_ratio(fcfg, 1) == 4
+
+
+def test_packed_equals_unpacked(tiny_dit_cfg, trained_like_dit):
+    fparams, fcfg = flexify(trained_like_dit, tiny_dit_cfg, [(1, 4, 4)])
+    B, r = 2, 4
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (r, B, 1, 16, 16, 4))
+    t = jnp.asarray([5.0, 50.0])
+    conds = jax.random.randint(key, (r, B), 0, 10)
+    packed = packed_weak_forward(fparams, x, t, conds, fcfg, mode=1)
+    for i in range(r):
+        single = dit_mod.dit_forward(fparams, x[i], t, conds[i], fcfg, mode=1)
+        np.testing.assert_allclose(np.asarray(packed[i]), np.asarray(single),
+                                   atol=2e-3, rtol=2e-3)
+
+
+def test_packing_cost_table(tiny_dit_cfg, trained_like_dit):
+    _, fcfg = flexify(trained_like_dit, tiny_dit_cfg, [(1, 4, 4)])
+    costs = packing_cost(fcfg, 1, n_images=8)
+    assert [c.approach for c in costs] == [1, 2, 3, 4]
+    # approach 2 (separate batched) has the lowest FLOPs (paper Fig. 12)
+    assert costs[1].flops <= costs[2].flops
+    assert costs[1].flops <= costs[3].flops
+    # approach 3/4 use fewer sequential calls (latency)
+    assert costs[3].nfe_calls < costs[0].nfe_calls
+
+
+def test_distill_trains_only_adapters(tiny_dit_cfg, trained_like_dit):
+    lparams, lcfg = flexify(trained_like_dit, tiny_dit_cfg, [(1, 4, 4)],
+                            lora_rank=4)
+    tc = TrainConfig(learning_rate=1e-3, warmup_steps=1, total_steps=20)
+    mask = trainable_mask(lparams, "lora")
+    from repro.optim import adamw
+    opt = adamw.init_opt_state(lparams)
+    step = jax.jit(make_distill_step(lcfg, tc, mode_weak=1, trainable=mask))
+    key = jax.random.PRNGKey(0)
+    batch = {"x0": jax.random.normal(key, (4, 1, 16, 16, 4)),
+             "cond": jax.random.randint(key, (4,), 0, 10)}
+    p, o, m0 = step(lparams, opt, batch, key)
+    for i in range(25):
+        p, o, m = step(p, o, batch, jax.random.fold_in(key, i))
+    assert float(m["distill_loss"]) < float(m0["distill_loss"])
+    np.testing.assert_array_equal(np.asarray(p["blocks"]["attn"]["wq"]),
+                                  np.asarray(lparams["blocks"]["attn"]["wq"]))
+    assert float(jnp.abs(p["blocks"]["lora"]["attn"]["wq"]["b"]).max()) > 0
+
+
+def test_rbf_mmd_separates_distributions():
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = jax.random.normal(k1, (64, 8))
+    y_same = jax.random.normal(k2, (64, 8))
+    y_diff = jax.random.normal(k3, (64, 8)) * 3.0 + 2.0
+    same = float(rbf_mmd2(x, y_same))
+    diff = float(rbf_mmd2(x, y_diff))
+    assert diff > same + 0.05
+
+
+def test_bootstrap_mmd_runs_and_is_finite(tiny_dit_cfg, trained_like_dit):
+    fparams, fcfg = flexify(trained_like_dit, tiny_dit_cfg, [(1, 4, 4)])
+    key = jax.random.PRNGKey(0)
+    batch = {"x0": jax.random.normal(key, (4, 1, 16, 16, 4)),
+             "cond": jax.random.randint(key, (4,), 0, 10)}
+    loss, aux = bootstrap_mmd_loss(fparams, batch, key, fcfg,
+                                   sch.linear_schedule(100))
+    assert np.isfinite(float(loss))
+
+
+def test_mmd_finetune_step(tiny_dit_cfg, trained_like_dit):
+    sparams, scfg = flexify(trained_like_dit, tiny_dit_cfg, [(1, 4, 4)])
+    tc = TrainConfig(learning_rate=1e-4, warmup_steps=1, total_steps=5)
+    from repro.optim import adamw
+    step = jax.jit(make_mmd_finetune_step(scfg, tc,
+                                          sched=sch.linear_schedule(100)))
+    key = jax.random.PRNGKey(1)
+    batch = {"x0": jax.random.normal(key, (4, 1, 16, 16, 4)),
+             "cond": jax.random.randint(key, (4,), 0, 10)}
+    opt = adamw.init_opt_state(sparams)
+    p, o, m = step(sparams, opt, batch, key)
+    assert np.isfinite(float(m["denoise_loss"]))
+    assert np.isfinite(float(m["mmd_loss"]))

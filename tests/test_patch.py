@@ -1,0 +1,49 @@
+"""Tokenization: patchify/unpatchify and shared-coordinate pos embeds."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import patch
+
+
+def test_patchify_roundtrip():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2, 4, 8, 8, 3))
+    for p in [(1, 2, 2), (2, 4, 4), (1, 4, 4), (4, 8, 8), (1, 1, 1)]:
+        t = patch.patchify(x, p)
+        assert t.shape[1] == patch.num_tokens(x.shape[1:], p)
+        x2 = patch.unpatchify(t, x.shape[1:], p)
+        np.testing.assert_allclose(np.asarray(x), np.asarray(x2), atol=1e-6)
+
+
+def test_patch_centers_shared_coordinate_frame():
+    """Weak-mode patch centers are the mean of the powerful-mode centers they
+    cover (paper: positions identified in original-image coordinates)."""
+    ls = (1, 8, 8, 4)
+    c2 = patch.patch_centers(ls, (1, 2, 2)).reshape(4, 4, 3)
+    c4 = patch.patch_centers(ls, (1, 4, 4)).reshape(2, 2, 3)
+    block = c2[:2, :2].reshape(-1, 3).mean(0)
+    np.testing.assert_allclose(c4[0, 0], block, atol=1e-6)
+
+
+def test_sincos_posembed_scales_with_coords():
+    ls = (1, 16, 16, 4)
+    e2 = patch.sincos_pos_embed(64, patch.patch_centers(ls, (1, 2, 2)))
+    e4 = patch.sincos_pos_embed(64, patch.patch_centers(ls, (1, 4, 4)))
+    assert e2.shape == (64, 64) and e4.shape == (16, 64)
+    assert np.isfinite(e2).all() and np.isfinite(e4).all()
+    # distinct positions get distinct embeddings
+    assert np.unique(np.round(e2, 5), axis=0).shape[0] == e2.shape[0]
+
+
+def test_embed_deembed_shapes():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2, 1, 16, 16, 4))
+    w = jax.random.normal(key, (16, 4, 32))
+    tok = patch.embed_tokens_flex(w, jnp.zeros(32), x, (1, 2, 2), (1, 4, 4))
+    assert tok.shape == (2, 64, 32)
+    wd = jax.random.normal(key, (32, 8, 16))
+    bd = jnp.zeros((8, 16))
+    out = patch.deembed_tokens_flex(wd, bd, tok, (1, 16, 16, 4), (1, 2, 2),
+                                    (1, 4, 4), 8)
+    assert out.shape == (2, 1, 16, 16, 8)

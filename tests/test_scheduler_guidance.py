@@ -1,0 +1,85 @@
+"""Inference scheduler FLOPs accounting (§3.3) + guidance math (§3.4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (FlexiSchedule, GuidanceConfig, dit_nfe_flops,
+                        flexify, make_eps_fn, relative_compute)
+from repro.core.guidance import SCALE_RULE
+from repro.models import dit as dit_mod
+
+
+def test_weak_nfe_much_cheaper(tiny_dit_cfg):
+    _, fcfg = flexify(dit_mod.init_dit(tiny_dit_cfg, jax.random.PRNGKey(0)),
+                      tiny_dit_cfg, [(1, 4, 4)])
+    f0 = dit_nfe_flops(fcfg, 0)
+    f1 = dit_nfe_flops(fcfg, 1)
+    # 4× fewer tokens ⇒ > 4× fewer FLOPs (paper §3.3: "compute required for
+    # the powerful model is > 4× compared to the weak model")
+    assert f0 / f1 > 4.0, f0 / f1
+
+
+def test_relative_compute_monotone(tiny_dit_cfg):
+    _, fcfg = flexify(dit_mod.init_dit(tiny_dit_cfg, jax.random.PRNGKey(0)),
+                      tiny_dit_cfg, [(1, 4, 4)])
+    T = 20
+    fracs = [relative_compute(fcfg, FlexiSchedule.weak_first(T, w))
+             for w in range(0, T + 1, 5)]
+    assert fracs[0] == pytest.approx(1.0)
+    assert all(a > b for a, b in zip(fracs, fracs[1:]))
+    # >40% savings at 60% weak steps (paper Fig. 6 regime)
+    assert relative_compute(fcfg, FlexiSchedule.weak_first(T, 12)) < 0.6
+
+
+def test_schedule_split():
+    ts = np.arange(19, -1, -1)
+    fs = FlexiSchedule.weak_first(20, 12)
+    phases = fs.split_timesteps(ts)
+    assert phases[0][0] == 1 and len(phases[0][1]) == 12
+    assert phases[1][0] == 0 and len(phases[1][1]) == 8
+    assert np.concatenate([p[1] for p in phases]).tolist() == ts.tolist()
+
+
+def test_scale_rule():
+    g = GuidanceConfig(scale=4.5, mode_cond=0, mode_uncond=1, kind="weak_cond")
+    s2 = g.effective_scale()
+    assert (1 - 4.5) / (1 - s2) == pytest.approx(SCALE_RULE)
+
+
+def test_vanilla_cfg_identity(tiny_dit_cfg, trained_like_dit):
+    """eps_cfg == e_u + s·(e_c − e_u) computed by hand."""
+    cfg = tiny_dit_cfg
+    params = trained_like_dit
+    B = 2
+    x = jax.random.normal(jax.random.PRNGKey(3), (B, 1, 16, 16, 4))
+    t = jnp.asarray([5.0, 50.0])
+    y = jnp.asarray([1, 2])
+    null = jnp.asarray([10, 10])
+    g = GuidanceConfig(scale=3.0, mode_cond=0, mode_uncond=0, kind="uncond")
+    eps_fn = make_eps_fn(params, cfg, y, null, g)
+    got, _ = eps_fn(x, t)
+    e_c = dit_mod.eps_prediction(dit_mod.dit_forward(params, x, t, y, cfg), cfg)
+    e_u = dit_mod.eps_prediction(dit_mod.dit_forward(params, x, t, null, cfg), cfg)
+    want = e_u + 3.0 * (e_c - e_u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_weak_guidance_uses_conditional(tiny_dit_cfg, trained_like_dit):
+    fparams, fcfg = flexify(trained_like_dit, tiny_dit_cfg, [(1, 4, 4)])
+    B = 2
+    x = jax.random.normal(jax.random.PRNGKey(4), (B, 1, 16, 16, 4))
+    t = jnp.asarray([5.0, 50.0])
+    y = jnp.asarray([1, 2])
+    null = jnp.asarray([10, 10])
+    g = GuidanceConfig(scale=3.0, mode_cond=0, mode_uncond=1, kind="weak_cond")
+    got, _ = eps = make_eps_fn(fparams, fcfg, y, null, g)(x, t)
+    e_c = dit_mod.eps_prediction(
+        dit_mod.dit_forward(fparams, x, t, y, fcfg, mode=0), fcfg)
+    e_w = dit_mod.eps_prediction(
+        dit_mod.dit_forward(fparams, x, t, y, fcfg, mode=1), fcfg)
+    s2 = g.effective_scale()
+    want = e_w + s2 * (e_c - e_w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
