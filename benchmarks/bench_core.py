@@ -86,17 +86,13 @@ def bench_fig2_spectral(T: int = 20, n: int = 24):
     sample change (L2 + SSIM): high-pass filtering matters more EARLY."""
     params, cfg, sched = C.get_flexidit()
     key = jax.random.PRNGKey(3)
-    from repro.core import GuidanceConfig, make_eps_fn
-    from repro.diffusion import sampler
+    from repro.pipeline import SamplingPlan
+    pipe = C.get_pipeline(params, cfg, sched)
     ts = sch.respaced_timesteps(sched.num_steps, T)
-    y = jnp.arange(n) % C.N_CLASSES
-    null = jnp.full((n,), C.N_CLASSES)
-    g = GuidanceConfig(scale=1.5, mode_cond=0, mode_uncond=0)
-    base_fn = make_eps_fn(params, cfg, y, null, g)
+    plan = SamplingPlan(T=T, budget=1.0, solver="ddim", guidance_scale=1.5)
 
-    def filtered_fn(step_idx, kind):
-        def fn(x, t):
-            eps, lv = base_fn(x, t)
+    def filtered(step_idx, kind):
+        def transform(eps, x, t):
             hit = jnp.any(t[0] == ts[step_idx])
             F = jnp.fft.fft2(eps.astype(jnp.complex64), axes=(2, 3))
             H, W = eps.shape[2], eps.shape[3]
@@ -106,19 +102,16 @@ def bench_fig2_spectral(T: int = 20, n: int = 24):
             mask = (rad <= 0.25) if kind == "low" else (rad > 0.25)
             Ff = jnp.where(mask, F, 0.0)
             eps_f = jnp.real(jnp.fft.ifft2(Ff, axes=(2, 3))).astype(eps.dtype)
-            return jnp.where(hit, eps_f, eps), lv
-        return fn
+            return jnp.where(hit, eps_f, eps)
+        return transform
 
     x_T = jax.random.normal(key, (n,) + cfg.dit.latent_shape)
-    base = np.asarray(sampler.sample_phased([(base_fn, ts)], sched, x_T,
-                                            jax.random.fold_in(key, 1),
-                                            solver="ddim"))
+    base = np.asarray(pipe.sample(plan, n, key, x_T=x_T).x0)
     results = {}
     for when, idx in (("early", 1), ("late", T - 2)):
         for kind in ("low", "high"):
-            out = np.asarray(sampler.sample_phased(
-                [(filtered_fn(idx, kind), ts)], sched, x_T,
-                jax.random.fold_in(key, 1), solver="ddim"))
+            out = np.asarray(pipe.sample(plan, n, key, x_T=x_T,
+                                         eps_transform=filtered(idx, kind)).x0)
             l2 = float(np.sqrt(((out - base) ** 2).mean()))
             s = C.ssim(out, base)
             results[(when, kind)] = (l2, s)

@@ -1,35 +1,31 @@
 """Beyond-paper extensions: adaptive per-sample scheduler (paper App. A
 future work) and flow-matching compatibility (paper: 'applied out of the
-box for flow matching')."""
+box for flow matching') — both driven through the unified pipeline API."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common as C
-from repro.core.adaptive import adaptive_sample, make_mode_eps_fns
-from repro.diffusion import flow, schedule as sch
+from repro.core import FlexiSchedule
+from repro.pipeline import AdaptiveBudget, SamplingPlan
 
 
 def bench_adaptive_scheduler(T: int = 20, n: int = 32):
     """Adaptive switch-point vs static schedules: quality at matched FLOPs."""
     params, cfg, sched = C.get_flexidit()
     ref, _ = C.reference_set(128)
-    ts = sch.respaced_timesteps(sched.num_steps, T)
-    cond = jnp.arange(n) % C.N_CLASSES
-    null = jnp.full((n,), C.N_CLASSES)
-    fns = make_mode_eps_fns(params, cfg, cond, null, cfg_scale=1.5)
+    pipe = C.get_pipeline(params, cfg, sched)
     key = jax.random.PRNGKey(77)
-    x_T = jax.random.normal(key, (n,) + cfg.dit.latent_shape)
     for thr in (0.2, 0.4, 0.8):
-        res = adaptive_sample(fns, sched, x_T, ts, key, cfg, threshold=thr,
-                              probe_every=2)
+        plan = SamplingPlan(T=T, budget=AdaptiveBudget(threshold=thr,
+                                                       probe_every=2),
+                            guidance_scale=1.5)
+        res = pipe.sample(plan, n, key)
         fid = C.fid_proxy(np.asarray(res.x0), ref)
-        frac = res.flops / res.flops_static_powerful
         C.csv_row(f"adaptive_thr{thr}", 0.0,
-                  f"switch_at={res.switch_step}/{T};compute={frac:.3f};"
-                  f"fid={fid:.3f}")
+                  f"switch_at={res.trace['switch_step']}/{T};"
+                  f"compute={res.relative_compute:.3f};fid={fid:.3f}")
     return True
 
 
@@ -37,20 +33,17 @@ def bench_flow_matching(T: int = 16, n: int = 32):
     """FlexiDiT weak→powerful schedule under rectified flow (Euler)."""
     params, cfg, sched = C.get_flexidit()
     ref, _ = C.reference_set(128)
-    cond = jnp.arange(n) % C.N_CLASSES
+    pipe = C.get_pipeline(params, cfg, sched)
     key = jax.random.PRNGKey(88)
-    x_T = jax.random.normal(key, (n,) + cfg.dit.latent_shape)
     # NOTE: the bench DiT was trained with the DDPM ε-objective; under the
     # linear path ε-prediction ≈ velocity up to the x0 term, so this bench
     # reports *relative* weak-vs-powerful behaviour under the flow sampler.
-    v_fns = {m: flow.make_flow_v_fn(params, cfg, cond, mode=m)
-             for m in (0, 1)}
-    taus = flow.tau_ladder(T)
     for T_weak in (0, T // 2):
-        phases = flow.split_tau_ladder(taus, [(1, T_weak), (0, T - T_weak)])
-        out = flow.sample_flow_phased([(v_fns[m], t) for m, t in phases],
-                                      x_T)
-        fid = C.fid_proxy(np.asarray(out), ref)
+        plan = SamplingPlan(T=T, budget=FlexiSchedule.weak_first(T, T_weak),
+                            solver="flow_euler", guidance_scale=0.0)
+        res = pipe.sample(plan, n, key)
+        out = np.asarray(res.x0)
+        fid = C.fid_proxy(out, ref)
         C.csv_row(f"flow_Tweak{T_weak}", 0.0, f"fid={fid:.3f};finite="
-                  f"{bool(np.isfinite(np.asarray(out)).all())}")
+                  f"{bool(np.isfinite(out).all())}")
     return True

@@ -1,0 +1,51 @@
+"""Pipeline API behaviour: compile-once steady state and budget switching.
+
+Measures cold (first-call, includes XLA compile) vs warm wall time per
+plan, and asserts via cache stats that sweeping budgets back and forth
+compiles exactly one runner per plan (DESIGN.md §pipeline)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common as C
+from repro.pipeline import FlexiPipeline, SamplingPlan
+
+
+def bench_pipeline_cache(T: int = 20, n: int = 16):
+    params, cfg, sched = C.get_flexidit()
+    pipe = FlexiPipeline(params, cfg, sched)   # fresh: measure cold compiles
+    key = jax.random.PRNGKey(123)
+    plans = {b: SamplingPlan(T=T, budget=b, guidance_scale=1.5)
+             for b in (1.0, 0.6, 0.4)}
+
+    warm = {}
+    for b, plan in plans.items():
+        t0 = time.perf_counter()
+        jax.block_until_ready(pipe.sample(plan, n, key).x0)
+        cold = (time.perf_counter() - t0) * 1e6
+        times = []
+        for i in range(3):
+            t0 = time.perf_counter()
+            jax.block_until_ready(
+                pipe.sample(plan, n, jax.random.fold_in(key, i)).x0)
+            times.append((time.perf_counter() - t0) * 1e6)
+        warm[b] = float(np.median(times))
+        C.csv_row(f"pipeline_budget{b}", warm[b],
+                  f"cold_us={cold:.0f};speedup={cold / warm[b]:.1f}x")
+
+    # budget sweep: alternating plans must not trigger any new compiles
+    before = pipe.cache_stats()["compiled"]
+    for i in range(6):
+        b = (1.0, 0.6, 0.4)[i % 3]
+        jax.block_until_ready(
+            pipe.sample(plans[b], n, jax.random.fold_in(key, 100 + i)).x0)
+    stats = pipe.cache_stats()
+    C.csv_row("pipeline_cache", 0.0,
+              f"runners={stats['runners']};compiled={stats['compiled']};"
+              f"hits={stats['hits']};"
+              f"switch_recompiles={stats['compiled'] - before}")
+    assert stats["compiled"] == before, "budget switches must not recompile"
+    return stats

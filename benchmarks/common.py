@@ -180,7 +180,22 @@ def csv_row(name: str, us: float, derived: str):
 
 
 # ---------------------------------------------------------------------------
-# Generation under a FlexiSchedule
+# Generation via the unified pipeline API (DESIGN.md §pipeline)
+
+_PIPELINES: Dict[Tuple[int, str, int], Any] = {}
+
+
+def get_pipeline(params, cfg, sched):
+    """One FlexiPipeline per (params, cfg, schedule) for the process, so
+    benches sweeping budgets reuse the same compiled executables. Keyed by
+    object identity (the cached pipeline keeps both alive, so ids are
+    stable) — two same-length schedules with different betas don't alias."""
+    from repro.pipeline import FlexiPipeline
+    key = (id(params), cfg.name, id(sched))
+    pipe = _PIPELINES.get(key)
+    if pipe is None:
+        pipe = _PIPELINES[key] = FlexiPipeline(params, cfg, sched)
+    return pipe
 
 
 def generate(params, cfg, sched, *, T: int, T_weak: int, n: int,
@@ -189,29 +204,16 @@ def generate(params, cfg, sched, *, T: int, T_weak: int, n: int,
              weak_last: bool = False, conditioning="class",
              cond=None) -> np.ndarray:
     """Sample n images with the weak→powerful scheduler (or reversed)."""
-    from repro.core import FlexiSchedule, GuidanceConfig, make_eps_fn
-    from repro.diffusion import sampler
+    from repro.core import FlexiSchedule
+    from repro.pipeline import SamplingPlan
 
-    ts = sch.respaced_timesteps(sched.num_steps, T)
     fs = (FlexiSchedule.powerful_first(T, T_weak, weak_mode) if weak_last
           else FlexiSchedule.weak_first(T, T_weak, weak_mode))
-    if conditioning == "class":
-        y = cond if cond is not None else jnp.arange(n) % N_CLASSES
-        null = jnp.full((n,), N_CLASSES)
-    else:
-        y = jnp.asarray(cond)
-        null = jnp.zeros_like(y)
-    phases = []
-    for mode, tsub in fs.split_timesteps(ts):
-        if weak_guidance and mode == 0:
-            g = GuidanceConfig(scale=cfg_scale, mode_cond=0,
-                               mode_uncond=weak_mode, kind="weak_cond")
-        else:
-            g = GuidanceConfig(scale=cfg_scale, mode_cond=mode,
-                               mode_uncond=mode)
-        phases.append((make_eps_fn(params, cfg, y, null, g), tsub))
-    F, H, W, C = cfg.dit.latent_shape
-    x_T = jax.random.normal(key, (n, F, H, W, C))
-    x0 = sampler.sample_phased(phases, sched, x_T, jax.random.fold_in(key, 1),
-                               solver=solver)
-    return np.asarray(x0)
+    plan = SamplingPlan(
+        T=T, budget=fs, solver=solver, guidance_scale=cfg_scale,
+        guidance_kind="weak_cond" if weak_guidance else "uncond",
+        weak_mode=weak_mode)
+    if conditioning == "class" and cond is not None:
+        cond = jnp.asarray(cond)
+    res = get_pipeline(params, cfg, sched).sample(plan, n, key, cond=cond)
+    return np.asarray(res.x0)

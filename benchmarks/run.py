@@ -2,8 +2,9 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.
 
-  PYTHONPATH=src python -m benchmarks.run               # all
-  PYTHONPATH=src python -m benchmarks.run fig6 fig12    # substring filter
+  PYTHONPATH=src python -m benchmarks.run                  # all
+  PYTHONPATH=src python -m benchmarks.run fig6 fig12       # substring filter
+  PYTHONPATH=src python -m benchmarks.run --suite pipeline # named suite
 """
 from __future__ import annotations
 
@@ -14,10 +15,16 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
+# Named suites: exact bench names run together by `--suite <name>`.
+SUITES = {
+    "pipeline": ("pipeline_cache", "fig6_fid_vs_compute", "fig7_t2i",
+                 "adaptive_scheduler", "flow_matching"),
+}
+
 
 def main() -> None:
     from benchmarks import (bench_core, bench_extensions, bench_modalities,
-                            bench_perf)
+                            bench_perf, bench_pipeline)
     from benchmarks.roofline_table import bench_roofline
 
     benches = [
@@ -33,11 +40,24 @@ def main() -> None:
         ("fig12_packing", bench_perf.bench_fig12_packing),
         ("adaptive_scheduler", bench_extensions.bench_adaptive_scheduler),
         ("flow_matching", bench_extensions.bench_flow_matching),
+        ("pipeline_cache", bench_pipeline.bench_pipeline_cache),
         ("roofline", bench_roofline),
     ]
-    filters = [a for a in sys.argv[1:] if not a.startswith("-")]
+    argv = sys.argv[1:]
+    suite = None
+    if "--suite" in argv:
+        i = argv.index("--suite")
+        if i + 1 >= len(argv):
+            raise SystemExit(f"--suite needs a name; known: {sorted(SUITES)}")
+        suite = argv[i + 1]
+        if suite not in SUITES:
+            raise SystemExit(f"unknown suite {suite!r}; known: {sorted(SUITES)}")
+        del argv[i:i + 2]
+    filters = [a for a in argv if not a.startswith("-")]
     print("name,us_per_call,derived")
     for name, fn in benches:
+        if suite is not None and name not in SUITES[suite]:
+            continue
         if filters and not any(f in name for f in filters):
             continue
         t0 = time.time()

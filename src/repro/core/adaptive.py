@@ -9,6 +9,13 @@ is below ``threshold`` the sampler stays in the weak mode; the first probe
 exceeding it switches to powerful for all remaining steps (the gap is
 monotone-ish in t — Fig. 4 — so a single switch point is near-optimal).
 
+The weak loop takes solver steps directly from the probe's ε — the probe
+prediction is never recomputed — so the FLOPs ledger matches what actually
+ran. Under CFG (``guided=True``, the default: ``make_mode_eps_fns`` and
+the pipeline both build guided NFEs) every model call costs 2 NFEs, and
+``flops_static_powerful`` uses the same multiplier so reported savings are
+consistent.
+
 This runs OUTSIDE jit across phases (mode changes recompile), using the two
 per-mode compiled NFEs — the same two executables the static scheduler uses,
 so there is no compile-time overhead beyond them.
@@ -16,14 +23,14 @@ so there is no compile-time overhead beyond them.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, List, Optional, Sequence, Tuple
+from typing import Any, Callable, List, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.scheduler import FlexiSchedule, dit_nfe_flops
+from repro.core.scheduler import dit_nfe_flops, lora_nfe_overhead
 from repro.diffusion import sampler, schedule as sch
 
 
@@ -40,49 +47,62 @@ def adaptive_sample(eps_fns: Sequence[Callable], sched: sch.DiffusionSchedule,
                     x_T: jax.Array, timesteps: np.ndarray, key: jax.Array,
                     cfg: ModelConfig, *, threshold: float = 0.35,
                     probe_every: int = 2, weak_mode: int = 1,
-                    solver: str = "ddim") -> AdaptiveResult:
+                    solver: str = "ddim", guided: bool = True,
+                    lora_unmerged: bool = False) -> AdaptiveResult:
     """eps_fns[mode] -> (eps, logvar) at that patch mode (compiled once).
+
+    ``guided``: the eps_fns implement CFG (two NFEs of compute per call).
+    ``lora_unmerged``: the weak NFEs apply LoRA adapters dynamically (§3.2)
+    and pay the adapter FLOPs. Solvers: 'ddim' | 'ddpm' — single-ε solvers,
+    so each weak step reuses the probe's prediction directly.
 
     Returns the sample plus the decision trace and FLOPs accounting.
     """
+    if solver not in ("ddim", "ddpm"):
+        raise ValueError(f"adaptive_sample supports 'ddim'|'ddpm' (single-ε "
+                         f"steps, probe reuse), got {solver!r}")
     T = len(timesteps)
+    B = x_T.shape[0]
     x = x_T
     gaps: List[float] = []
     switch = T
-    f_weak = dit_nfe_flops(cfg, weak_mode)
-    f_pow = dit_nfe_flops(cfg, 0)
+    mult = 2.0 if guided else 1.0               # CFG: 2 NFEs per model call
+    f_weak = mult * dit_nfe_flops(cfg, weak_mode)
+    if lora_unmerged:
+        f_weak += mult * lora_nfe_overhead(cfg, weak_mode)
+    f_pow = mult * dit_nfe_flops(cfg, 0)
     flops = 0.0
-    i = 0
-    while i < T:
-        t = timesteps[i]
-        probe = (i % probe_every == 0)
-        if probe:
-            e_w, _ = eps_fns[weak_mode](x, jnp.full((x.shape[0],), float(t)))
-            e_p, _ = eps_fns[0](x, jnp.full((x.shape[0],), float(t)))
+    for i in range(T):
+        tb = jnp.full((B,), int(timesteps[i]), jnp.int32)
+        e_w, lv_w = eps_fns[weak_mode](x, tb)
+        flops += f_weak * B
+        if i % probe_every == 0:
+            e_p, _ = eps_fns[0](x, tb)
+            flops += f_pow * B
             gap = float(jnp.mean(jnp.square(e_w - e_p))
                         / jnp.maximum(jnp.mean(jnp.square(e_p)), 1e-12))
             gaps.append(gap)
-            flops += (f_weak + f_pow) * x.shape[0]
             if gap > threshold:
                 switch = i
                 break
-        # take the weak step (reusing the weak probe when available)
-        x = sampler.sample_phased(
-            [(eps_fns[weak_mode], timesteps[i:i + 1])], sched, x,
-            jax.random.fold_in(key, i), solver=solver)
-        if not probe:
-            flops += f_weak * x.shape[0]
-        i += 1
+        # take the weak step from the ε just computed (probe or not)
+        t_next = int(timesteps[i + 1]) if i + 1 < T else -1
+        if solver == "ddim":
+            x = sch.ddim_step(sched, x, e_w, tb,
+                              jnp.full((B,), t_next, jnp.int32))
+        else:
+            x = sch.ddpm_step(sched, x, e_w, tb, jax.random.fold_in(key, i),
+                              lv_w)
 
     if switch < T:
         x = sampler.sample_phased(
             [(eps_fns[0], timesteps[switch:])], sched, x,
             jax.random.fold_in(key, 10_000 + switch), solver=solver)
-        flops += f_pow * x.shape[0] * (T - switch)
+        flops += f_pow * B * (T - switch)
 
     return AdaptiveResult(
         x0=x, switch_step=switch, gaps=gaps, flops=flops,
-        flops_static_powerful=f_pow * x.shape[0] * T)
+        flops_static_powerful=f_pow * B * T)
 
 
 def make_mode_eps_fns(params: Any, cfg: ModelConfig, cond: Any, null_cond: Any,

@@ -50,9 +50,16 @@ def split_model_out(out: jax.Array, cfg: ModelConfig
 def make_eps_fn(params: Any, cfg: ModelConfig, cond: Any, null_cond: Any,
                 g: GuidanceConfig,
                 text_mask: Optional[jax.Array] = None,
-                null_text_mask: Optional[jax.Array] = None) -> Callable:
-    """Returns eps_fn(x, t) → (eps_guided, logvar_frac)."""
+                null_text_mask: Optional[jax.Array] = None,
+                guidance_params: Any = None) -> Callable:
+    """Returns eps_fn(x, t) → (eps_guided, logvar_frac).
+
+    ``guidance_params``: optional separate tree for the guidance NFE in the
+    two-NFE (mixed patch size) path — e.g. the LoRA-merged weights for the
+    weak mode while the conditional NFE runs the base weights.
+    """
     s = g.effective_scale()
+    g_params = params if guidance_params is None else guidance_params
 
     if g.scale == 0.0 or cond is None:
         def eps_plain(x, t):
@@ -89,10 +96,10 @@ def make_eps_fn(params: Any, cfg: ModelConfig, cond: Any, null_cond: Any,
         e_c, lv = split_model_out(out_c, cfg)
         if g.kind == "weak_cond":
             # paper: guidance = weak *conditional* prediction
-            out_g = dit_mod.dit_forward(params, x, t, cond, cfg,
+            out_g = dit_mod.dit_forward(g_params, x, t, cond, cfg,
                                         mode=g.mode_uncond, text_mask=text_mask)
         else:
-            out_g = dit_mod.dit_forward(params, x, t, null_cond, cfg,
+            out_g = dit_mod.dit_forward(g_params, x, t, null_cond, cfg,
                                         mode=g.mode_uncond,
                                         text_mask=null_text_mask)
         e_g, _ = split_model_out(out_g, cfg)

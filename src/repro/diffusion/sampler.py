@@ -2,6 +2,10 @@
 scheduler (core.scheduler) chains a weak phase and a powerful phase — each
 phase is one ``lax.scan`` over its timesteps with a single compiled NFE body,
 so no recompilation ever happens inside the loop (DESIGN.md §3).
+
+User-facing code should not assemble phases by hand: ``repro.pipeline``
+(DESIGN.md §pipeline) is the single inference entry point and compiles/
+caches these loops per plan.
 """
 from __future__ import annotations
 

@@ -17,6 +17,10 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax 0.4.x names this TPUCompilerParams; 0.5+ renamed it CompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 
 def _embed_kernel(x_ref, w_ref, b_ref, o_ref):
     x = x_ref[...]                     # [bn, K]
@@ -47,7 +51,7 @@ def patch_embed_pallas(patches: jax.Array, w: jax.Array, b: jax.Array, *,
         ],
         out_specs=pl.BlockSpec((bn, bd), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((N, d), patches.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(patches, w, b)
@@ -81,7 +85,7 @@ def patch_deembed_pallas(tokens: jax.Array, w: jax.Array, b: jax.Array, *,
         ],
         out_specs=pl.BlockSpec((bn, K), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((N, K), tokens.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(tokens, w, b)

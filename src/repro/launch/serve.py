@@ -1,14 +1,25 @@
-"""Batched LM serving driver: prefill + greedy decode over fixed batch
-slots (continuous-batching-lite: finished slots are refilled from the
-request queue between decode steps).
+"""Batched serving drivers.
+
+LM path: prefill + greedy decode over fixed batch slots
+(continuous-batching-lite: finished slots are refilled from the request
+queue between decode steps).
+
+DiT path: FlexiPipeline-backed image serving over fixed batch slots. Each
+request carries a class label and a relative-compute budget; requests are
+bucketed onto a small plan menu (one ``SamplingPlan`` per budget level),
+batches are padded to exactly ``--batch-slots`` so every batch of a bucket
+reuses one compiled phase runner, and budget switches between batches
+never recompile (DESIGN.md §pipeline).
 
   python -m repro.launch.serve --arch deepseek-7b --smoke --requests 8
+  python -m repro.launch.serve --arch dit-xl-2 --budget 0.6 --smoke
 """
 from __future__ import annotations
 
 import argparse
 import time
-from typing import List
+from collections import defaultdict
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -19,22 +30,69 @@ from repro.launch import steps as st
 from repro.models import lm
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="deepseek-7b")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--batch-slots", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--max-new", type=int, default=16)
-    args = ap.parse_args()
+def serve_dit(cfg, args) -> None:
+    """Serve DiT sampling requests from a queue over fixed batch slots."""
+    from repro.diffusion import schedule as sch
+    from repro.models import dit as dit_mod
+    from repro.pipeline import FlexiPipeline, SamplingPlan
 
-    cfg = get_config(args.arch)
-    if args.smoke:
-        cfg = cfg.reduced()
-    if cfg.family == "dit":
-        raise SystemExit("use examples/flexidit_sample.py for DiT serving")
+    key = jax.random.PRNGKey(0)
+    params = dit_mod.init_dit(cfg, key)          # smoke: untrained weights
+    pipe = FlexiPipeline(params, cfg, sch.linear_schedule(args.train_T))
+    T, B = args.T, args.batch_slots
 
+    # Plan menu: requests are quantized onto a few budget levels so each
+    # level compiles exactly once and batches can share slots.
+    levels = sorted({round(b, 2) for b in
+                     (args.budget, (args.budget + 1.0) / 2, 1.0)})
+    plans: Dict[float, SamplingPlan] = {}
+    for b in levels:
+        plan = SamplingPlan(T=T, budget=float(b), solver=args.solver,
+                            guidance_scale=args.cfg_scale)
+        plan.validate(cfg)
+        plans[b] = plan
+        fs = plan.resolve_schedule(cfg)
+        print(f"[plan] budget<={b:.2f}: T_weak={fs.phases[0][1]}/{T} "
+              f"relative_compute={plan.relative_compute(cfg):.3f}")
+
+    rng = np.random.default_rng(0)
+    queue: Dict[float, List[int]] = defaultdict(list)   # budget → labels
+    for i in range(args.requests):
+        queue[levels[i % len(levels)]].append(
+            int(rng.integers(0, cfg.dit.num_classes)))
+
+    done = 0
+    batches = 0
+    total_flops = 0.0
+    t0 = time.time()
+    while any(queue.values()):
+        # fill the slots from the fullest bucket (continuous-batching-lite)
+        b = max(queue, key=lambda k: len(queue[k]))
+        labels = [queue[b].pop(0) for _ in range(min(B, len(queue[b])))]
+        n_real = len(labels)
+        # pad to exactly B slots so every batch hits the same executable
+        labels += [labels[-1]] * (B - n_real)
+        res = pipe.sample(plans[b], B, jax.random.fold_in(key, 100 + batches),
+                          cond=jnp.asarray(labels, jnp.int32))
+        jax.block_until_ready(res.x0)
+        done += n_real
+        batches += 1
+        total_flops += res.flops * n_real / B
+        print(f"[batch {batches}] budget={b:.2f} served={n_real} "
+              f"(pad={B - n_real}) rel_compute={res.relative_compute:.3f} "
+              f"x0_std={float(jnp.std(res.x0[:n_real])):.3f}", flush=True)
+    dt = time.time() - t0
+    stats = pipe.cache_stats()
+    print(f"served {done} requests in {batches} batches, {dt:.1f}s "
+          f"({done / max(dt, 1e-9):.2f} img/s), "
+          f"{total_flops / 1e9:.2f} GFLOPs total")
+    print(f"[cache] runners={stats['runners']} compiled={stats['compiled']} "
+          f"hits={stats['hits']} misses={stats['misses']}")
+    assert stats["compiled"] <= len(levels), \
+        "budget switches must not recompile beyond one runner per plan"
+
+
+def serve_lm(cfg, args) -> None:
     key = jax.random.PRNGKey(0)
     params = lm.init_params(cfg, key)
     B = args.batch_slots
@@ -88,6 +146,36 @@ def main():
     dt = time.time() - t0
     print(f"served {done} requests, {tokens_out} tokens in {dt:.1f}s "
           f"({tokens_out/max(dt,1e-9):.1f} tok/s)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch-slots", type=int, default=4)
+    # LM path
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    # DiT path
+    ap.add_argument("--budget", type=float, default=0.6,
+                    help="base relative-compute budget for DiT requests")
+    ap.add_argument("--T", type=int, default=20,
+                    help="DiT denoising steps per request")
+    ap.add_argument("--train-T", type=int, default=1000,
+                    help="diffusion schedule length the DiT was trained at")
+    ap.add_argument("--solver", default="ddim",
+                    choices=["ddim", "ddpm", "dpm2"])
+    ap.add_argument("--cfg-scale", type=float, default=1.5)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    if cfg.family == "dit":
+        serve_dit(cfg, args)
+    else:
+        serve_lm(cfg, args)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,289 @@
+"""FlexiPipeline — the single FlexiDiT inference entry point (DESIGN.md
+§pipeline).
+
+The pipeline owns ``(params, cfg, diffusion schedule)`` and a cache of
+compiled executables so that repeated ``sample`` calls — including budget
+or mode switches between calls — never retrace or recompile:
+
+* **static plans** compile one *phase runner* per plan signature
+  ``(solver, resolved schedule, timestep ladder, guidance signature,
+  LoRA variant, eps_transform)``; batch shape and conditioning are traced
+  arguments, so jax's jit cache keys them per runner;
+* **adaptive plans** compile one guided NFE per ``(mode, scale, LoRA
+  variant)`` — the same two executables the static scheduler uses — and
+  drive the probe loop in ``core.adaptive``.
+
+``cache_stats()`` exposes our own hit/miss counters plus the true number
+of XLA compilations (summed jit cache sizes), which tests assert stays
+flat across repeated calls.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import adaptive as adaptive_mod
+from repro.core.flexify import merge_lora
+from repro.core.guidance import GuidanceConfig, make_eps_fn
+from repro.core.scheduler import FlexiSchedule
+from repro.diffusion import flow, sampler
+from repro.diffusion import schedule as sch
+from repro.pipeline.plan import FLOW_SOLVERS, SamplingPlan
+
+Params = Dict[str, Any]
+# eps_transform(eps, x, t) -> eps — e.g. spectral filtering probes (Fig. 2)
+EpsTransform = Callable[[jax.Array, jax.Array, jax.Array], jax.Array]
+
+
+@dataclasses.dataclass
+class SampleResult:
+    x0: jax.Array
+    flops: float                  # actual FLOPs spent for the whole batch
+    relative_compute: float       # vs the all-powerful baseline, same T
+    trace: Dict[str, Any]         # schedule / switch point / probe gaps / ...
+
+
+class FlexiPipeline:
+    """Compile-once sampling for a flexified DiT.
+
+    >>> pipe = FlexiPipeline(params, cfg, sched)
+    >>> plan = SamplingPlan(T=20, budget=0.6)
+    >>> res = pipe.sample(plan, n=16, key=jax.random.PRNGKey(0))
+    """
+
+    def __init__(self, params: Params, cfg: ModelConfig,
+                 sched: sch.DiffusionSchedule):
+        assert cfg.family == "dit" and cfg.dit is not None, cfg.name
+        self.params = params
+        self.cfg = cfg
+        self.sched = sched
+        self._runners: Dict[Tuple, Callable] = {}
+        self._nfes: Dict[Tuple, Callable] = {}
+        self._merged: Dict[int, Params] = {}
+        self._hits = 0
+        self._misses = 0
+
+    # ------------------------------------------------------------------
+    # Cache plumbing
+
+    def cache_stats(self) -> Dict[str, int]:
+        compiled = sum(f._cache_size() for f in self._runners.values())
+        compiled += sum(f._cache_size() for f in self._nfes.values())
+        return {"runners": len(self._runners), "nfe_fns": len(self._nfes),
+                "hits": self._hits, "misses": self._misses,
+                "compiled": compiled}
+
+    def update_params(self, params: Params) -> None:
+        """Swap weights without dropping compiled executables (params are
+        traced arguments, not baked-in constants)."""
+        self.params = params
+        self._merged.clear()
+
+    def _lora_variant(self, plan: SamplingPlan) -> str:
+        return "none" if self.cfg.dit.lora_rank <= 0 else plan.lora
+
+    def _params_for_mode(self, mode: int, variant: str) -> Params:
+        if variant != "merged" or mode == 0:
+            return self.params
+        if mode not in self._merged:
+            self._merged[mode] = merge_lora(self.params, self.cfg, mode)
+        return self._merged[mode]
+
+    def _lookup(self, cache: Dict, key: Tuple, build: Callable) -> Callable:
+        if key in cache:
+            self._hits += 1
+        else:
+            self._misses += 1
+            cache[key] = build()
+        return cache[key]
+
+    # ------------------------------------------------------------------
+    # Conditioning
+
+    def _default_cond(self, n: int, cond: Any) -> Tuple[Any, Any]:
+        dit = self.cfg.dit
+        if dit.conditioning == "class":
+            y = (jnp.arange(n) % dit.num_classes if cond is None
+                 else jnp.asarray(cond))
+            return y, jnp.full((n,), dit.num_classes)
+        if dit.conditioning == "text":
+            if cond is None:
+                raise ValueError("text-conditioned models need cond "
+                                 "embeddings [n, text_len, text_dim]")
+            y = jnp.asarray(cond)
+            return y, jnp.zeros_like(y)
+        return None, None
+
+    # ------------------------------------------------------------------
+    # Compiled runners
+
+    def _phase_guidance(self, plan: SamplingPlan, mode: int) -> GuidanceConfig:
+        if plan.guidance_active and plan.guidance_kind == "weak_cond" \
+                and mode == 0:
+            # §3.4: the weak model's *conditional* prediction guides the
+            # powerful phase
+            return GuidanceConfig(scale=plan.guidance_scale, mode_cond=0,
+                                  mode_uncond=plan.weak_mode, kind="weak_cond")
+        return GuidanceConfig(scale=plan.guidance_scale, mode_cond=mode,
+                              mode_uncond=mode)
+
+    def _param_set_modes(self, plan: SamplingPlan,
+                         schedule: FlexiSchedule) -> Tuple[int, ...]:
+        """Modes needing their own param tree: with merged LoRA each weak
+        mode gets its own merge — including the weak mode serving only as
+        the §3.4 guidance NFE — otherwise everything shares the base."""
+        if self._lora_variant(plan) != "merged":
+            return (0,)
+        modes = {m for m, n in schedule.phases if n}
+        if plan.guidance_active and plan.guidance_kind == "weak_cond":
+            modes.add(plan.weak_mode)
+        return tuple(sorted(modes))
+
+    def _static_runner(self, plan: SamplingPlan, schedule: FlexiSchedule,
+                       ts: np.ndarray,
+                       transform: Optional[EpsTransform]) -> Callable:
+        splits = schedule.split_timesteps(ts)
+        set_idx = {m: i for i, m in
+                   enumerate(self._param_set_modes(plan, schedule))}
+        cfg = self.cfg
+
+        def run(param_sets, x_T, cond, null_cond, key, text_mask,
+                null_text_mask):
+            phases = []
+            for mode, tsub in splits:
+                p = param_sets[set_idx.get(mode, 0)]
+                g = self._phase_guidance(plan, mode)
+                # §3.4 guidance NFE runs at the weak mode: under merged
+                # LoRA it must see that mode's merged weights, not the base
+                gp = (param_sets[set_idx[g.mode_uncond]]
+                      if g.kind == "weak_cond" and g.mode_uncond in set_idx
+                      else None)
+                base_fn = make_eps_fn(p, cfg, cond, null_cond, g,
+                                      text_mask, null_text_mask,
+                                      guidance_params=gp)
+                if transform is None:
+                    fn = base_fn
+                else:
+                    def fn(x, t, _f=base_fn):
+                        eps, lv = _f(x, t)
+                        return transform(eps, x, t), lv
+                phases.append((fn, tsub))
+            return sampler.sample_phased(phases, self.sched, x_T, key,
+                                         solver=plan.solver,
+                                         clip_x0=plan.clip_x0)
+
+        return jax.jit(run)
+
+    def _flow_runner(self, plan: SamplingPlan,
+                     schedule: FlexiSchedule) -> Callable:
+        taus = flow.tau_ladder(plan.T)
+        splits = flow.split_tau_ladder(taus, schedule.phases)
+        set_idx = {m: i for i, m in
+                   enumerate(self._param_set_modes(plan, schedule))}
+        solver = "euler" if plan.solver == "flow_euler" else "heun"
+        cfg = self.cfg
+
+        def run(param_sets, x_T, cond):
+            phases = []
+            for mode, tsub in splits:
+                p = param_sets[set_idx.get(mode, 0)]
+                phases.append((flow.make_flow_v_fn(p, cfg, cond, mode=mode),
+                               tsub))
+            return flow.sample_flow_phased(phases, x_T, solver=solver)
+
+        return jax.jit(run)
+
+    def _nfe_fn(self, mode: int, scale: float) -> Callable:
+        cfg = self.cfg
+        g = GuidanceConfig(scale=scale, mode_cond=mode, mode_uncond=mode)
+
+        def nfe(params, x, t, cond, null_cond, text_mask, null_text_mask):
+            return make_eps_fn(params, cfg, cond, null_cond, g,
+                               text_mask, null_text_mask)(x, t)
+
+        return jax.jit(nfe)
+
+    # ------------------------------------------------------------------
+    # Sampling
+
+    def sample(self, plan: SamplingPlan, n: int, key: jax.Array, *,
+               cond: Any = None, x_T: Optional[jax.Array] = None,
+               text_mask: Optional[jax.Array] = None,
+               null_text_mask: Optional[jax.Array] = None,
+               eps_transform: Optional[EpsTransform] = None) -> SampleResult:
+        """Sample ``n`` latents under ``plan``. ``key`` seeds both the prior
+        draw and the solver noise (``x_T`` overrides the prior draw).
+
+        ``eps_transform`` is keyed by function *identity*: reuse the same
+        callable across calls to reuse its compiled runner — a fresh
+        closure per call compiles (and retains) a new runner each time.
+        """
+        plan.validate(self.cfg)
+        if x_T is None:
+            x_T = jax.random.normal(key, (n,) + self.cfg.dit.latent_shape)
+        run_key = jax.random.fold_in(key, 1)
+        y, null = self._default_cond(n, cond)
+        variant = self._lora_variant(plan)
+
+        if eps_transform is not None and (plan.is_adaptive
+                                          or plan.solver in FLOW_SOLVERS):
+            raise ValueError("eps_transform only applies to static "
+                             "diffusion plans")
+        if plan.is_adaptive:
+            return self._sample_adaptive(plan, x_T, run_key, y, null,
+                                         text_mask, null_text_mask)
+
+        ts = sch.respaced_timesteps(self.sched.num_steps, plan.T)
+        schedule = plan.resolve_schedule(self.cfg)
+        param_sets = tuple(self._params_for_mode(m, variant)
+                           for m in self._param_set_modes(plan, schedule))
+        sig = (plan.solver, plan.clip_x0, plan.guidance_scale,
+               plan.guidance_kind, plan.weak_mode, variant,
+               schedule.phases, tuple(int(t) for t in ts), eps_transform)
+        if plan.solver in FLOW_SOLVERS:
+            runner = self._lookup(self._runners, ("flow",) + sig,
+                                  lambda: self._flow_runner(plan, schedule))
+            x0 = runner(param_sets, x_T, y)
+        else:
+            runner = self._lookup(
+                self._runners, ("static",) + sig,
+                lambda: self._static_runner(plan, schedule, ts, eps_transform))
+            x0 = runner(param_sets, x_T, y, null, run_key, text_mask,
+                        null_text_mask)
+        return SampleResult(
+            x0=x0, flops=plan.flops(self.cfg, batch=n),
+            relative_compute=plan.relative_compute(self.cfg),
+            trace={"schedule": schedule, "timesteps": ts})
+
+    def _sample_adaptive(self, plan: SamplingPlan, x_T: jax.Array,
+                         run_key: jax.Array, y: Any, null: Any,
+                         text_mask, null_text_mask) -> SampleResult:
+        ts = sch.respaced_timesteps(self.sched.num_steps, plan.T)
+        variant = self._lora_variant(plan)
+        n_modes = 1 + len(self.cfg.dit.flex_patch_sizes)
+        fns: List[Callable] = []
+        for mode in range(n_modes):
+            jf = self._lookup(
+                self._nfes, ("nfe", mode, plan.guidance_scale, variant),
+                lambda m=mode: self._nfe_fn(m, plan.guidance_scale))
+            p = self._params_for_mode(mode, variant)
+            fns.append(lambda x, t, _f=jf, _p=p:
+                       _f(_p, x, t, y, null, text_mask, null_text_mask))
+        res = adaptive_mod.adaptive_sample(
+            fns, self.sched, x_T, ts, run_key, self.cfg,
+            threshold=plan.budget.threshold,
+            probe_every=plan.budget.probe_every,
+            weak_mode=plan.weak_mode, solver=plan.solver,
+            guided=plan.guidance_active,
+            lora_unmerged=(variant == "unmerged"))
+        return SampleResult(
+            x0=res.x0, flops=res.flops,
+            relative_compute=res.flops / res.flops_static_powerful,
+            trace={"switch_step": res.switch_step, "gaps": res.gaps,
+                   "timesteps": ts,
+                   "flops_static_powerful": res.flops_static_powerful})

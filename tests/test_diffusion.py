@@ -6,6 +6,8 @@ import pytest
 
 from repro.diffusion import sampler, schedule as sch
 
+pytestmark = pytest.mark.tier1
+
 
 def test_q_sample_interpolates():
     s = sch.linear_schedule(100)

@@ -14,6 +14,8 @@ from repro.core import flexify
 from repro.diffusion import flow, schedule as sch
 from repro.models import lm
 
+pytestmark = pytest.mark.tier1
+
 
 # ---------------------------------------------------------------------------
 # Flow matching

@@ -2,9 +2,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core import flexify, merge_lora, trainable_mask
 from repro.models import dit as dit_mod
+
+pytestmark = pytest.mark.tier1
 
 
 def _fwd(params, cfg, mode=0, key=jax.random.PRNGKey(7)):

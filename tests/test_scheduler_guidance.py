@@ -9,6 +9,8 @@ from repro.core import (FlexiSchedule, GuidanceConfig, dit_nfe_flops,
 from repro.core.guidance import SCALE_RULE
 from repro.models import dit as dit_mod
 
+pytestmark = pytest.mark.tier1
+
 
 def test_weak_nfe_much_cheaper(tiny_dit_cfg):
     _, fcfg = flexify(dit_mod.init_dit(tiny_dit_cfg, jax.random.PRNGKey(0)),
