@@ -19,12 +19,13 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 SUITES = {
     "pipeline": ("pipeline_cache", "fig6_fid_vs_compute", "fig7_t2i",
                  "adaptive_scheduler", "flow_matching"),
+    "distributed": ("distributed_seqpar",),
 }
 
 
 def main() -> None:
-    from benchmarks import (bench_core, bench_extensions, bench_modalities,
-                            bench_perf, bench_pipeline)
+    from benchmarks import (bench_core, bench_distributed, bench_extensions,
+                            bench_modalities, bench_perf, bench_pipeline)
     from benchmarks.roofline_table import bench_roofline
 
     benches = [
@@ -41,6 +42,7 @@ def main() -> None:
         ("adaptive_scheduler", bench_extensions.bench_adaptive_scheduler),
         ("flow_matching", bench_extensions.bench_flow_matching),
         ("pipeline_cache", bench_pipeline.bench_pipeline_cache),
+        ("distributed_seqpar", bench_distributed.bench_distributed),
         ("roofline", bench_roofline),
     ]
     argv = sys.argv[1:]

@@ -51,12 +51,16 @@ def make_eps_fn(params: Any, cfg: ModelConfig, cond: Any, null_cond: Any,
                 g: GuidanceConfig,
                 text_mask: Optional[jax.Array] = None,
                 null_text_mask: Optional[jax.Array] = None,
-                guidance_params: Any = None) -> Callable:
+                guidance_params: Any = None,
+                parallel: Any = None) -> Callable:
     """Returns eps_fn(x, t) → (eps_guided, logvar_frac).
 
     ``guidance_params``: optional separate tree for the guidance NFE in the
     two-NFE (mixed patch size) path — e.g. the LoRA-merged weights for the
     weak mode while the conditional NFE runs the base weights.
+
+    ``parallel``: optional ``distributed.engine.SeqParallel`` threaded into
+    every NFE so all guidance variants run sequence-parallel.
     """
     s = g.effective_scale()
     g_params = params if guidance_params is None else guidance_params
@@ -64,7 +68,7 @@ def make_eps_fn(params: Any, cfg: ModelConfig, cond: Any, null_cond: Any,
     if g.scale == 0.0 or cond is None:
         def eps_plain(x, t):
             out = dit_mod.dit_forward(params, x, t, cond, cfg, mode=g.mode_cond,
-                                      text_mask=text_mask)
+                                      text_mask=text_mask, parallel=parallel)
             return split_model_out(out, cfg)
         return eps_plain
 
@@ -82,7 +86,8 @@ def make_eps_fn(params: Any, cfg: ModelConfig, cond: Any, null_cond: Any,
                 c2 = jnp.concatenate([cond, null_cond], axis=0)
                 m2 = None
             out = dit_mod.dit_forward(params, x2, t2, c2, cfg,
-                                      mode=g.mode_cond, text_mask=m2)
+                                      mode=g.mode_cond, text_mask=m2,
+                                      parallel=parallel)
             eps, logvar = split_model_out(out, cfg)
             e_c, e_u = jnp.split(eps, 2, axis=0)
             lv = None if logvar is None else jnp.split(logvar, 2, axis=0)[0]
@@ -92,16 +97,18 @@ def make_eps_fn(params: Any, cfg: ModelConfig, cond: Any, null_cond: Any,
     # mixed patch sizes — two NFEs (packing alternatives in core.packing)
     def eps_weak_guided(x, t):
         out_c = dit_mod.dit_forward(params, x, t, cond, cfg, mode=g.mode_cond,
-                                    text_mask=text_mask)
+                                    text_mask=text_mask, parallel=parallel)
         e_c, lv = split_model_out(out_c, cfg)
         if g.kind == "weak_cond":
             # paper: guidance = weak *conditional* prediction
             out_g = dit_mod.dit_forward(g_params, x, t, cond, cfg,
-                                        mode=g.mode_uncond, text_mask=text_mask)
+                                        mode=g.mode_uncond, text_mask=text_mask,
+                                        parallel=parallel)
         else:
             out_g = dit_mod.dit_forward(g_params, x, t, null_cond, cfg,
                                         mode=g.mode_uncond,
-                                        text_mask=null_text_mask)
+                                        text_mask=null_text_mask,
+                                        parallel=parallel)
         e_g, _ = split_model_out(out_g, cfg)
         return e_g + s * (e_c - e_g), lv
 

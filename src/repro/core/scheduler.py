@@ -50,16 +50,16 @@ class FlexiSchedule:
 # Analytic FLOPs (mul + add counted separately → factor 2 per MAC)
 
 
-def dit_nfe_flops(cfg: ModelConfig, mode: int = 0,
-                  text_len: Optional[int] = None) -> float:
-    """FLOPs of one DiT forward (batch 1) at the given patch mode."""
-    N = dit_mod.tokens_for_mode(cfg, mode)
-    d, L, f = cfg.d_model, cfg.num_layers, cfg.d_ff
-    p = dit_mod.patch_sizes(cfg)[mode]
-    c_in = cfg.dit.latent_shape[-1]
-    c_out = dit_mod.c_out_dim(cfg)
-    npix = int(np.prod(p))
+def dit_block_flops(cfg: ModelConfig, n_tokens: int,
+                    text_len: Optional[int] = None) -> float:
+    """FLOPs of all transformer blocks over ``n_tokens`` tokens (batch 1).
 
+    Split out from :func:`dit_nfe_flops` so the distributed engine can
+    price sequence padding exactly: padded tokens flow through the blocks
+    only, never the (de-)embedding (``distributed.partition``).
+    """
+    N = n_tokens
+    d, L, f = cfg.d_model, cfg.num_layers, cfg.d_ff
     per_layer = 0.0
     per_layer += 2 * N * d * (3 * d)          # qkv proj
     per_layer += 2 * N * d * d                # out proj
@@ -73,7 +73,20 @@ def dit_nfe_flops(cfg: ModelConfig, mode: int = 0,
         per_layer += 2 * 2 * T * dc * d       # xattn k,v
         per_layer += 2 * 2 * N * T * d        # scores + values
         per_layer += 2 * N * d * d            # xattn out
-    total = L * per_layer
+    return float(L * per_layer)
+
+
+def dit_nfe_flops(cfg: ModelConfig, mode: int = 0,
+                  text_len: Optional[int] = None) -> float:
+    """FLOPs of one DiT forward (batch 1) at the given patch mode."""
+    N = dit_mod.tokens_for_mode(cfg, mode)
+    d = cfg.d_model
+    p = dit_mod.patch_sizes(cfg)[mode]
+    c_in = cfg.dit.latent_shape[-1]
+    c_out = dit_mod.c_out_dim(cfg)
+    npix = int(np.prod(p))
+
+    total = dit_block_flops(cfg, N, text_len)
     total += 2 * N * npix * c_in * d          # embed
     total += 2 * N * d * npix * c_out         # de-embed
     total += 2 * d * 2 * d                    # final adaLN

@@ -1,0 +1,22 @@
+"""Multi-device distributed inference engine (DESIGN.md §distributed).
+
+Sequence-parallel FlexiDiT sampling: ``partition`` owns the static
+sharding/cost arithmetic (per-mode token shards, phase-boundary re-shards,
+padding FLOPs, collective bytes), ``attention`` the shard_map collectives
+(Ulysses all-to-all + ring fallback), and ``engine`` the mesh-bound
+runtime the pipeline threads through the model. User code enables it by
+putting a :class:`ParallelSpec` on a ``SamplingPlan`` and giving
+``FlexiPipeline`` a mesh.
+"""
+from repro.distributed.attention import ring_attention, ulysses_attention
+from repro.distributed.engine import SeqParallel, mesh_fingerprint
+from repro.distributed.partition import (ModePartition, ParallelSpec,
+                                         PartitionPlan, mode_partition,
+                                         padded_tokens, plan_partition,
+                                         resolve_impl)
+
+__all__ = [
+    "ModePartition", "ParallelSpec", "PartitionPlan", "SeqParallel",
+    "mesh_fingerprint", "mode_partition", "padded_tokens", "plan_partition",
+    "resolve_impl", "ring_attention", "ulysses_attention",
+]

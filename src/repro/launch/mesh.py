@@ -2,7 +2,23 @@
 this module never touches jax device state."""
 from __future__ import annotations
 
+import os
+
 import jax
+
+
+def ensure_host_devices(n: int, env=None):
+    """Force >= ``n`` fake host-platform devices for CPU smoke runs. Must
+    run before jax's backend initializes. Appends unconditionally: XLA's
+    flag parsing is last-one-wins, so a stale smaller count in XLA_FLAGS
+    is overridden rather than silently kept. Harmless on real
+    accelerators (the flag only affects the host platform)."""
+    env = os.environ if env is None else env
+    if n > 1:
+        env["XLA_FLAGS"] = (
+            f"{env.get('XLA_FLAGS', '')} "
+            f"--xla_force_host_platform_device_count={n}").strip()
+    return env
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -15,3 +31,22 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_debug_mesh(data: int = 1, model: int = 1):
     """Tiny mesh over however many (possibly fake) devices exist — tests."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_inference_mesh(data: int = 1, seq: int = 1):
+    """Serving mesh for the distributed DiT engine: requests batch
+    data-parallel over 'data' replicas, long sequences scatter over 'seq'
+    within a replica (repro.distributed, DESIGN.md §distributed)."""
+    return jax.make_mesh((data, seq), ("data", "seq"))
+
+
+def parse_mesh_arg(arg: str):
+    """'RxS' (e.g. '1x8') → (data, seq) ints. Raises SystemExit on bad
+    input — this parses a CLI flag, matching serve.py's other validators."""
+    try:
+        data, seq = (int(p) for p in arg.lower().split("x"))
+    except ValueError:
+        raise SystemExit(f"--mesh expects 'DATAxSEQ' (e.g. 1x8), got {arg!r}")
+    if data < 1 or seq < 1:
+        raise SystemExit(f"--mesh sizes must be >= 1, got {arg!r}")
+    return data, seq

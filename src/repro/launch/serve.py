@@ -6,20 +6,25 @@ queue between decode steps).
 
 DiT path: FlexiPipeline-backed image serving over fixed batch slots. Each
 request carries a class label and a relative-compute budget; requests are
-bucketed onto a small plan menu (one ``SamplingPlan`` per budget level),
-batches are padded to exactly ``--batch-slots`` so every batch of a bucket
-reuses one compiled phase runner, and budget switches between batches
-never recompile (DESIGN.md §pipeline).
+bucketed onto a plan menu (one ``SamplingPlan`` per ``--budget-levels``
+entry), batches are padded to exactly ``--batch-slots`` so every batch of
+a bucket reuses one compiled phase runner, and budget switches between
+batches never recompile (DESIGN.md §pipeline). With ``--mesh DATAxSEQ``
+the pipeline runs on a device mesh: batches go data-parallel across the
+replica axis while each request's token sequence scatters over the 'seq'
+axis through the distributed engine (DESIGN.md §distributed).
 
   python -m repro.launch.serve --arch deepseek-7b --smoke --requests 8
   python -m repro.launch.serve --arch dit-xl-2 --budget 0.6 --smoke
+  python -m repro.launch.serve --arch dit-xl-2 --mesh 1x8 --budget 0.6 --smoke
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 from collections import defaultdict
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -30,30 +35,83 @@ from repro.launch import steps as st
 from repro.models import lm
 
 
+def parse_budget_levels(arg: Optional[str], base: float) -> List[float]:
+    """``--budget-levels`` 'a,b,c' → sorted, deduped, validated floats in
+    (0, 1]; default menu derived from ``--budget`` when unset. Validation
+    runs on the ROUNDED values (and on the default menu too) so nothing
+    outside (0, 1] ever reaches ``SamplingPlan``."""
+    if not arg:
+        raw = [base, (base + 1.0) / 2, 1.0]
+    else:
+        raw = []
+        for part in arg.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            try:
+                raw.append(float(part))
+            except ValueError:
+                raise SystemExit(f"--budget-levels: {part!r} is not a number")
+        if not raw:
+            raise SystemExit("--budget-levels: no levels given")
+    levels = set()
+    for b in raw:
+        b = round(b, 2)
+        if not 0.0 < b <= 1.0:
+            raise SystemExit(f"--budget-levels/--budget: level {b} "
+                             f"outside (0, 1]")
+        levels.add(b)
+    return sorted(levels)
+
+
 def serve_dit(cfg, args) -> None:
     """Serve DiT sampling requests from a queue over fixed batch slots."""
     from repro.diffusion import schedule as sch
+    from repro.launch.mesh import make_inference_mesh, parse_mesh_arg
     from repro.models import dit as dit_mod
-    from repro.pipeline import FlexiPipeline, SamplingPlan
+    from repro.pipeline import FlexiPipeline, ParallelSpec, SamplingPlan
+
+    mesh = None
+    parallel = None
+    if getattr(args, "mesh", None):
+        d_sz, s_sz = parse_mesh_arg(args.mesh)
+        mesh = make_inference_mesh(d_sz, s_sz)
+        if s_sz > 1:
+            parallel = ParallelSpec()
+        print(f"[mesh] data={d_sz} seq={s_sz} over "
+              f"{len(mesh.devices.flat)} devices")
 
     key = jax.random.PRNGKey(0)
     params = dit_mod.init_dit(cfg, key)          # smoke: untrained weights
-    pipe = FlexiPipeline(params, cfg, sch.linear_schedule(args.train_T))
+    pipe = FlexiPipeline(params, cfg, sch.linear_schedule(args.train_T),
+                         mesh=mesh)
     T, B = args.T, args.batch_slots
 
     # Plan menu: requests are quantized onto a few budget levels so each
     # level compiles exactly once and batches can share slots.
-    levels = sorted({round(b, 2) for b in
-                     (args.budget, (args.budget + 1.0) / 2, 1.0)})
+    levels = parse_budget_levels(getattr(args, "budget_levels", None),
+                                 args.budget)
     plans: Dict[float, SamplingPlan] = {}
     for b in levels:
         plan = SamplingPlan(T=T, budget=float(b), solver=args.solver,
-                            guidance_scale=args.cfg_scale)
+                            guidance_scale=args.cfg_scale, parallel=parallel)
         plan.validate(cfg)
         plans[b] = plan
         fs = plan.resolve_schedule(cfg)
         print(f"[plan] budget<={b:.2f}: T_weak={fs.phases[0][1]}/{T} "
               f"relative_compute={plan.relative_compute(cfg):.3f}")
+        if parallel is not None:
+            from repro.distributed import plan_partition
+            part = plan_partition(cfg, fs, s_sz, parallel)
+            per_phase = " ".join(
+                f"m{p.mode}:{p.tokens}+{p.pad}pad/{p.sp}" for p, nn in
+                part.phases if nn)
+            coll = part.collective_bytes(
+                cfg, cfg_scale_active=args.cfg_scale != 0)
+            print(f"[shard]   {per_phase} impl="
+                  f"{part.phases[0][0].impl} "
+                  f"collective={coll / 1e6:.1f}MB/sample "
+                  f"eff={part.parallel_efficiency(cfg):.3f}")
 
     rng = np.random.default_rng(0)
     queue: Dict[float, List[int]] = defaultdict(list)   # budget → labels
@@ -160,6 +218,12 @@ def main():
     # DiT path
     ap.add_argument("--budget", type=float, default=0.6,
                     help="base relative-compute budget for DiT requests")
+    ap.add_argument("--budget-levels", default=None,
+                    help="comma-separated relative-compute menu, e.g. "
+                         "'0.4,0.6,1.0' (default: derived from --budget)")
+    ap.add_argument("--mesh", default=None,
+                    help="DATAxSEQ device mesh for the DiT path, e.g. 1x8: "
+                         "data-parallel replicas x sequence-parallel shards")
     ap.add_argument("--T", type=int, default=20,
                     help="DiT denoising steps per request")
     ap.add_argument("--train-T", type=int, default=1000,
@@ -168,6 +232,12 @@ def main():
                     choices=["ddim", "ddpm", "dpm2"])
     ap.add_argument("--cfg-scale", type=float, default=1.5)
     args = ap.parse_args()
+
+    if args.mesh:
+        # CPU smoke runs: make sure enough host devices exist BEFORE the
+        # jax backend initializes.
+        from repro.launch.mesh import ensure_host_devices, parse_mesh_arg
+        ensure_host_devices(int(np.prod(parse_mesh_arg(args.mesh))))
 
     cfg = get_config(args.arch)
     if args.smoke:

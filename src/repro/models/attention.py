@@ -107,13 +107,19 @@ def gqa_attend(q: jax.Array, k: jax.Array, v: jax.Array, bias: jax.Array,
 def blocked_gqa_attend(q: jax.Array, k: jax.Array, v: jax.Array, *,
                        positions: jax.Array, causal: bool,
                        window: jax.Array | int, cfg: AttnConfig,
-                       q_block: int = 1024, unroll: bool = False) -> jax.Array:
+                       q_block: int = 1024, unroll: bool = False,
+                       segment_ids: Optional[jax.Array] = None) -> jax.Array:
     """Flash-style attention for long sequences: ``lax.scan`` over query
     blocks, each block attending over the full K with an arithmetic mask.
 
     Peak memory per step is O(B·H·q_block·Sk) instead of O(B·H·Sq·Sk) —
     required for prefill_32k to fit per-device HBM without a Pallas kernel
     (the dry-run graph must be pure XLA on the CPU backend).
+
+    ``segment_ids``: optional [B, S] int32 shared by queries and keys;
+    tokens attend only within their segment (packed sequences / padding
+    with id -1). The mask is applied per q block without ever
+    materializing a [B, H, S, S] score tensor.
     """
     import numpy as _np
     from jax.sharding import PartitionSpec as _P
@@ -130,6 +136,15 @@ def blocked_gqa_attend(q: jax.Array, k: jax.Array, v: jax.Array, *,
     qb = q.reshape(B, nq, q_block, H, hd).transpose(1, 0, 2, 3, 4)
     pb = positions.reshape(B, nq, q_block).transpose(1, 0, 2)
     k_pos_full = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if segment_ids is not None:
+        k_seg_full = segment_ids                         # [B, S] (unpadded)
+        sq = segment_ids
+        if pad:
+            sq = jnp.pad(sq, ((0, 0), (0, pad)), constant_values=-1)
+        sb = sq.reshape(B, nq, q_block).transpose(1, 0, 2)
+    else:
+        k_seg_full = None
+        sb = jnp.zeros((nq, B, q_block), jnp.int32)      # scan filler
 
     # Static per-layer window (unrolled cost path / eager) → sliced-K fast
     # path: each causal q block only visits keys in [start, start+qb+w).
@@ -139,7 +154,7 @@ def blocked_gqa_attend(q: jax.Array, k: jax.Array, v: jax.Array, *,
         k_span = min(q_block + w, S)
 
         def step(_, inp):
-            i, q_i, pos_i = inp
+            i, q_i, pos_i, seg_i = inp
             # shard queries within the block over the model axis: balances
             # attention compute when head count doesn't divide the axis
             q_i = _constrain(q_i, _P(("pod", "data"), "model", None, None))
@@ -155,6 +170,10 @@ def blocked_gqa_attend(q: jax.Array, k: jax.Array, v: jax.Array, *,
             dq = pos_i[:, :, None]
             dk = kp[None, None, :]
             allowed = (dq >= dk) & (dq - dk < w) & (dq >= 0)
+            if k_seg_full is not None:
+                ks = jax.lax.dynamic_slice_in_dim(k_seg_full, start, k_span,
+                                                  axis=1)
+                allowed &= seg_i[:, :, None] == ks[:, None, :]
             s = s + jnp.where(allowed, 0.0, -1e30)[:, None, None]
             p = jax.nn.softmax(s, axis=-1)
             o = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v_s,
@@ -163,14 +182,14 @@ def blocked_gqa_attend(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
         from repro.models.common import scan_or_unroll
         idx = jnp.arange(nq, dtype=jnp.int32)
-        _, out = scan_or_unroll(step, None, (idx, qb, pb), unroll)
+        _, out = scan_or_unroll(step, None, (idx, qb, pb, sb), unroll)
         out = out.transpose(1, 0, 2, 3, 4).reshape(B, nq * q_block, H, hd)
         return out[:, :S]
 
     window = jnp.asarray(window, jnp.int32)
 
     def step(_, inp):
-        q_i, pos_i = inp                                 # [B,qb,H,hd], [B,qb]
+        q_i, pos_i, seg_i = inp                          # [B,qb,H,hd], [B,qb]
         q_i = _constrain(q_i, _P(("pod", "data"), "model", None, None))
         qh = q_i.reshape(B, q_block, K, G, hd)
         s = jnp.einsum("bqkgh,bskh->bkgqs", qh, k,
@@ -183,6 +202,8 @@ def blocked_gqa_attend(q: jax.Array, k: jax.Array, v: jax.Array, *,
         in_w = (dq - dk < window) & (dq - dk > -window)
         allowed &= jnp.where(window > 0, in_w, True)
         allowed &= dq >= 0                               # padded queries
+        if k_seg_full is not None:
+            allowed &= seg_i[:, :, None] == k_seg_full[:, None, :]
         s = s + jnp.where(allowed, 0.0, -1e30)[:, None, None]
         p = jax.nn.softmax(s, axis=-1)
         o = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v,
@@ -190,7 +211,7 @@ def blocked_gqa_attend(q: jax.Array, k: jax.Array, v: jax.Array, *,
         return None, o.reshape(B, q_block, H, hd).astype(q_i.dtype)
 
     from repro.models.common import scan_or_unroll
-    _, out = scan_or_unroll(step, None, (qb, pb), unroll)
+    _, out = scan_or_unroll(step, None, (qb, pb, sb), unroll)
     out = out.transpose(1, 0, 2, 3, 4).reshape(B, nq * q_block, H, hd)
     return out[:, :S]
 
@@ -233,9 +254,10 @@ def attention(params: Params, x: jax.Array, cfg: AttnConfig, *,
         out = attn_ops.flash_attention(
             q, k, v, causal=causal, window=int(window) if not hasattr(window, "dtype") else 0,
             softcap=cfg.logit_softcap, segment_ids=segment_ids)
-    elif S > BLOCKED_ATTN_THRESHOLD and segment_ids is None:
+    elif S > BLOCKED_ATTN_THRESHOLD:
         out = blocked_gqa_attend(q, k, v, positions=positions, causal=causal,
-                                 window=window, cfg=cfg, unroll=unroll)
+                                 window=window, cfg=cfg, unroll=unroll,
+                                 segment_ids=segment_ids)
     else:
         bias = make_attention_bias(positions, positions, causal=causal,
                                    window=window, q_segment=segment_ids,

@@ -175,23 +175,32 @@ def _modulate(x: jax.Array, shift: jax.Array, scale: jax.Array) -> jax.Array:
 def _mha(p: Params, x: jax.Array, num_heads: int, *,
          lora: Optional[Params] = None, mode: int = 0,
          segment_ids: Optional[jax.Array] = None,
-         unroll: bool = False) -> jax.Array:
+         unroll: bool = False, parallel: Optional[Any] = None) -> jax.Array:
     B, N, d = x.shape
     hd = d // num_heads
     la = (lora or {})
     q = _linear(x, p["wq"], lora=la.get("wq"), mode=mode).reshape(B, N, num_heads, hd)
     k = _linear(x, p["wk"], lora=la.get("wk"), mode=mode).reshape(B, N, num_heads, hd)
     v = _linear(x, p["wv"], lora=la.get("wv"), mode=mode).reshape(B, N, num_heads, hd)
-    if N > 8192 and segment_ids is None:
-        # long video sequences: flash-style blocked path with q blocks
-        # sharded over the model axis (see models.attention)
+    if parallel is not None and parallel.sp > 1:
+        # sequence-parallel engine: Ulysses all-to-all / ring attention over
+        # the mesh's sequence axis (repro.distributed, DESIGN.md
+        # §distributed); padding tokens carry segment id -1
+        o = parallel.attend(q, k, v, segment_ids=segment_ids)
+        return _linear(o.reshape(B, N, d), p["wo"], lora=la.get("wo"),
+                       mode=mode)
+    from repro.models import attention as attn_mod
+    if N > attn_mod.BLOCKED_ATTN_THRESHOLD:
+        # long (possibly packed) video sequences: flash-style blocked path
+        # with q blocks sharded over the model axis; segment ids thread
+        # through so packed CFG never materializes [B,H,N,N] scores
         from repro.configs.base import AttnConfig
-        from repro.models.attention import blocked_gqa_attend
         acfg = AttnConfig(num_heads=num_heads, num_kv_heads=num_heads,
                           head_dim=hd, use_rope=False)
         pos = jnp.broadcast_to(jnp.arange(N, dtype=jnp.int32), (B, N))
-        o = blocked_gqa_attend(q, k, v, positions=pos, causal=False,
-                               window=0, cfg=acfg, unroll=unroll)
+        o = attn_mod.blocked_gqa_attend(q, k, v, positions=pos, causal=False,
+                                        window=0, cfg=acfg, unroll=unroll,
+                                        segment_ids=segment_ids)
         return _linear(o.reshape(B, N, d), p["wo"], lora=la.get("wo"),
                        mode=mode)
     scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
@@ -233,7 +242,8 @@ def _ln(x: jax.Array) -> jax.Array:
 def dit_block_apply(p: Params, x: jax.Array, c: jax.Array, cfg: ModelConfig, *,
                     mode: int = 0, text: Optional[jax.Array] = None,
                     text_mask: Optional[jax.Array] = None,
-                    segment_ids: Optional[jax.Array] = None) -> jax.Array:
+                    segment_ids: Optional[jax.Array] = None,
+                    parallel: Optional[Any] = None) -> jax.Array:
     H = cfg.attn.num_heads
     ada = _linear(jax.nn.silu(c.astype(jnp.float32)).astype(x.dtype),
                   p["ada"]["w"], p["ada"]["b"])
@@ -242,7 +252,7 @@ def dit_block_apply(p: Params, x: jax.Array, c: jax.Array, cfg: ModelConfig, *,
     h = _modulate(_ln(x), sh1, sc1)
     x = x + g1[:, None] * _mha(p["attn"], h, H, lora=lora.get("attn"),
                                mode=mode, segment_ids=segment_ids,
-                               unroll=cfg.unroll)
+                               unroll=cfg.unroll, parallel=parallel)
     if "xattn" in p and text is not None:
         x = x + _cross_mha(p["xattn"], _ln(x), text, H, kv_mask=text_mask)
     h2 = _modulate(_ln(x), sh2, sc2)
@@ -277,10 +287,16 @@ def condition_vector(params: Params, t: jax.Array, cond: Any,
 def dit_forward(params: Params, x_t: jax.Array, t: jax.Array, cond: Any,
                 cfg: ModelConfig, *, mode: int = 0,
                 text_mask: Optional[jax.Array] = None,
-                latent_shape: Optional[Tuple[int, int, int, int]] = None
-                ) -> jax.Array:
+                latent_shape: Optional[Tuple[int, int, int, int]] = None,
+                parallel: Optional[Any] = None) -> jax.Array:
     """Denoiser NFE.  x_t: [B,F,H,W,C]; t: [B]; cond: labels [B] int32 (class)
-    or text embeddings [B,T,dc] (text). Returns [B,F,H,W,c_out]."""
+    or text embeddings [B,T,dc] (text). Returns [B,F,H,W,c_out].
+
+    ``parallel``: optional ``distributed.engine.SeqParallel`` — tokens are
+    padded to the sequence-axis size, scattered across the mesh, and each
+    block's attention runs the Ulysses/ring collective; the per-mode token
+    count (and hence the sharding) changes at FlexiSchedule phase
+    boundaries, which is handled here by re-padding per call."""
     dit = cfg.dit
     ls = latent_shape or dit.latent_shape
     p = patch_sizes(cfg)[mode]
@@ -304,6 +320,11 @@ def dit_forward(params: Params, x_t: jax.Array, t: jax.Array, cond: Any,
         tok = layer_norm(tok, 1.0 + params["ps_ln"]["scale"][mode - 1],
                          params["ps_ln"]["bias"][mode - 1])
 
+    n_real = tok.shape[1]
+    seg_ids = None
+    if parallel is not None and parallel.sp > 1:
+        tok, seg_ids = parallel.pad_and_shard(tok)
+
     text = None
     if dit.conditioning == "text":
         text = _linear(cond.astype(dtype), params["text_proj"])
@@ -313,13 +334,16 @@ def dit_forward(params: Params, x_t: jax.Array, t: jax.Array, cond: Any,
 
     def body(h, bp):
         h = dit_block_apply(bp, h, c, cfg, mode=mode, text=text,
-                            text_mask=text_mask)
+                            text_mask=text_mask, segment_ids=seg_ids,
+                            parallel=parallel)
         return h, None
 
     if cfg.remat == "block":
         body = jax.checkpoint(body, prevent_cse=False)
     from repro.models.common import scan_or_unroll
     tok, _ = scan_or_unroll(body, tok, params["blocks"], cfg.unroll)
+    if parallel is not None and tok.shape[1] != n_real:
+        tok = parallel.unshard(tok, n_real)
 
     ada = _linear(jax.nn.silu(c.astype(jnp.float32)).astype(dtype),
                   params["final"]["ada"]["w"], params["final"]["ada"]["b"])

@@ -1,9 +1,11 @@
 """Unified FlexiDiT inference API (DESIGN.md §pipeline).
 
 ``SamplingPlan`` declares *what* to run (solver, steps, compute budget,
-guidance, LoRA handling); ``FlexiPipeline`` owns the weights and compiled
+guidance, LoRA handling, optional sequence-parallel execution);
+``FlexiPipeline`` owns the weights, the device mesh, and compiled
 executables and runs plans without ever recompiling for repeated calls.
 """
+from repro.distributed.partition import ParallelSpec  # noqa: F401
 from repro.pipeline.pipeline import FlexiPipeline, SampleResult  # noqa: F401
 from repro.pipeline.plan import (AdaptiveBudget, SamplingPlan,  # noqa: F401
                                  solve_t_weak)

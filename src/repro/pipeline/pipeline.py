@@ -16,6 +16,12 @@ or mode switches between calls — never retrace or recompile:
 ``cache_stats()`` exposes our own hit/miss counters plus the true number
 of XLA compilations (summed jit cache sizes), which tests assert stays
 flat across repeated calls.
+
+With a device mesh attached (``FlexiPipeline(..., mesh=...)``) plans may
+carry a ``parallel=ParallelSpec(...)`` to run sequence-parallel through
+``repro.distributed`` (DESIGN.md §distributed); the mesh fingerprint
+joins the runner key so budget switches on a fixed mesh stay
+compile-free while mesh swaps compile fresh runners.
 """
 from __future__ import annotations
 
@@ -25,6 +31,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core import adaptive as adaptive_mod
@@ -33,7 +40,9 @@ from repro.core.guidance import GuidanceConfig, make_eps_fn
 from repro.core.scheduler import FlexiSchedule
 from repro.diffusion import flow, sampler
 from repro.diffusion import schedule as sch
+from repro.distributed.engine import SeqParallel, mesh_fingerprint
 from repro.pipeline.plan import FLOW_SOLVERS, SamplingPlan
+from repro.runtime import sharding as sharding_mod
 
 Params = Dict[str, Any]
 # eps_transform(eps, x, t) -> eps — e.g. spectral filtering probes (Fig. 2)
@@ -57,16 +66,24 @@ class FlexiPipeline:
     """
 
     def __init__(self, params: Params, cfg: ModelConfig,
-                 sched: sch.DiffusionSchedule):
+                 sched: sch.DiffusionSchedule,
+                 mesh: Optional[Mesh] = None):
         assert cfg.family == "dit" and cfg.dit is not None, cfg.name
         self.params = params
         self.cfg = cfg
         self.sched = sched
+        self.mesh = mesh
         self._runners: Dict[Tuple, Callable] = {}
         self._nfes: Dict[Tuple, Callable] = {}
         self._merged: Dict[int, Params] = {}
         self._hits = 0
         self._misses = 0
+
+    def set_mesh(self, mesh: Optional[Mesh]) -> None:
+        """Attach / swap the device mesh. Compiled runners are keyed by the
+        mesh fingerprint, so switching meshes compiles new runners while a
+        fixed mesh (any number of budget switches) never recompiles."""
+        self.mesh = mesh
 
     # ------------------------------------------------------------------
     # Cache plumbing
@@ -145,8 +162,8 @@ class FlexiPipeline:
         return tuple(sorted(modes))
 
     def _static_runner(self, plan: SamplingPlan, schedule: FlexiSchedule,
-                       ts: np.ndarray,
-                       transform: Optional[EpsTransform]) -> Callable:
+                       ts: np.ndarray, transform: Optional[EpsTransform],
+                       engine: Optional[SeqParallel] = None) -> Callable:
         splits = schedule.split_timesteps(ts)
         set_idx = {m: i for i, m in
                    enumerate(self._param_set_modes(plan, schedule))}
@@ -165,7 +182,7 @@ class FlexiPipeline:
                       else None)
                 base_fn = make_eps_fn(p, cfg, cond, null_cond, g,
                                       text_mask, null_text_mask,
-                                      guidance_params=gp)
+                                      guidance_params=gp, parallel=engine)
                 if transform is None:
                     fn = base_fn
                 else:
@@ -179,8 +196,8 @@ class FlexiPipeline:
 
         return jax.jit(run)
 
-    def _flow_runner(self, plan: SamplingPlan,
-                     schedule: FlexiSchedule) -> Callable:
+    def _flow_runner(self, plan: SamplingPlan, schedule: FlexiSchedule,
+                     engine: Optional[SeqParallel] = None) -> Callable:
         taus = flow.tau_ladder(plan.T)
         splits = flow.split_tau_ladder(taus, schedule.phases)
         set_idx = {m: i for i, m in
@@ -192,7 +209,8 @@ class FlexiPipeline:
             phases = []
             for mode, tsub in splits:
                 p = param_sets[set_idx.get(mode, 0)]
-                phases.append((flow.make_flow_v_fn(p, cfg, cond, mode=mode),
+                phases.append((flow.make_flow_v_fn(p, cfg, cond, mode=mode,
+                                                   parallel=engine),
                                tsub))
             return flow.sample_flow_phased(phases, x_T, solver=solver)
 
@@ -242,17 +260,42 @@ class FlexiPipeline:
         schedule = plan.resolve_schedule(self.cfg)
         param_sets = tuple(self._params_for_mode(m, variant)
                            for m in self._param_set_modes(plan, schedule))
+        engine = (SeqParallel.create(self.mesh, plan.parallel, self.cfg)
+                  if plan.parallel is not None else None)
+        if self.mesh is not None:
+            # committed single-device params can't mix with mesh-sharded
+            # activations: replicate weights, shard the batch over the data
+            # axes (no-ops once placed — jax.device_put short-circuits).
+            # Sequence-parallel runners take REPLICATED inputs: the shard_map
+            # in_specs re-introduce the (data, seq) split inside the
+            # collective, and jax 0.4.x GSPMD miscompiles the mixed
+            # batch-sharded + shard_map graph (see distributed.engine).
+            repl = NamedSharding(self.mesh, P())
+            bspec = (repl if engine is not None else
+                     NamedSharding(self.mesh,
+                                   sharding_mod.batch_spec(n, self.mesh)))
+            param_sets = jax.device_put(param_sets, repl)
+            x_T = jax.device_put(x_T, bspec)
+            if y is not None:
+                y = jax.device_put(y, bspec)
+            if null is not None:
+                null = jax.device_put(null, bspec)
+        # mesh fingerprint joins the key: budget switches on a fixed mesh
+        # reuse runners; swapping meshes compiles fresh ones
         sig = (plan.solver, plan.clip_x0, plan.guidance_scale,
                plan.guidance_kind, plan.weak_mode, variant,
-               schedule.phases, tuple(int(t) for t in ts), eps_transform)
+               schedule.phases, tuple(int(t) for t in ts), eps_transform,
+               plan.parallel, mesh_fingerprint(self.mesh))
         if plan.solver in FLOW_SOLVERS:
-            runner = self._lookup(self._runners, ("flow",) + sig,
-                                  lambda: self._flow_runner(plan, schedule))
+            runner = self._lookup(
+                self._runners, ("flow",) + sig,
+                lambda: self._flow_runner(plan, schedule, engine))
             x0 = runner(param_sets, x_T, y)
         else:
             runner = self._lookup(
                 self._runners, ("static",) + sig,
-                lambda: self._static_runner(plan, schedule, ts, eps_transform))
+                lambda: self._static_runner(plan, schedule, ts, eps_transform,
+                                            engine))
             x0 = runner(param_sets, x_T, y, null, run_key, text_mask,
                         null_text_mask)
         return SampleResult(

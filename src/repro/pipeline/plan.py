@@ -23,6 +23,7 @@ from typing import Optional, Sequence, Tuple, Union
 from repro.configs.base import ModelConfig
 from repro.core.scheduler import (FlexiSchedule, dit_nfe_flops,
                                   lora_nfe_overhead, schedule_flops)
+from repro.distributed.partition import ParallelSpec
 
 STATIC_SOLVERS = ("ddpm", "ddim", "dpm2")
 FLOW_SOLVERS = ("flow_euler", "flow_heun")
@@ -59,6 +60,9 @@ class SamplingPlan:
     lora: str = "merged"                 # 'merged' | 'unmerged' (§3.2, Fig. 5)
     weak_last: bool = False              # App. B.4 ablation (fraction budgets)
     clip_x0: float = 0.0                 # DDPM-only x0 clipping
+    # sequence-parallel execution over a device mesh (repro.distributed);
+    # the mesh itself is owned by the pipeline, keeping plans declarative
+    parallel: Optional[ParallelSpec] = None
 
     def __post_init__(self):
         if isinstance(self.budget, int):        # budget=1 → fraction 1.0
@@ -87,6 +91,14 @@ class SamplingPlan:
             raise ValueError("weak_last only applies to static budgets")
         if self.solver in FLOW_SOLVERS and self.guidance_scale != 0.0:
             raise ValueError("flow solvers are unguided; set guidance_scale=0")
+        if self.parallel is not None:
+            if not isinstance(self.parallel, ParallelSpec):
+                raise ValueError(f"parallel must be a ParallelSpec, got "
+                                 f"{type(self.parallel).__name__}")
+            if self.is_adaptive:
+                raise ValueError("sequence-parallel adaptive plans are not "
+                                 "supported yet (the probe loop runs on the "
+                                 "host); use a static or fraction budget")
 
     # ------------------------------------------------------------------
     @property

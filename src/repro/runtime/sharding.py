@@ -22,6 +22,11 @@ from repro.configs.base import ModelConfig
 
 PROFILES = ("auto", "fsdp2d", "fsdp2d_sp", "tp_only", "dp")
 
+# Named mesh axis used by the sequence-parallel inference engine
+# (repro.distributed): activations scatter their token dim over it; weights
+# never map a dim onto it (replicated across the axis).
+SEQ_AXIS = "seq"
+
 # Models whose bf16 params fit comfortably replicated skip FSDP (wrapping
 # threshold, like torch FSDP's min_num_params): pure DP avoids pointless
 # per-layer weight all-gathers on sub-3B models.
@@ -54,11 +59,19 @@ def axis_sizes(mesh: Mesh) -> Dict[str, int]:
 def rules_for(cfg: ModelConfig, mesh: Mesh, profile: str = "auto"
               ) -> Dict[str, Any]:
     """Logical axis rules. Non-divisible shardings are dropped later by
-    ``spec_tree(axis_sizes=...)``."""
+    ``spec_tree(axis_sizes=...)``.
+
+    Every profile also carries the activation-side ``tokens`` rule: on
+    meshes with a ``'seq'`` axis the sequence-parallel engine scatters the
+    token dim over it (weights never map onto 'seq' — they stay replicated
+    across that axis)."""
     profile = base_profile(resolve_profile(cfg, profile))
+    tokens = SEQ_AXIS if SEQ_AXIS in mesh.axis_names else None
     if profile == "dp":            # replicated weights, batch-sharded data
-        return {k: None for k in ("embed", "mlp", "heads", "kv_heads",
-                                  "vocab", "expert", "layers")}
+        rules = {k: None for k in ("embed", "mlp", "heads", "kv_heads",
+                                   "vocab", "expert", "layers")}
+        rules["tokens"] = tokens
+        return rules
     fsdp = dp_axes(mesh) if profile == "fsdp2d" else None
     rules: Dict[str, Any] = {
         "embed": fsdp,
@@ -68,6 +81,7 @@ def rules_for(cfg: ModelConfig, mesh: Mesh, profile: str = "auto"
         "vocab": "model",
         "expert": "model",
         "layers": None,
+        "tokens": tokens,
     }
     return rules
 
@@ -103,6 +117,14 @@ def seq_axes_for_cache(batch: int, mesh: Mesh) -> Tuple[Any, Any]:
     s_axes.append("model")
     return (tuple(b_axes) if b_axes else None,
             tuple(s_axes) if len(s_axes) > 1 else s_axes[0])
+
+
+def token_spec(batch: int, mesh: Mesh) -> P:
+    """[B, N, ...] activation spec for the sequence-parallel engine: batch
+    over whichever data axes divide it, tokens over the 'seq' axis."""
+    b = batch_spec(batch, mesh)[0]
+    seq = SEQ_AXIS if SEQ_AXIS in mesh.axis_names else None
+    return P(b, seq)
 
 
 def named(mesh: Mesh, spec: P) -> NamedSharding:

@@ -2,8 +2,17 @@ import os
 import sys
 from pathlib import Path
 
-# NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests
-# and benches must see 1 device (the 512-device flag is dryrun.py-only).
+# NOTE: do NOT set xla_force_host_platform_device_count unconditionally —
+# smoke tests and benches must see 1 device (the 512-device flag is
+# dryrun.py-only). The distributed suite re-launches itself in a subprocess
+# with REPRO_FAKE_DEVICES=8 (tests/test_distributed.py); honoring it here,
+# BEFORE jax initializes, is the env-guard half of that handshake.
+if os.environ.get("REPRO_FAKE_DEVICES"):
+    os.environ["XLA_FLAGS"] = (
+        f"{os.environ.get('XLA_FLAGS', '')} "
+        f"--xla_force_host_platform_device_count="
+        f"{os.environ['REPRO_FAKE_DEVICES']}").strip()
+
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 sys.path.insert(0, str(Path(__file__).resolve().parent))
 
@@ -37,6 +46,17 @@ def tiny_dit_cfg() -> ModelConfig:
         mlp_activation="gelu", norm_type="layernorm",
         param_dtype="float32", compute_dtype="float32", remat="none",
         max_seq_len=256)
+
+
+@pytest.fixture(scope="session")
+def eight_fake_devices():
+    """The fake-device mesh pool for distributed tests. Skips unless the
+    process was launched with REPRO_FAKE_DEVICES=8 (see the env guard at
+    the top of this file); tests/test_distributed.py owns the subprocess
+    that does so."""
+    if jax.device_count() < 8:
+        pytest.skip("needs REPRO_FAKE_DEVICES=8 (8 fake host devices)")
+    return jax.devices()[:8]
 
 
 @pytest.fixture(scope="session")

@@ -32,6 +32,28 @@ def test_packed_equals_unpacked(tiny_dit_cfg, trained_like_dit):
                                    atol=2e-3, rtol=2e-3)
 
 
+def test_packed_long_sequence_blocked_path(tiny_dit_cfg, trained_like_dit,
+                                           monkeypatch):
+    """Long packed sequences (N above the blocked-attention threshold WITH
+    segment ids) must route through the flash-style blocked path instead of
+    materializing [B,H,N,N] dense scores — and match the dense result.
+    Regression for the packed-video CFG OOM (ISSUE 2 satellite)."""
+    from repro.models import attention as attn_mod
+    fparams, fcfg = flexify(trained_like_dit, tiny_dit_cfg, [(1, 4, 4)])
+    B, r = 2, 4
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (r, B, 1, 16, 16, 4))
+    t = jnp.asarray([5.0, 50.0])
+    conds = jax.random.randint(key, (r, B), 0, 10)
+    dense = packed_weak_forward(fparams, x, t, conds, fcfg, mode=1)
+    # packed row = 4×16 = 64 tokens; force it over the threshold so the
+    # segment-aware blocked path runs (q_block smaller than the row)
+    monkeypatch.setattr(attn_mod, "BLOCKED_ATTN_THRESHOLD", 16)
+    blocked = packed_weak_forward(fparams, x, t, conds, fcfg, mode=1)
+    np.testing.assert_allclose(np.asarray(blocked), np.asarray(dense),
+                               atol=1e-5, rtol=1e-5)
+
+
 def test_packing_cost_table(tiny_dit_cfg, trained_like_dit):
     _, fcfg = flexify(trained_like_dit, tiny_dit_cfg, [(1, 4, 4)])
     costs = packing_cost(fcfg, 1, n_images=8)
