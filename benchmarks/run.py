@@ -20,12 +20,14 @@ SUITES = {
     "pipeline": ("pipeline_cache", "fig6_fid_vs_compute", "fig7_t2i",
                  "adaptive_scheduler", "flow_matching"),
     "distributed": ("distributed_seqpar",),
+    "serving": ("serving_engine",),
 }
 
 
 def main() -> None:
     from benchmarks import (bench_core, bench_distributed, bench_extensions,
-                            bench_modalities, bench_perf, bench_pipeline)
+                            bench_modalities, bench_perf, bench_pipeline,
+                            bench_serving)
     from benchmarks.roofline_table import bench_roofline
 
     benches = [
@@ -43,6 +45,7 @@ def main() -> None:
         ("flow_matching", bench_extensions.bench_flow_matching),
         ("pipeline_cache", bench_pipeline.bench_pipeline_cache),
         ("distributed_seqpar", bench_distributed.bench_distributed),
+        ("serving_engine", bench_serving.bench_serving),
         ("roofline", bench_roofline),
     ]
     argv = sys.argv[1:]

@@ -19,6 +19,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.base import ModelConfig
 from repro.distributed import attention as dist_attn
 from repro.distributed.partition import ParallelSpec, resolve_impl
+from repro.runtime.padding import pad_to, round_up_to_multiple
 
 
 def mesh_fingerprint(mesh: Optional[Mesh]) -> Optional[Tuple]:
@@ -64,13 +65,12 @@ class SeqParallel:
         engine's inter-layer layout. Padding tokens get segment id -1 so
         they never contribute as attention keys."""
         B, N = tok.shape[:2]
-        pad = -N % self.sp
-        if pad:
-            tok = jnp.pad(tok, ((0, 0), (0, pad), (0, 0)))
+        target = round_up_to_multiple(N, self.sp)
+        if target != N:
+            tok = pad_to(tok, target, axis=1)
             if segment_ids is None:
                 segment_ids = jnp.zeros((B, N), jnp.int32)
-            segment_ids = jnp.pad(segment_ids, ((0, 0), (0, pad)),
-                                  constant_values=-1)
+            segment_ids = pad_to(segment_ids, target, axis=1, value=-1)
         tok = jax.lax.with_sharding_constraint(
             tok, NamedSharding(self.mesh, self._interlayer_spec(tok.ndim)))
         return tok, segment_ids

@@ -22,6 +22,7 @@ from repro.configs.base import ModelConfig
 from repro.core.scheduler import (FlexiSchedule, dit_block_flops,
                                   dit_nfe_flops)
 from repro.models import dit as dit_mod
+from repro.runtime.padding import round_up_to_multiple
 
 ATTN_IMPLS = ("auto", "ulysses", "ring")
 
@@ -52,7 +53,7 @@ class ParallelSpec:
 
 def padded_tokens(n_tokens: int, sp: int) -> int:
     """Smallest multiple of ``sp`` holding ``n_tokens`` tokens."""
-    return -(-n_tokens // sp) * sp
+    return round_up_to_multiple(n_tokens, sp)
 
 
 @dataclasses.dataclass(frozen=True)

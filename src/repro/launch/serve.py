@@ -4,18 +4,22 @@ LM path: prefill + greedy decode over fixed batch slots
 (continuous-batching-lite: finished slots are refilled from the request
 queue between decode steps).
 
-DiT path: FlexiPipeline-backed image serving over fixed batch slots. Each
-request carries a class label and a relative-compute budget; requests are
-bucketed onto a plan menu (one ``SamplingPlan`` per ``--budget-levels``
-entry), batches are padded to exactly ``--batch-slots`` so every batch of
-a bucket reuses one compiled phase runner, and budget switches between
-batches never recompile (DESIGN.md §pipeline). With ``--mesh DATAxSEQ``
-the pipeline runs on a device mesh: batches go data-parallel across the
-replica axis while each request's token sequence scatters over the 'seq'
-axis through the distributed engine (DESIGN.md §distributed).
+DiT path: the continuous-batching serving engine (``repro.serving``,
+DESIGN.md §serving). Requests carry a class label, a relative-compute
+budget quantized onto the ``--budget-levels`` plan menu, and an optional
+deadline; the engine keeps many requests in flight at different denoise
+steps and packs each iteration token-wise (weak-phase requests
+contribute fewer tokens) into compile-once bucket layouts under
+``--max-tokens-per-step``. ``--policy`` picks admission/step ordering:
+``fifo``, ``edf`` (earliest deadline first), or ``degrade`` (SLA-aware:
+queued requests are demoted to the highest budget level the measured
+arrival rate sustains). With ``--mesh DATAxSEQ`` the legacy fixed-slot
+driver runs instead: the packed engine is single-host, while the mesh
+path shards each batch over devices (DESIGN.md §distributed).
 
   python -m repro.launch.serve --arch deepseek-7b --smoke --requests 8
   python -m repro.launch.serve --arch dit-xl-2 --budget 0.6 --smoke
+  python -m repro.launch.serve --arch dit-xl-2 --smoke --policy degrade
   python -m repro.launch.serve --arch dit-xl-2 --mesh 1x8 --budget 0.6 --smoke
 """
 from __future__ import annotations
@@ -33,6 +37,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.launch import steps as st
 from repro.models import lm
+from repro.runtime.padding import pad_kv_cache
 
 
 def parse_budget_levels(arg: Optional[str], base: float) -> List[float]:
@@ -64,15 +69,36 @@ def parse_budget_levels(arg: Optional[str], base: float) -> List[float]:
     return sorted(levels)
 
 
+def build_plan_menu(cfg, args, parallel=None) -> Dict[float, "object"]:
+    """``--budget-levels`` → validated ``{level: SamplingPlan}``, printing
+    one ``[plan]`` line per level."""
+    from repro.pipeline import SamplingPlan
+
+    levels = parse_budget_levels(getattr(args, "budget_levels", None),
+                                 args.budget)
+    plans: Dict[float, SamplingPlan] = {}
+    for b in levels:
+        plan = SamplingPlan(T=args.T, budget=float(b), solver=args.solver,
+                            guidance_scale=args.cfg_scale, parallel=parallel)
+        plan.validate(cfg)
+        plans[b] = plan
+        fs = plan.resolve_schedule(cfg)
+        print(f"[plan] budget<={b:.2f}: T_weak={fs.phases[0][1]}/{args.T} "
+              f"relative_compute={plan.relative_compute(cfg):.3f}")
+    return plans
+
+
 def serve_dit(cfg, args) -> None:
-    """Serve DiT sampling requests from a queue over fixed batch slots."""
+    """Serve DiT sampling requests: continuous-batching engine by default,
+    the fixed-slot mesh driver under ``--mesh``."""
     from repro.diffusion import schedule as sch
     from repro.launch.mesh import make_inference_mesh, parse_mesh_arg
     from repro.models import dit as dit_mod
-    from repro.pipeline import FlexiPipeline, ParallelSpec, SamplingPlan
+    from repro.pipeline import FlexiPipeline, ParallelSpec
 
     mesh = None
     parallel = None
+    s_sz = 1
     if getattr(args, "mesh", None):
         d_sz, s_sz = parse_mesh_arg(args.mesh)
         mesh = make_inference_mesh(d_sz, s_sz)
@@ -85,23 +111,77 @@ def serve_dit(cfg, args) -> None:
     params = dit_mod.init_dit(cfg, key)          # smoke: untrained weights
     pipe = FlexiPipeline(params, cfg, sch.linear_schedule(args.train_T),
                          mesh=mesh)
-    T, B = args.T, args.batch_slots
+    plans = build_plan_menu(cfg, args, parallel)
+    if mesh is not None:
+        _serve_dit_fixed_slots(cfg, args, pipe, plans, s_sz, parallel, key)
+    else:
+        _serve_dit_engine(cfg, args, pipe, plans)
 
-    # Plan menu: requests are quantized onto a few budget levels so each
-    # level compiles exactly once and batches can share slots.
-    levels = parse_budget_levels(getattr(args, "budget_levels", None),
-                                 args.budget)
-    plans: Dict[float, SamplingPlan] = {}
-    for b in levels:
-        plan = SamplingPlan(T=T, budget=float(b), solver=args.solver,
-                            guidance_scale=args.cfg_scale, parallel=parallel)
-        plan.validate(cfg)
-        plans[b] = plan
-        fs = plan.resolve_schedule(cfg)
-        print(f"[plan] budget<={b:.2f}: T_weak={fs.phases[0][1]}/{T} "
-              f"relative_compute={plan.relative_compute(cfg):.3f}")
-        if parallel is not None:
-            from repro.distributed import plan_partition
+
+def _serve_dit_engine(cfg, args, pipe, plans) -> None:
+    """The continuous-batching path (DESIGN.md §serving)."""
+    from repro.serving import ServingEngine
+
+    policy = getattr(args, "policy", None) or "fifo"
+    max_tokens = getattr(args, "max_tokens_per_step", None)
+    engine = ServingEngine(pipe, plans, policy=policy,
+                           max_tokens_per_step=max_tokens)
+    print(engine.menu.describe())
+
+    levels = sorted(plans)
+    rng = np.random.default_rng(0)
+
+    def submit_wave(n: int) -> None:
+        now = engine.clock()
+        for i in range(n):
+            deadline = now + float(rng.uniform(0.5, 5.0))
+            engine.submit(cond=int(rng.integers(0, cfg.dit.num_classes)),
+                          budget=levels[i % len(levels)], deadline=deadline)
+
+    t0 = time.time()
+    # warmup wave compiles the bucket layouts this workload visits ...
+    submit_wave(args.requests)
+    results = engine.run()
+    warm = engine.cache_stats()
+    # ... after which serving the same workload shape is compile-free
+    submit_wave(args.requests)
+    results += engine.run()
+    dt = time.time() - t0
+
+    done = len(results)
+    stats = engine.cache_stats()
+    m = engine.metrics.summary(wall=dt)
+    for r in results[:4]:
+        print(f"[served] req={r.request.id} budget={r.budget_served:.2f} "
+              f"latency={r.record.latency:.2f}s "
+              f"x0_std={float(jnp.std(r.x0)):.3f}", flush=True)
+    print(f"served {done} requests in {int(m['steps'])} engine steps, "
+          f"{dt:.1f}s ({done / max(dt, 1e-9):.2f} img/s), "
+          f"{m.get('flops', 0.0) / 1e9:.2f} GFLOPs total")
+    print(f"[metrics] policy={policy} p50={m['p50']:.2f}s p99={m['p99']:.2f}s "
+          f"packing_eff={m['packing_efficiency']:.3f} "
+          f"deadline_hit={m.get('deadline_hit_rate', 1.0):.2f} "
+          f"degraded={int(m['degraded'])}")
+    print(f"[cache] runners={stats['runners']} compiled={stats['compiled']} "
+          f"hits={stats['hits']} misses={stats['misses']}")
+    # only the fifo drain replays deterministically (edf priorities move
+    # with the wall clock, degradation shifts the level mix); frozen-mode
+    # zero-compile serving for those is exercised in bench_serving
+    if policy == "fifo":
+        assert stats["compiled"] == warm["compiled"], \
+            "steady-state serving must not recompile after bucket warmup"
+
+
+def _serve_dit_fixed_slots(cfg, args, pipe, plans, s_sz, parallel, key
+                           ) -> None:
+    """Legacy fixed-batch-slot driver, kept for ``--mesh`` runs (the
+    packed engine is single-host)."""
+    T, B = args.T, args.batch_slots
+    levels = sorted(plans)
+    if parallel is not None:
+        from repro.distributed import plan_partition
+        for b in levels:
+            fs = plans[b].resolve_schedule(cfg)
             part = plan_partition(cfg, fs, s_sz, parallel)
             per_phase = " ".join(
                 f"m{p.mode}:{p.tokens}+{p.pad}pad/{p.sp}" for p, nn in
@@ -181,13 +261,7 @@ def serve_lm(cfg, args) -> None:
                                           cfg.audio_frames, cfg.d_model))
         logits, cache = prefill(params, inputs)
         # pad cache along seq to S_max so decode can write new positions
-        def pad_seq(x):
-            if x.ndim >= 4 and x.shape[-3] == args.prompt_len:
-                pad = [(0, 0)] * x.ndim
-                pad[-3] = (0, args.max_new)
-                return jnp.pad(x, pad)
-            return x
-        cache = jax.tree.map(pad_seq, cache)
+        cache = pad_kv_cache(cache, args.prompt_len, args.max_new)
         tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
         outs = [tok]
         for i in range(args.max_new - 1):
@@ -221,6 +295,14 @@ def main():
     ap.add_argument("--budget-levels", default=None,
                     help="comma-separated relative-compute menu, e.g. "
                          "'0.4,0.6,1.0' (default: derived from --budget)")
+    ap.add_argument("--policy", default="fifo",
+                    choices=["fifo", "edf", "degrade"],
+                    help="serving-engine admission/step policy: arrival "
+                         "order, earliest deadline first, or SLA-aware "
+                         "budget degradation under load")
+    ap.add_argument("--max-tokens-per-step", type=int, default=None,
+                    help="token-packing budget of one engine step "
+                         "(default: four full-grid CFG requests)")
     ap.add_argument("--mesh", default=None,
                     help="DATAxSEQ device mesh for the DiT path, e.g. 1x8: "
                          "data-parallel replicas x sequence-parallel shards")

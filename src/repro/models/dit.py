@@ -284,26 +284,20 @@ def condition_vector(params: Params, t: jax.Array, cond: Any,
     return te
 
 
-def dit_forward(params: Params, x_t: jax.Array, t: jax.Array, cond: Any,
-                cfg: ModelConfig, *, mode: int = 0,
-                text_mask: Optional[jax.Array] = None,
-                latent_shape: Optional[Tuple[int, int, int, int]] = None,
-                parallel: Optional[Any] = None) -> jax.Array:
-    """Denoiser NFE.  x_t: [B,F,H,W,C]; t: [B]; cond: labels [B] int32 (class)
-    or text embeddings [B,T,dc] (text). Returns [B,F,H,W,c_out].
-
-    ``parallel``: optional ``distributed.engine.SeqParallel`` — tokens are
-    padded to the sequence-axis size, scattered across the mesh, and each
-    block's attention runs the Ulysses/ring collective; the per-mode token
-    count (and hence the sharding) changes at FlexiSchedule phase
-    boundaries, which is handled here by re-padding per call."""
+def embed_mode_tokens(params: Params, x_t: jax.Array, cfg: ModelConfig,
+                      mode: int,
+                      latent_shape: Optional[Tuple[int, int, int, int]] = None
+                      ) -> jax.Array:
+    """Tokenize [B,F,H,W,C] latents at ``mode``'s patch size: per-mode (or
+    flex) patch embedding + positional embedding + per-mode LN. Shared by
+    the plain forward and the packed (NaViT-style) paths so packed
+    segments see bit-identical token streams."""
     dit = cfg.dit
     ls = latent_shape or dit.latent_shape
     p = patch_sizes(cfg)[mode]
     pp = dit.underlying_patch_size
     dtype = dtype_of(cfg.compute_dtype)
     x_t = x_t.astype(dtype)
-
     if mode > 0 and "embed_new" in params:
         pn = params["embed_new"][f"m{mode}"]
         patches = patch_mod.patchify(x_t, p)
@@ -319,6 +313,50 @@ def dit_forward(params: Params, x_t: jax.Array, t: jax.Array, cond: Any,
         tok = tok + params["ps_embed"][mode - 1].astype(dtype)[None, None]
         tok = layer_norm(tok, 1.0 + params["ps_ln"]["scale"][mode - 1],
                          params["ps_ln"]["bias"][mode - 1])
+    return tok
+
+
+def deembed_mode_tokens(params: Params, tok: jax.Array, cfg: ModelConfig,
+                        mode: int,
+                        latent_shape: Optional[Tuple[int, int, int, int]] = None
+                        ) -> jax.Array:
+    """Project [B, N_mode, d] tokens back to [B,F,H,W,c_out] latents
+    (inverse of :func:`embed_mode_tokens`, minus the final adaLN which the
+    caller applies)."""
+    dit = cfg.dit
+    ls = latent_shape or dit.latent_shape
+    p = patch_sizes(cfg)[mode]
+    pp = dit.underlying_patch_size
+    dtype = tok.dtype
+    if mode > 0 and "deembed_new" in params:
+        pn = params["deembed_new"][f"m{mode}"]
+        patches = jnp.einsum("bnd,dcq->bnqc", tok, pn["w"].astype(dtype),
+                             preferred_element_type=jnp.float32)
+        patches = (patches
+                   + pn["b"].T.astype(jnp.float32)[None, None]).astype(dtype)
+        return patch_mod.unpatchify(patches, ls, p)
+    return patch_mod.deembed_tokens_flex(params["deembed"]["w_flex"],
+                                         params["deembed"]["b_flex"], tok,
+                                         ls, p, pp, c_out_dim(cfg))
+
+
+def dit_forward(params: Params, x_t: jax.Array, t: jax.Array, cond: Any,
+                cfg: ModelConfig, *, mode: int = 0,
+                text_mask: Optional[jax.Array] = None,
+                latent_shape: Optional[Tuple[int, int, int, int]] = None,
+                parallel: Optional[Any] = None) -> jax.Array:
+    """Denoiser NFE.  x_t: [B,F,H,W,C]; t: [B]; cond: labels [B] int32 (class)
+    or text embeddings [B,T,dc] (text). Returns [B,F,H,W,c_out].
+
+    ``parallel``: optional ``distributed.engine.SeqParallel`` — tokens are
+    padded to the sequence-axis size, scattered across the mesh, and each
+    block's attention runs the Ulysses/ring collective; the per-mode token
+    count (and hence the sharding) changes at FlexiSchedule phase
+    boundaries, which is handled here by re-padding per call."""
+    dit = cfg.dit
+    ls = latent_shape or dit.latent_shape
+    dtype = dtype_of(cfg.compute_dtype)
+    tok = embed_mode_tokens(params, x_t, cfg, mode, ls)
 
     n_real = tok.shape[1]
     seg_ids = None
@@ -349,17 +387,7 @@ def dit_forward(params: Params, x_t: jax.Array, t: jax.Array, cond: Any,
                   params["final"]["ada"]["w"], params["final"]["ada"]["b"])
     sh, sc = jnp.split(ada, 2, axis=-1)
     tok = _modulate(_ln(tok), sh, sc)
-    if mode > 0 and "deembed_new" in params:
-        pn = params["deembed_new"][f"m{mode}"]
-        patches = jnp.einsum("bnd,dcq->bnqc", tok, pn["w"].astype(dtype),
-                             preferred_element_type=jnp.float32)
-        patches = (patches + pn["b"].T.astype(jnp.float32)[None, None]).astype(dtype)
-        out = patch_mod.unpatchify(patches, ls, p)
-    else:
-        out = patch_mod.deembed_tokens_flex(params["deembed"]["w_flex"],
-                                            params["deembed"]["b_flex"], tok,
-                                            ls, p, pp, c_out_dim(cfg))
-    return out
+    return deembed_mode_tokens(params, tok, cfg, mode, ls)
 
 
 def eps_prediction(out: jax.Array, cfg: ModelConfig) -> jax.Array:

@@ -6,6 +6,7 @@ guidance, LoRA handling, optional sequence-parallel execution);
 executables and runs plans without ever recompiling for repeated calls.
 """
 from repro.distributed.partition import ParallelSpec  # noqa: F401
+from repro.pipeline.packed import PackLayout, make_packed_step_fn  # noqa: F401
 from repro.pipeline.pipeline import FlexiPipeline, SampleResult  # noqa: F401
 from repro.pipeline.plan import (AdaptiveBudget, SamplingPlan,  # noqa: F401
                                  solve_t_weak)

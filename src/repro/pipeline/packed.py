@@ -1,0 +1,193 @@
+"""Step-granular packed runners (DESIGN.md §serving).
+
+A :class:`PackLayout` is the static shape of ONE engine step: how many
+requests of each patch mode advance together, whether CFG doubles each
+request into a (conditional, unconditional) segment pair, and the token
+capacity of each packed row. :func:`make_packed_step_fn` builds the
+executable for a layout — embed every segment at its own mode, pack rows
+with block-diagonal attention (``core.packing.packed_mixed_forward``),
+combine guidance, and apply one solver update per request at that
+request's own ``(t, t_prev)``. Timesteps, conditioning, latents, params,
+and solver keys are all traced, so a layout compiles exactly once no
+matter which requests, denoise steps, or budgets flow through it —
+``FlexiPipeline.packed_step`` caches these next to the phase runners so
+``cache_stats()`` covers bucket warmup too.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import packing
+from repro.core.guidance import split_model_out
+from repro.diffusion import schedule as sch
+from repro.models import dit as dit_mod
+
+PACKED_SOLVERS = ("ddim", "ddpm")
+
+
+@dataclasses.dataclass(frozen=True)
+class PackLayout:
+    """Static shape of one packed engine step.
+
+    ``groups``: ``((mode, n_requests), ...)`` sorted by mode, all counts
+    positive. ``guided``: CFG doubles every request into two segments.
+    ``row_capacity``: tokens per packed row; 0 resolves to the mode-0
+    sequence length at build time.
+    """
+    groups: Tuple[Tuple[int, int], ...]
+    guided: bool = True
+    row_capacity: int = 0
+
+    def __post_init__(self):
+        if not self.groups:
+            raise ValueError("layout needs at least one (mode, n) group")
+        modes = [m for m, _ in self.groups]
+        if sorted(modes) != modes or len(set(modes)) != len(modes):
+            raise ValueError(f"groups must be mode-sorted and unique, "
+                             f"got {self.groups}")
+        if any(n < 1 for _, n in self.groups) or any(m < 0 for m in modes):
+            raise ValueError(f"modes must be >= 0 and counts >= 1, "
+                             f"got {self.groups}")
+
+    @property
+    def n_requests(self) -> int:
+        return sum(n for _, n in self.groups)
+
+    def capacity_for(self, m: int) -> int:
+        """Request slots this layout offers at mode ``m``."""
+        return dict(self.groups).get(m, 0)
+
+    def resolve_capacity(self, cfg: ModelConfig) -> int:
+        if self.row_capacity:
+            return self.row_capacity
+        return max([dit_mod.tokens_for_mode(cfg, 0)]
+                   + [dit_mod.tokens_for_mode(cfg, m) for m, _ in self.groups])
+
+    def segment_modes(self) -> Tuple[int, ...]:
+        """Flat per-segment mode list (CFG doubling applied)."""
+        mult = 2 if self.guided else 1
+        out = []
+        for m, n in self.groups:
+            out.extend([m] * (mult * n))
+        return tuple(out)
+
+    def cost(self, cfg: ModelConfig) -> packing.MixedPackCost:
+        """Rows / FLOPs / token ledger of one step at this layout."""
+        return packing.mixed_pack_cost(cfg, self.segment_modes(),
+                                       self.resolve_capacity(cfg))
+
+    @staticmethod
+    def for_counts(counts: Dict[int, int], guided: bool = True,
+                   row_capacity: int = 0) -> "PackLayout":
+        groups = tuple(sorted((m, n) for m, n in counts.items() if n > 0))
+        return PackLayout(groups=groups, guided=guided,
+                          row_capacity=row_capacity)
+
+
+def make_packed_step_fn(cfg: ModelConfig, sched: sch.DiffusionSchedule,
+                        layout: PackLayout, *, solver: str = "ddim",
+                        guidance_scale: float = 1.5,
+                        clip_x0: float = 0.0,
+                        k_steps: int = 1) -> Callable:
+    """Build ``step(params, xs, metas, keys)`` for a layout.
+
+    Per group ``g`` (one per mode): ``xs[g]`` [n_g, F, H, W, C] latents;
+    ``metas[g]`` [k, 3, n_g] int32 with rows ``(t, t_prev, cond)`` per
+    micro-step — each request at its OWN denoise step (``t_prev=-1``
+    means the final x0 step), one host→device transfer per group;
+    ``keys[g]`` [k, n_g, 2] uint32 per-request solver keys (DDPM
+    ancestral noise; ignored by DDIM). Returns one ``x`` array per group
+    after ``k_steps`` solver updates.
+
+    ``k_steps > 1`` runs the packed step body under ``lax.scan`` — the
+    engine dispatches K consecutive same-mode denoise steps in one call,
+    recovering the whole-trajectory sampler's scan fusion while keeping
+    join/leave at K-step granularity. Matches per-request
+    ``FlexiPipeline.sample`` bit-for-bit in expectation: same embedding
+    path, same guidance combine, same solver arithmetic, and DDPM noise
+    drawn per request from the same key derivation.
+    """
+    if solver not in PACKED_SOLVERS:
+        raise ValueError(f"packed steps support solvers {PACKED_SOLVERS}, "
+                         f"got {solver!r}")
+    if cfg.dit.conditioning != "class":
+        raise ValueError("packed steps currently serve class-conditioned "
+                         "DiTs (text conditioning needs per-segment "
+                         "cross-attention plumbing)")
+    if k_steps < 1:
+        raise ValueError(f"k_steps must be >= 1, got {k_steps}")
+    guided = layout.guided
+    if guided and guidance_scale == 0.0:
+        raise ValueError("guided layout with guidance_scale=0; build an "
+                         "unguided layout instead")
+    null_label = cfg.dit.num_classes
+    groups = layout.groups
+    cap = layout.resolve_capacity(cfg)
+    seg_groups = tuple((m, (2 if guided else 1) * n) for m, n in groups)
+
+    def one_step(params, xs, metas, keys):
+        seg_xs, seg_ts, seg_conds = [], [], []
+        for g, (mode, n) in enumerate(groups):
+            t_g, cond_g = metas[g][0], metas[g][2]
+            if guided:
+                seg_xs.append(jnp.concatenate([xs[g], xs[g]], axis=0))
+                seg_ts.append(jnp.concatenate([t_g, t_g], axis=0))
+                null = jnp.full((n,), null_label, jnp.int32)
+                seg_conds.append(jnp.concatenate([cond_g, null], axis=0))
+            else:
+                seg_xs.append(xs[g])
+                seg_ts.append(t_g)
+                seg_conds.append(cond_g)
+        outs = packing.packed_mixed_forward(params, cfg, seg_groups, seg_xs,
+                                            seg_ts, seg_conds,
+                                            row_capacity=cap)
+        x_prevs = []
+        for g, (mode, n) in enumerate(groups):
+            t_g, tp_g = metas[g][0], metas[g][1]
+            eps, logvar = split_model_out(outs[g], cfg)
+            if guided:
+                e_c, e_u = jnp.split(eps, 2, axis=0)
+                eps_g = e_u + guidance_scale * (e_c - e_u)
+                lv = None if logvar is None else jnp.split(logvar, 2,
+                                                           axis=0)[0]
+            else:
+                eps_g, lv = eps, logvar
+            if solver == "ddim":
+                x_prev = sch.ddim_step(sched, xs[g], eps_g, t_g,
+                                       tp_g, 0.0, None)
+            else:
+                # per-request ancestral noise: vmap draws each request's
+                # noise from its own key, exactly as an n=1 pipeline batch
+                if lv is None:
+                    x_prev = jax.vmap(
+                        lambda x1, e1, t1, k1: sch.ddpm_step(
+                            sched, x1, e1, t1, k1, None, clip_x0)
+                    )(xs[g], eps_g, t_g, keys[g])
+                else:
+                    x_prev = jax.vmap(
+                        lambda x1, e1, t1, k1, lv1: sch.ddpm_step(
+                            sched, x1, e1, t1, k1, lv1, clip_x0)
+                    )(xs[g], eps_g, t_g, keys[g], lv)
+            x_prevs.append(x_prev)
+        return tuple(x_prevs)
+
+    if k_steps == 1:
+        def step(params, xs, metas, keys):
+            m1 = tuple(m[0] for m in metas)
+            k1 = tuple(k[0] for k in keys)
+            return one_step(params, xs, m1, k1)
+        return step
+
+    def step(params, xs, metas, keys):
+        def body(carry, per_step):
+            m, k = per_step
+            return one_step(params, carry, m, k), None
+        out, _ = jax.lax.scan(body, tuple(xs), (tuple(metas), tuple(keys)))
+        return out
+
+    return step

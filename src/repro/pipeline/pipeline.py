@@ -41,6 +41,7 @@ from repro.core.scheduler import FlexiSchedule
 from repro.diffusion import flow, sampler
 from repro.diffusion import schedule as sch
 from repro.distributed.engine import SeqParallel, mesh_fingerprint
+from repro.pipeline.packed import PackLayout, make_packed_step_fn
 from repro.pipeline.plan import FLOW_SOLVERS, SamplingPlan
 from repro.runtime import sharding as sharding_mod
 
@@ -215,6 +216,48 @@ class FlexiPipeline:
             return flow.sample_flow_phased(phases, x_T, solver=solver)
 
         return jax.jit(run)
+
+    def packed_step(self, layout: PackLayout, *, solver: str = "ddim",
+                    guidance_scale: float = 1.5, clip_x0: float = 0.0,
+                    k_steps: int = 1) -> Callable:
+        """Step-granular entry point (DESIGN.md §serving): the compiled
+        executable advancing ONE packed engine step (``k_steps``
+        micro-steps under lax.scan) at ``layout``. Latents, timesteps,
+        conditioning, params, and solver keys are traced, so the serving
+        engine replays a layout across arbitrary requests and denoise
+        steps without recompiling; runners share this pipeline's cache,
+        so ``cache_stats()`` tracks bucket warmup."""
+        key = ("packed", layout, solver, guidance_scale, clip_x0, k_steps)
+        return self._lookup(
+            self._runners, key,
+            lambda: jax.jit(make_packed_step_fn(
+                self.cfg, self.sched, layout, solver=solver,
+                guidance_scale=guidance_scale, clip_x0=clip_x0,
+                k_steps=k_steps)))
+
+    def packed_step_is_warm(self, layout: PackLayout, *, solver: str = "ddim",
+                            guidance_scale: float = 1.5,
+                            clip_x0: float = 0.0,
+                            k_steps: int = 1) -> bool:
+        """Whether :meth:`packed_step` would be a cache hit — the serving
+        planner prefers warm executables so steady-state traffic never
+        stalls on a compile."""
+        return ("packed", layout, solver, guidance_scale, clip_x0,
+                k_steps) in self._runners
+
+    def warm_packed_layouts(self, *, solver: str = "ddim",
+                            guidance_scale: float = 1.5,
+                            clip_x0: float = 0.0
+                            ) -> Dict[int, List[PackLayout]]:
+        """Compiled packed-step layouts grouped by micro-step depth k, for
+        the given step family. A frozen serving engine
+        (``allow_cold=False``) restricts its planner to these."""
+        out: Dict[int, List[PackLayout]] = {}
+        for key in self._runners:
+            if key[0] == "packed" and key[2:5] == (solver, guidance_scale,
+                                                   clip_x0):
+                out.setdefault(key[5], []).append(key[1])
+        return out
 
     def _nfe_fn(self, mode: int, scale: float) -> Callable:
         cfg = self.cfg

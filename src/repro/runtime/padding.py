@@ -1,0 +1,48 @@
+"""Shared padding helpers.
+
+Every subsystem that feeds fixed-shape executables needs the same two
+moves — round a count up to a bucket boundary and pad an array along one
+axis to a target length — plus the serving-specific KV-cache pad. They
+used to be re-implemented inline in ``launch/serve.py`` (LM decode),
+``distributed/partition.py`` (pad-to-divisible token shardings), the
+distributed engine's pad/shard plumbing, and now the serving batcher;
+this module is the single home.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def round_up_to_multiple(n: int, multiple: int) -> int:
+    """Smallest multiple of ``multiple`` that is >= ``n``."""
+    if multiple < 1:
+        raise ValueError(f"multiple must be >= 1, got {multiple}")
+    return -(-n // multiple) * multiple
+
+
+def pad_to(x: jax.Array, target: int, axis: int, value: float = 0.0
+           ) -> jax.Array:
+    """Pad ``x`` along ``axis`` up to length ``target`` (no-op if equal)."""
+    cur = x.shape[axis]
+    if cur > target:
+        raise ValueError(f"cannot pad axis {axis} of length {cur} down to "
+                         f"{target}")
+    if cur == target:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, target - cur)
+    return jnp.pad(x, pad, constant_values=value)
+
+
+def pad_kv_cache(cache: Any, seq_len: int, extra: int) -> Any:
+    """Pad every KV-cache leaf (``[..., S, H, hd]`` with ``S == seq_len``)
+    by ``extra`` positions along the sequence axis so decode steps can
+    write past the prefill length. Non-cache leaves pass through."""
+    def pad_seq(x):
+        if hasattr(x, "ndim") and x.ndim >= 4 and x.shape[-3] == seq_len:
+            return pad_to(x, seq_len + extra, axis=x.ndim - 3)
+        return x
+    return jax.tree.map(pad_seq, cache)

@@ -1,0 +1,15 @@
+"""Continuous-batching DiT serving engine (DESIGN.md §serving).
+
+Iteration-level scheduling over a FlexiPipeline: requests at different
+denoise steps and compute budgets are packed token-wise into
+compile-once bucket layouts every engine step, with SLA-aware admission
+(FIFO / earliest-deadline-first) and load-adaptive budget degradation.
+"""
+from repro.serving.batcher import BucketMenu, count_chain  # noqa: F401
+from repro.serving.controller import (BudgetController,  # noqa: F401
+                                      request_cost_flops)
+from repro.serving.metrics import (RequestRecord, ServingMetrics,  # noqa: F401
+                                   StepRecord)
+from repro.serving.queue import Request, RequestQueue  # noqa: F401
+from repro.serving.scheduler import (ENGINE_POLICIES, InFlight,  # noqa: F401
+                                     LevelPlan, ServedResult, ServingEngine)

@@ -1,0 +1,110 @@
+"""SLA-aware budget control (DESIGN.md §serving).
+
+FlexiDiT's per-step elasticity gives the scheduler a knob no fixed-
+compute model has: under load, requests can be *demoted* to a weaker
+(cheaper) sampling plan instead of queueing without bound. The
+controller solves, from the analytic FLOPs ledger, for the highest
+uniform budget level the current arrival rate sustains:
+
+    highest b  s.t.  lambda * F(b) <= target_util * capacity
+
+where ``F(b)`` is the per-request denoising FLOPs of level ``b``'s plan
+(``core.scheduler.schedule_flops`` via ``SamplingPlan.flops``, plus the
+sequence-parallel padding waste from ``distributed.partition`` when the
+plan shards over a mesh) and ``capacity`` is the engine's measured
+FLOPs/s. Both rates are EWMA estimates fed by ``observe_*`` hooks, so
+deterministic tests can inject them directly.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from repro.configs.base import ModelConfig
+from repro.pipeline.plan import SamplingPlan
+
+
+def request_cost_flops(cfg: ModelConfig, plan: SamplingPlan,
+                       sp: int = 1) -> float:
+    """Analytic FLOPs one request at ``plan`` costs the engine. With
+    ``sp`` sequence-parallel shards the pad-to-divisible waste from the
+    partition plan is real compute and is charged too."""
+    fl = plan.flops(cfg)
+    if sp > 1:
+        from repro.distributed.partition import plan_partition
+        part = plan_partition(cfg, plan.resolve_schedule(cfg), sp,
+                              plan.parallel)
+        fl += part.pad_flops(cfg, cfg_scale_active=plan.guidance_active)
+    return fl
+
+
+class BudgetController:
+    """Solves for the degradation level; stateless apart from two EWMAs."""
+
+    def __init__(self, cfg: ModelConfig, plans: Dict[float, SamplingPlan], *,
+                 target_util: float = 0.85, alpha: float = 0.3, sp: int = 1):
+        if not plans:
+            raise ValueError("controller needs a non-empty plan menu")
+        if not 0.0 < target_util <= 1.0:
+            raise ValueError(f"target_util must be in (0, 1], got "
+                             f"{target_util}")
+        self.levels = tuple(sorted(plans))            # ascending budgets
+        self.costs = {b: request_cost_flops(cfg, p, sp)
+                      for b, p in plans.items()}
+        self.target_util = target_util
+        self.alpha = alpha
+        self._interarrival: Optional[float] = None    # EWMA seconds
+        self._last_arrival: Optional[float] = None
+        self._flops_per_s: Optional[float] = None     # EWMA capacity
+
+    # ------------------------------------------------------------------
+    # Rate estimation
+
+    def observe_arrival(self, now: float) -> None:
+        if self._last_arrival is not None:
+            gap = max(now - self._last_arrival, 1e-9)
+            self._interarrival = (gap if self._interarrival is None else
+                                  (1 - self.alpha) * self._interarrival
+                                  + self.alpha * gap)
+        self._last_arrival = now
+
+    def observe_service(self, flops: float, dt: float) -> None:
+        """Feed one completed chunk of work: ``flops`` retired in ``dt``
+        seconds of engine time."""
+        if dt <= 0:
+            return
+        rate = flops / dt
+        self._flops_per_s = (rate if self._flops_per_s is None else
+                             (1 - self.alpha) * self._flops_per_s
+                             + self.alpha * rate)
+
+    @property
+    def arrival_rate(self) -> Optional[float]:
+        return None if not self._interarrival else 1.0 / self._interarrival
+
+    @property
+    def capacity_flops_per_s(self) -> Optional[float]:
+        return self._flops_per_s
+
+    # ------------------------------------------------------------------
+    # The solve
+
+    def solve(self) -> float:
+        """Highest budget level sustaining the current arrival rate; the
+        lowest level when even it is overloaded; the highest when either
+        rate is still unknown (no evidence of pressure yet)."""
+        lam = self.arrival_rate
+        cap = self.capacity_flops_per_s
+        if lam is None or cap is None:
+            return self.levels[-1]
+        budget_flops = self.target_util * cap / lam    # per-request allowance
+        for b in reversed(self.levels):
+            if self.costs[b] <= budget_flops:
+                return b
+        return self.levels[0]
+
+    def assign(self, requested: float) -> float:
+        """Demote ``requested`` to the solved sustainable level (never
+        promote): the highest menu level <= min(requested, solve())."""
+        ceiling = min(requested, self.solve())
+        eligible = [b for b in self.levels if b <= ceiling]
+        return max(eligible) if eligible else self.levels[0]

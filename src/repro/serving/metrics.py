@@ -1,0 +1,119 @@
+"""Serving telemetry (DESIGN.md §serving).
+
+Tracks per-request lifecycle (arrival → admit → finish, requested vs
+served budget, deadline) and per-step token ledgers (real segment tokens
+vs what the packed layout computed). All timestamps come from the
+engine's clock; percentiles are computed at summary time so a simulated
+clock gives deterministic numbers.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+from typing import Dict, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    id: int
+    arrival: float
+    admit: float
+    finish: float
+    deadline: float
+    budget_requested: float
+    budget_served: float
+    tokens: int                  # useful token-steps this request consumed
+    flops: float
+
+    @property
+    def latency(self) -> float:
+        return self.finish - self.arrival
+
+    @property
+    def met_deadline(self) -> bool:
+        return self.finish <= self.deadline
+
+    @property
+    def degraded(self) -> bool:
+        return self.budget_served < self.budget_requested
+
+
+@dataclasses.dataclass
+class StepRecord:
+    time: float
+    real_tokens: int             # tokens belonging to live requests
+    packed_tokens: int           # rows x capacity the hardware computed
+    n_requests: int
+
+
+class ServingMetrics:
+    """Lifetime counters plus a bounded sliding window of recent records:
+    an engine serving indefinitely must not grow memory per step, and
+    percentiles should reflect recent traffic, not the process lifetime.
+    ``window=None`` keeps everything (fine for tests and benches)."""
+
+    def __init__(self, window: Optional[int] = 8192):
+        self.requests: collections.deque = collections.deque(maxlen=window)
+        self.steps: collections.deque = collections.deque(maxlen=window)
+        self.total_served = 0
+        self.total_steps = 0
+        self.total_tokens = 0
+        self.total_flops = 0.0
+        self.total_degraded = 0
+
+    def record_step(self, now: float, real_tokens: int, packed_tokens: int,
+                    n_requests: int) -> None:
+        self.steps.append(StepRecord(now, real_tokens, packed_tokens,
+                                     n_requests))
+        self.total_steps += 1
+
+    def record_request(self, rec: RequestRecord) -> None:
+        self.requests.append(rec)
+        self.total_served += 1
+        self.total_tokens += rec.tokens
+        self.total_flops += rec.flops
+        self.total_degraded += int(rec.degraded)
+
+    # ------------------------------------------------------------------
+
+    @property
+    def packing_efficiency(self) -> float:
+        """Real segment tokens / packed (computed) tokens, over all steps.
+        1.0 means no row padding and no dummy slots."""
+        packed = sum(s.packed_tokens for s in self.steps)
+        return sum(s.real_tokens for s in self.steps) / packed if packed \
+            else 1.0
+
+    def latency_percentiles(self, qs=(50, 99)) -> Dict[str, float]:
+        if not self.requests:
+            return {f"p{q}": math.nan for q in qs}
+        lat = np.asarray([r.latency for r in self.requests])
+        return {f"p{q}": float(np.percentile(lat, q)) for q in qs}
+
+    def summary(self, wall: Optional[float] = None) -> Dict[str, float]:
+        """Aggregate view; ``wall`` (seconds of serving) prices tokens/s.
+        ``tokens`` counts only useful (real-request) token-steps, so the
+        throughput number is directly comparable across batching
+        strategies with different padding waste. Counts/tokens/FLOPs are
+        lifetime totals; percentiles, hit rates, and packing efficiency
+        cover the sliding window."""
+        out: Dict[str, float] = {
+            "served": float(self.total_served),
+            "steps": float(self.total_steps),
+            "tokens": float(self.total_tokens),
+            "packing_efficiency": self.packing_efficiency,
+            "degraded": float(self.total_degraded),
+        }
+        if self.requests:
+            out.update(self.latency_percentiles())
+            out["deadline_hit_rate"] = float(
+                np.mean([r.met_deadline for r in self.requests]))
+            out["flops"] = self.total_flops
+        if wall is not None and wall > 0:
+            out["wall_s"] = wall
+            out["tokens_per_s"] = self.total_tokens / wall
+            out["requests_per_s"] = self.total_served / wall
+        return out

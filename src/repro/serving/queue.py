@@ -1,0 +1,66 @@
+"""Request admission queue (DESIGN.md §serving).
+
+A :class:`Request` is one image to generate: class label, requested
+relative-compute budget, optional latency deadline, and the PRNG key that
+seeds its prior draw and solver noise (so a served request reproduces the
+same sample as a standalone ``FlexiPipeline.sample`` call with that key).
+The queue orders admission by policy: ``fifo`` (arrival order) or ``edf``
+(earliest deadline first). All timestamps come from the caller's clock,
+so tests drive a simulated clock deterministically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional
+
+import jax
+
+POLICIES = ("fifo", "edf")
+
+
+@dataclasses.dataclass
+class Request:
+    id: int
+    cond: int                            # class label
+    budget: float                        # requested relative-compute level
+    deadline: float = math.inf           # absolute time (caller's clock)
+    key: Optional[jax.Array] = None      # PRNG key; engine derives if None
+    arrival: float = 0.0                 # stamped by the queue
+    _seq: int = dataclasses.field(default=0, repr=False)
+
+
+class RequestQueue:
+    """Pending requests, ordered by an admission policy at pop time."""
+
+    def __init__(self):
+        self._pending: List[Request] = []
+        self._seq = 0
+
+    def __len__(self) -> int:
+        return len(self._pending)
+
+    def __bool__(self) -> bool:
+        return bool(self._pending)
+
+    def submit(self, req: Request, now: float) -> Request:
+        req.arrival = now
+        req._seq = self._seq
+        self._seq += 1
+        self._pending.append(req)
+        return req
+
+    def pop(self, policy: str = "fifo") -> Request:
+        if policy not in POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; known: {POLICIES}")
+        if not self._pending:
+            raise IndexError("pop from empty request queue")
+        if policy == "edf":
+            req = min(self._pending, key=lambda r: (r.deadline, r._seq))
+        else:
+            req = min(self._pending, key=lambda r: r._seq)
+        self._pending.remove(req)
+        return req
+
+    def peek_deadlines(self) -> List[float]:
+        return sorted(r.deadline for r in self._pending)

@@ -1,0 +1,510 @@
+"""Iteration-level continuous-batching engine (DESIGN.md §serving).
+
+The engine keeps many in-flight requests at *different* denoise steps
+and budgets and advances a packed subset of them every iteration:
+
+* **join/leave mid-flight** — new requests enter between any two engine
+  steps; finished latents leave without draining anyone else;
+* **token packing** — each step's batch is composed token-wise from the
+  bucket menu (``serving.batcher``): weak-phase requests contribute
+  ``H*W/ratio^2`` tokens, full-mode requests the full grid, packed into
+  fixed-capacity rows with segment-id masking (``core.packing``);
+* **compile-once** — all executables come from
+  ``FlexiPipeline.packed_step``'s runner cache, keyed by the static
+  layout only, so steady-state serving never recompiles
+  (``cache_stats()`` proves it);
+* **SLA awareness** — with ``policy='edf'`` admission and step priority
+  follow deadlines; with ``policy='degrade'`` the
+  :class:`~repro.serving.controller.BudgetController` demotes queued
+  requests to the highest budget level the current arrival rate
+  sustains.
+
+Requests are served bit-identically to a standalone
+``FlexiPipeline.sample(plan, 1, request.key)`` call: same prior draw,
+same per-phase solver-key derivation, same guidance combine.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.scheduler import dit_nfe_flops
+from repro.diffusion import schedule as sch
+from repro.models import dit as dit_mod
+from repro.pipeline.packed import PackLayout
+from repro.pipeline.pipeline import FlexiPipeline
+from repro.pipeline.plan import SamplingPlan
+from repro.serving.batcher import BucketMenu
+from repro.serving.controller import BudgetController
+from repro.serving.metrics import RequestRecord, ServingMetrics
+from repro.serving.queue import Request, RequestQueue
+
+ENGINE_POLICIES = ("fifo", "edf", "degrade")
+
+
+@dataclasses.dataclass(frozen=True)
+class LevelPlan:
+    """One budget level of the menu, fully resolved for step-wise play."""
+    level: float
+    plan: SamplingPlan
+    ts: np.ndarray               # descending timestep ladder [T]
+    t_prev: np.ndarray           # ts shifted, -1 terminated [T]
+    modes: np.ndarray            # per-step patch mode [T]
+    run_len: np.ndarray          # same-mode steps remaining (incl. self) [T]
+    flops: float                 # analytic per-request denoising FLOPs
+
+
+@dataclasses.dataclass
+class InFlight:
+    req: Request
+    lp: LevelPlan
+    x_src: jax.Array             # [k, F, H, W, C] batch holding the latent
+    x_row: int                   # ... at this row (kept unsliced so step
+    #                              assembly can reuse whole output batches)
+    keys: np.ndarray             # [T, 2] per-step solver keys (host-side)
+    admit: float
+    seq: int
+    step: int = 0
+
+    @property
+    def x(self) -> jax.Array:
+        return self.x_src[self.x_row]
+
+    @property
+    def mode(self) -> int:
+        return int(self.lp.modes[self.step])
+
+    @property
+    def done(self) -> bool:
+        return self.step >= len(self.lp.ts)
+
+
+@dataclasses.dataclass
+class ServedResult:
+    request: Request
+    x0: jax.Array
+    budget_served: float
+    record: RequestRecord
+
+
+class ServingEngine:
+    """Continuous-batching DiT serving on top of a FlexiPipeline.
+
+    >>> engine = ServingEngine(pipe, plans, max_tokens_per_step=1024)
+    >>> engine.submit(cond=3, budget=0.6)
+    >>> results = engine.run()          # drain queue + in-flight
+    """
+
+    def __init__(self, pipe: FlexiPipeline,
+                 plans: Dict[float, SamplingPlan], *,
+                 max_tokens_per_step: Optional[int] = None,
+                 policy: str = "fifo",
+                 clock: Optional[Callable[[], float]] = None,
+                 controller: Optional[BudgetController] = None,
+                 max_inflight: Optional[int] = None,
+                 base_key: Optional[jax.Array] = None,
+                 steps_per_dispatch: int = 8,
+                 menu: Optional[BucketMenu] = None,
+                 allow_cold: bool = True):
+        if policy not in ENGINE_POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; known: "
+                             f"{ENGINE_POLICIES}")
+        self.pipe = pipe
+        self.cfg = pipe.cfg
+        self.clock = clock or time.monotonic
+        self.policy = policy
+        self._validate_menu(plans)
+        ref = next(iter(plans.values()))
+        self.solver = ref.solver
+        self.guidance_scale = ref.guidance_scale
+        self.clip_x0 = ref.clip_x0
+        self.guided = ref.guidance_active
+        self.levels: Dict[float, LevelPlan] = {}
+        modes = {0}
+        for b in sorted(plans):
+            plan = plans[b]
+            fs = plan.resolve_schedule(self.cfg)
+            ts = sch.respaced_timesteps(pipe.sched.num_steps, plan.T)
+            step_modes = np.concatenate(
+                [np.full(n, m, np.int64) for m, n in fs.phases if n])
+            run_len = np.ones(len(step_modes), np.int64)
+            for i in range(len(step_modes) - 2, -1, -1):
+                if step_modes[i] == step_modes[i + 1]:
+                    run_len[i] = run_len[i + 1] + 1
+            self.levels[b] = LevelPlan(
+                level=b, plan=plan, ts=ts,
+                t_prev=np.concatenate([ts[1:], [-1]]),
+                modes=step_modes, run_len=run_len,
+                flops=plan.flops(self.cfg))
+            modes.update(int(m) for m in step_modes)
+        mult = 2 if self.guided else 1
+        self._seg_tokens = {m: dit_mod.tokens_for_mode(self.cfg, m)
+                            for m in sorted(modes)}
+        if max_tokens_per_step is None:
+            max_tokens_per_step = 4 * mult * self._seg_tokens[0]
+        if steps_per_dispatch < 1:
+            raise ValueError(f"steps_per_dispatch must be >= 1, got "
+                             f"{steps_per_dispatch}")
+        self.steps_per_dispatch = steps_per_dispatch
+        self.allow_cold = allow_cold
+        self.menu = menu if menu is not None else BucketMenu(
+            self.cfg, sorted(modes), max_tokens_per_step, guided=self.guided)
+        if menu is not None and menu.guided != self.guided:
+            raise ValueError("shared menu's guided flag mismatches the plan "
+                             "menu's guidance")
+        for m in sorted(modes):
+            if not self.menu.greedy_fit([m])[0]:
+                raise ValueError(
+                    f"max_tokens_per_step={self.menu.max_tokens} cannot fit "
+                    f"one mode-{m} request's {mult} segment(s); such "
+                    f"requests would starve")
+        self.max_inflight = max_inflight or 2 * self.menu.max_requests
+        self.controller = controller
+        if policy == "degrade" and controller is None:
+            self.controller = BudgetController(self.cfg, plans)
+        self.metrics = ServingMetrics()
+        self._layout_costs: Dict[Any, Any] = {}
+        self._zero_blocks: Dict[int, jax.Array] = {}
+        self._queue = RequestQueue()
+        self._inflight: List[InFlight] = []
+        self._next_id = 0
+        self._seq = 0
+        self._base_key = (base_key if base_key is not None
+                          else jax.random.PRNGKey(0x5e41))
+        self._last_step_at: Optional[float] = None
+        self._last_sync_at: Optional[float] = self.clock()
+        self._flops_since_sync = 0.0
+        self.started_at = self.clock()
+
+    # ------------------------------------------------------------------
+    # Validation / setup
+
+    def _validate_menu(self, plans: Dict[float, SamplingPlan]) -> None:
+        if not plans:
+            raise ValueError("engine needs a non-empty plan menu")
+        if self.cfg.dit is None or self.cfg.dit.conditioning != "class":
+            raise ValueError("the serving engine currently serves "
+                             "class-conditioned DiTs")
+        if self.cfg.dit.lora_rank > 0:
+            raise ValueError("mixed-mode packing needs mode-independent "
+                             "blocks (shared-parameter recipe); per-mode "
+                             "LoRA serving is a ROADMAP follow-on")
+        ref = next(iter(plans.values()))
+        for b, plan in plans.items():
+            plan.validate(self.cfg)
+            if plan.is_adaptive:
+                raise ValueError("adaptive plans are per-sample host loops; "
+                                 "the engine packs static schedules only")
+            if plan.solver not in ("ddim", "ddpm"):
+                raise ValueError(f"engine solvers: ddim|ddpm, got "
+                                 f"{plan.solver!r} at level {b}")
+            if plan.parallel is not None:
+                raise ValueError("sequence-parallel plans can't join the "
+                                 "packed engine (single-host); route them "
+                                 "through FlexiPipeline.sample")
+            if plan.guidance_active and plan.guidance_kind != "uncond":
+                raise ValueError("packed steps implement vanilla CFG; "
+                                 "weak_cond guidance mixes modes inside "
+                                 "one NFE pair")
+            if (plan.solver, plan.guidance_scale, plan.clip_x0) != \
+                    (ref.solver, ref.guidance_scale, ref.clip_x0):
+                raise ValueError("all menu plans must share solver, "
+                                 "guidance scale, and clip_x0 (one engine "
+                                 "= one compiled step family)")
+
+    # ------------------------------------------------------------------
+    # Request lifecycle
+
+    def quantize(self, budget: float) -> float:
+        """Requested budget → menu level: cheapest level >= requested
+        (the served sample is at least as powerful as asked)."""
+        for b in sorted(self.levels):
+            if b >= budget - 1e-9:
+                return b
+        return max(self.levels)
+
+    def submit(self, cond: int, budget: float,
+               deadline: float = math.inf,
+               key: Optional[jax.Array] = None) -> int:
+        """Enqueue one request; returns its id. ``key`` seeds the prior
+        draw and solver noise (default: derived from the request id)."""
+        rid = self._next_id
+        self._next_id += 1
+        if key is None:
+            key = jax.random.fold_in(self._base_key, rid)
+        now = self.clock()
+        req = Request(id=rid, cond=int(cond), budget=float(budget),
+                      deadline=deadline, key=key)
+        self._queue.submit(req, now)
+        if self.controller is not None:
+            self.controller.observe_arrival(now)
+        return rid
+
+    def _solver_keys(self, key: jax.Array, lp: LevelPlan) -> np.ndarray:
+        """Per-step solver keys, matching ``sample_phased``'s derivation
+        (fold per non-empty phase, split over its timesteps) so DDPM
+        ancestral noise is bit-identical to the pipeline's. Pulled to the
+        host once at admission: step assembly then stacks them without a
+        device round-trip per request per step."""
+        run_key = jax.random.fold_in(key, 1)
+        parts, i = [], 0
+        fs = lp.plan.resolve_schedule(self.cfg)
+        for _mode, tsub in fs.split_timesteps(lp.ts):
+            if not len(tsub):
+                continue
+            parts.append(jax.random.split(jax.random.fold_in(run_key, i),
+                                          len(tsub)))
+            i += 1
+        return np.asarray(jnp.concatenate(parts))
+
+    def _admit(self, now: float) -> None:
+        policy = "edf" if self.policy == "edf" else "fifo"
+        while self._queue and len(self._inflight) < self.max_inflight:
+            req = self._queue.pop(policy)
+            level = self.quantize(req.budget)
+            if self.controller is not None and self.policy == "degrade":
+                level = self.controller.assign(level)
+            lp = self.levels[level]
+            x_T = jax.random.normal(req.key,
+                                    (1,) + self.cfg.dit.latent_shape)
+            self._inflight.append(InFlight(
+                req=req, lp=lp, x_src=x_T, x_row=0,
+                keys=self._solver_keys(req.key, lp),
+                admit=now, seq=self._seq))
+            self._seq += 1
+
+    def _priority(self, f: InFlight) -> Tuple:
+        if self.policy == "edf":
+            return (f.req.deadline, f.seq)
+        return (f.seq,)
+
+    def _is_warm(self, layout, k: int) -> bool:
+        return self.pipe.packed_step_is_warm(
+            layout, solver=self.solver,
+            guidance_scale=self.guidance_scale, clip_x0=self.clip_x0,
+            k_steps=k)
+
+    def _gather_latents(self, sel: List[InFlight], pad: int) -> jax.Array:
+        """[cap, F, H, W, C] group input with as few device ops as
+        possible: runs of requests holding consecutive rows of the same
+        source batch (the common steady state — last step's output array)
+        are reused whole; stragglers coalesce into one gather per source;
+        dummy tail slots come from a cached zeros block."""
+        parts: List[jax.Array] = []
+        i = 0
+        while i < len(sel):
+            src = sel[i].x_src
+            idx = [sel[i].x_row]
+            i += 1
+            while i < len(sel) and sel[i].x_src is src:
+                idx.append(sel[i].x_row)
+                i += 1
+            if idx == list(range(src.shape[0])):
+                parts.append(src)                    # whole batch, no op
+            else:
+                parts.append(src[np.asarray(idx)])   # one gather
+        if pad:
+            z = self._zero_blocks.get(pad)
+            if z is None:
+                z = self._zero_blocks[pad] = jnp.zeros(
+                    (pad,) + self.cfg.dit.latent_shape)
+            parts.append(z)
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+
+    # ------------------------------------------------------------------
+    # The engine iteration
+
+    def step(self) -> List[ServedResult]:
+        """One engine iteration: admit arrivals, plan (cohort, bucket,
+        micro-step depth k), advance the packed cohort k denoise steps in
+        one dispatch, and retire finished requests. Requests that don't
+        fit the chosen bucket simply wait (no drain, no recompile)."""
+        now = self.clock()
+        self._admit(now)
+        if not self._inflight:
+            self._last_step_at = now
+            return []
+        mult = 2 if self.guided else 1
+
+        # co-optimize the cohort, the bucket, and the micro-step depth k:
+        # one dispatch advances the cohort k consecutive same-mode denoise
+        # steps under lax.scan (joins wait at most k steps), so the
+        # planner maximizes request-steps per dispatch — k x cohort size —
+        # over the power-of-two depths the highest-priority request can
+        # sustain. Cold dispatches pack an EXACT-fit layout (greedy over
+        # the priority order, no dummy slots); frozen serving
+        # (``allow_cold=False``: every compile stall is an SLA violation)
+        # restricts to already-compiled layouts, falling back to a cold
+        # one only when nothing warm can serve at all.
+        prio = sorted(self._inflight, key=self._priority)
+        top = prio[0]
+        k_cap = 1
+        top_run = min(self.steps_per_dispatch,
+                      int(top.lp.run_len[top.step]))
+        while k_cap * 2 <= top_run:
+            k_cap *= 2
+        best = None
+        for cold_pass in ((True,) if self.allow_cold else (False, True)):
+            if not cold_pass:
+                # frozen pass: only buckets with room for the highest-
+                # priority request's mode — keeps EDF live (top always
+                # advances) and k_cap (derived from top) consistent
+                warm_layouts = {
+                    kk: [l for l in ls if l.capacity_for(top.mode)]
+                    for kk, ls in self.pipe.warm_packed_layouts(
+                        solver=self.solver,
+                        guidance_scale=self.guidance_scale,
+                        clip_x0=self.clip_x0).items()}
+            kc = k_cap
+            while kc >= 1:
+                eligible = [f for f in prio
+                            if int(f.lp.run_len[f.step]) >= kc]
+                if not eligible:
+                    kc //= 2
+                    continue
+                if cold_pass:
+                    idx, counts = self.menu.greedy_fit(
+                        [f.mode for f in eligible])
+                    if not idx:
+                        kc //= 2
+                        continue
+                    cand = PackLayout.for_counts(
+                        counts, guided=self.guided,
+                        row_capacity=self.menu.row_capacity)
+                    sel_by_mode: Dict[int, List[InFlight]] = {}
+                    for i in idx:
+                        sel_by_mode.setdefault(eligible[i].mode,
+                                               []).append(eligible[i])
+                    served = len(idx)
+                else:
+                    demand: Dict[int, int] = {}
+                    for f in eligible:
+                        demand[f.mode] = demand.get(f.mode, 0) + 1
+                    cand = self.menu.choose(
+                        demand, among=warm_layouts.get(kc, ()))
+                    if cand is None:
+                        kc //= 2
+                        continue
+                    sel_by_mode = None
+                    served = self.menu.served_by(cand, demand)
+                score = (kc * served,
+                         1 if self._is_warm(cand, kc) else 0,
+                         -self.menu.packed_tokens(cand))
+                if best is None or score > best[0]:
+                    best = (score, kc, cand, sel_by_mode)
+                kc //= 2
+            if best is not None:
+                break                 # frozen pass found a warm bucket
+        _, k, layout, sel_by_mode = best
+        if sel_by_mode is None:       # warm bucket: fill its capacities
+            eligible = [f for f in prio if int(f.lp.run_len[f.step]) >= k]
+            sel_by_mode = {}
+            for f in eligible:
+                sel_by_mode.setdefault(f.mode, []).append(f)
+        picked = [sel_by_mode.get(mode, [])[:cap]
+                  for mode, cap in layout.groups]
+
+        xs, metas, keys = [], [], []
+        real_tokens = 0
+        for (mode, cap), sel in zip(layout.groups, picked):
+            pad = cap - len(sel)
+            xs.append(self._gather_latents(sel, pad))
+            meta = np.zeros((k, 3, cap), np.int32)
+            meta[:, 1, :] = -1                   # dummy slots: final step
+            kk = np.zeros((k, cap, 2), np.uint32)
+            for i, f in enumerate(sel):
+                s = f.step
+                meta[:, 0, i] = f.lp.ts[s:s + k]
+                meta[:, 1, i] = f.lp.t_prev[s:s + k]
+                meta[:, 2, i] = f.req.cond
+                kk[:, i] = f.keys[s:s + k]
+            metas.append(jnp.asarray(meta))
+            keys.append(jnp.asarray(kk))
+            real_tokens += mult * self._seg_tokens[mode] * len(sel) * k
+
+        runner = self.pipe.packed_step(
+            layout, solver=self.solver,
+            guidance_scale=self.guidance_scale, clip_x0=self.clip_x0,
+            k_steps=k)
+        outs = runner(self.pipe.params, tuple(xs), tuple(metas), tuple(keys))
+        step_flops = k * sum(
+            mult * len(sel) * dit_nfe_flops(self.cfg, mode)
+            for (mode, _cap), sel in zip(layout.groups, picked))
+        self._flops_since_sync += step_flops
+        if any(f.step + k >= len(f.lp.ts) for sel in picked for f in sel):
+            # someone completes on this dispatch: a result only counts as
+            # served once it is materialized, so the finish stamp (and any
+            # latency derived from it) waits for the device. This is also
+            # the only honest capacity sample — between syncs the clock
+            # only sees host-side batch assembly, not device compute
+            jax.block_until_ready(outs)
+            now = self.clock()
+            if self.controller is not None and self._last_sync_at is not None \
+                    and now > self._last_sync_at:
+                self.controller.observe_service(self._flops_since_sync,
+                                                now - self._last_sync_at)
+            self._flops_since_sync = 0.0
+            self._last_sync_at = now
+
+        finished: List[ServedResult] = []
+        stepped = 0
+        for g, sel in enumerate(picked):
+            for i, f in enumerate(sel):
+                f.x_src, f.x_row = outs[g], i
+                f.step += k
+                stepped += 1
+                if f.done:
+                    self._inflight.remove(f)
+                    finished.append(self._retire(f, now))
+        cost = self._layout_costs.get(layout)
+        if cost is None:
+            cost = self._layout_costs[layout] = layout.cost(self.cfg)
+        self.metrics.record_step(now, real_tokens, cost.packed_tokens * k,
+                                 stepped)
+        self._last_step_at = now
+        return finished
+
+    def _retire(self, f: InFlight, now: float) -> ServedResult:
+        mult = 2 if self.guided else 1
+        tokens = int(mult * sum(self._seg_tokens[int(m)] for m in f.lp.modes))
+        rec = RequestRecord(
+            id=f.req.id, arrival=f.req.arrival, admit=f.admit, finish=now,
+            deadline=f.req.deadline, budget_requested=f.req.budget,
+            budget_served=f.lp.level, tokens=tokens, flops=f.lp.flops)
+        self.metrics.record_request(rec)
+        return ServedResult(request=f.req, x0=f.x,
+                            budget_served=f.lp.level, record=rec)
+
+    # ------------------------------------------------------------------
+
+    def run(self, max_steps: int = 100_000) -> List[ServedResult]:
+        """Drain: step until queue and in-flight are empty."""
+        out: List[ServedResult] = []
+        steps = 0
+        while (self._queue or self._inflight) and steps < max_steps:
+            out.extend(self.step())
+            steps += 1
+        return out
+
+    @property
+    def idle(self) -> bool:
+        return not self._queue and not self._inflight
+
+    @property
+    def n_queued(self) -> int:
+        return len(self._queue)
+
+    @property
+    def n_inflight(self) -> int:
+        return len(self._inflight)
+
+    def cache_stats(self) -> Dict[str, int]:
+        """The pipeline's compile-cache counters (packed-step runners are
+        cached there; zero growth after warmup = zero recompiles)."""
+        return self.pipe.cache_stats()

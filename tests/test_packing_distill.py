@@ -8,7 +8,9 @@ from repro.configs.base import TrainConfig
 from repro.core import flexify, trainable_mask
 from repro.core.distill import make_distill_step
 from repro.core.mmd import bootstrap_mmd_loss, make_mmd_finetune_step, rbf_mmd2
-from repro.core.packing import packed_weak_forward, packing_cost, pack_ratio
+from repro.core.packing import (packed_mixed_forward, packed_row_flops,
+                                packed_weak_forward, packing_cost, pack_ratio)
+from repro.core.scheduler import dit_nfe_flops
 from repro.diffusion import schedule as sch
 from repro.models import dit as dit_mod
 
@@ -63,6 +65,48 @@ def test_packing_cost_table(tiny_dit_cfg, trained_like_dit):
     assert costs[1].flops <= costs[3].flops
     # approach 3/4 use fewer sequential calls (latency)
     assert costs[3].nfe_calls < costs[0].nfe_calls
+
+
+def test_packing_cost_counts_conditioning_overhead(tiny_dit_cfg,
+                                                   trained_like_dit):
+    """Approach 4's ledger includes the per-token adaLN conditioning the
+    packed path actually pays (regression: it used to price a packed row
+    as a plain powerful NFE)."""
+    _, fcfg = flexify(trained_like_dit, tiny_dit_cfg, [(1, 4, 4)])
+    n, r = 8, pack_ratio(fcfg, 1)
+    f_p = dit_nfe_flops(fcfg, 0)
+    N_p = dit_mod.tokens_for_mode(fcfg, 0)
+    costs = packing_cost(fcfg, 1, n_images=n)
+    rows = -(-n // r)
+    row_fl = packed_row_flops(fcfg, [1] * r, capacity=N_p)
+    assert costs[3].flops == pytest.approx(n * f_p + rows * row_fl)
+    assert row_fl > f_p            # the overhead is real, not free
+
+
+def test_packed_mixed_forward_equals_unpacked(tiny_dit_cfg,
+                                              trained_like_dit):
+    """Weak AND powerful segments in one packed forward match their
+    unpacked per-mode NFEs (the serving engine's step primitive)."""
+    fparams, fcfg = flexify(trained_like_dit, tiny_dit_cfg, [(1, 4, 4)])
+    key = jax.random.PRNGKey(5)
+    x_full = jax.random.normal(key, (1, 1, 16, 16, 4))
+    x_weak = jax.random.normal(jax.random.fold_in(key, 1), (3, 1, 16, 16, 4))
+    t_full = jnp.asarray([7], jnp.int32)
+    t_weak = jnp.asarray([3, 50, 93], jnp.int32)     # different steps!
+    c_full = jnp.asarray([2], jnp.int32)
+    c_weak = jnp.asarray([0, 5, 9], jnp.int32)
+    packed = packed_mixed_forward(
+        fparams, fcfg, ((0, 1), (1, 3)), [x_full, x_weak],
+        [t_full, t_weak], [c_full, c_weak])
+    ref_full = dit_mod.dit_forward(fparams, x_full, t_full, c_full, fcfg,
+                                   mode=0)
+    np.testing.assert_allclose(np.asarray(packed[0]), np.asarray(ref_full),
+                               atol=1e-4, rtol=1e-4)
+    for i in range(3):
+        ref = dit_mod.dit_forward(fparams, x_weak[i:i + 1], t_weak[i:i + 1],
+                                  c_weak[i:i + 1], fcfg, mode=1)
+        np.testing.assert_allclose(np.asarray(packed[1][i:i + 1]),
+                                   np.asarray(ref), atol=1e-4, rtol=1e-4)
 
 
 def test_distill_trains_only_adapters(tiny_dit_cfg, trained_like_dit):

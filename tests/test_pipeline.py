@@ -320,11 +320,15 @@ def test_lora_merged_per_phase_mode(tiny_dit_cfg, trained_like_dit):
 
 
 def test_serve_dit_smoke(capsys):
+    """The DiT serving driver now runs the continuous-batching engine:
+    two identical waves (warmup + steady state) of --requests each."""
     from repro.configs import get_config
     from repro.launch.serve import serve_dit
     args = argparse.Namespace(budget=0.6, T=6, train_T=100, solver="ddim",
-                              cfg_scale=1.5, requests=5, batch_slots=2)
+                              cfg_scale=1.5, requests=3, batch_slots=2,
+                              budget_levels="0.6,1.0")
     serve_dit(get_config("dit-xl-2").reduced(), args)
     out = capsys.readouterr().out
-    assert "served 5 requests" in out
+    assert "served 6 requests" in out
+    assert "[metrics]" in out
     assert "[cache]" in out
