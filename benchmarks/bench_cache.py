@@ -1,0 +1,200 @@
+"""Cross-step activation cache: FLOPs saved vs eps drift, engine
+throughput with caching on/off, and zero-recompile policy switches
+(DESIGN.md §cache).
+
+Two phases on the reduced smoke model (same 4-layer/128d sizing as
+bench_serving, so per-step compute dominates dispatch overhead):
+
+* **pipeline sweep** — one uncached reference run, then each refresh
+  policy (interval k, timestep-banded, the analytic error proxy);
+  reports analytic FLOPs saved (``repro.cache.ledger``) and the x0 MSE
+  drift vs the reference (eps errors integrate into x0, so this is the
+  end-to-end drift a user sees). Policy switches replay ONE compiled
+  runner — asserted via ``cache_stats`` (the zero-recompile guarantee:
+  masks are data, the split is structure).
+* **engine drain** — the same request set through the serving engine
+  with caching off vs on (default error-proxy policy); reports useful
+  tokens/s both ways plus the cache ledger (hit rate, refresh-interval
+  histogram, bytes resident).
+
+Acceptance (asserted): the default error-proxy policy saves >= 25%
+analytic FLOPs while its drift stays within 10x of interval-2's (the
+matched-drift band), and no policy switch compiles anything new.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+T = 20
+TRAIN_T = 1000
+N_REQ = 16
+MAX_TOKENS = 4096
+REPEATS = 3
+
+
+def _bench_cfg():
+    from repro.configs import get_config
+    base = get_config("dit-xl-2").reduced()
+    return dataclasses.replace(
+        base, num_layers=4, d_model=128, d_ff=512,
+        attn=dataclasses.replace(base.attn, num_heads=8, num_kv_heads=8,
+                                 head_dim=16))
+
+
+def bench_cache() -> None:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from benchmarks import common as C
+    from repro.cache import CacheSpec, cache_savings
+    from repro.core.scheduler import FlexiSchedule
+    from repro.diffusion import schedule as sch
+    from repro.models import dit as dit_mod
+    from repro.pipeline import FlexiPipeline, SamplingPlan
+    from repro.serving import ServingEngine
+
+    cfg = _bench_cfg()
+    key = jax.random.PRNGKey(0)
+    params = dit_mod.init_dit(cfg, key)
+    # break the zero-init de-embed / final-adaLN gates (as training
+    # would): a zero-output model would make every policy drift-free
+    params["deembed"]["w_flex"] = jax.random.normal(
+        jax.random.fold_in(key, 1),
+        params["deembed"]["w_flex"].shape) * 0.1
+    params["final"]["ada"]["w"] = jax.random.normal(
+        jax.random.fold_in(key, 2),
+        params["final"]["ada"]["w"].shape) * 0.05
+    params["blocks"]["ada"]["w"] = jax.random.normal(
+        jax.random.fold_in(key, 3),
+        params["blocks"]["ada"]["w"].shape) * 0.05
+    pipe = FlexiPipeline(params, cfg, sch.linear_schedule(TRAIN_T))
+    sched_budget = FlexiSchedule.weak_first(T, T // 2)
+    ts = sch.respaced_timesteps(TRAIN_T, T)
+    key = jax.random.PRNGKey(1)
+    cond = jnp.asarray(np.arange(8) % cfg.dit.num_classes, jnp.int32)
+
+    def plan_for(cache):
+        return SamplingPlan(T=T, budget=sched_budget, guidance_scale=1.5,
+                            cache=cache)
+
+    # ------------------------------------------------------------------
+    # Pipeline sweep: drift + analytic savings per policy
+
+    ref = pipe.sample(plan_for(None), 8, key, cond=cond).x0
+    ref_pow = float(jnp.mean(ref ** 2))
+    policies = {
+        "interval_1": CacheSpec(policy="interval", interval=1),
+        "interval_2": CacheSpec(policy="interval", interval=2),
+        "interval_4": CacheSpec(policy="interval", interval=4),
+        "banded": CacheSpec(policy="banded", bands=((TRAIN_T // 2, 1),),
+                            interval=4),
+        "proxy_default": CacheSpec(policy="proxy"),
+    }
+    sweep = {}
+    warm = None
+    for name, spec in policies.items():
+        res = pipe.sample(plan_for(spec), 8, key, cond=cond)
+        drift = float(jnp.mean((res.x0 - ref) ** 2)) / ref_pow
+        led = cache_savings(cfg, sched_budget, ts, spec)
+        sweep[name] = {
+            "x0_rel_mse": drift,
+            "flops_saved_frac": led["flops_saved_frac"],
+            "refresh_rate": led["refresh_rate"],
+        }
+        C.csv_row(f"cache_policy_{name}", 0.0,
+                  f"saved={led['flops_saved_frac']:.3f};"
+                  f"refresh_rate={led['refresh_rate']:.2f};"
+                  f"x0_rel_mse={drift:.2e}")
+        if warm is None:
+            warm = pipe.cache_stats()      # first cached runner compiled
+    after = pipe.cache_stats()
+    policy_recompiles = after["compiled"] - warm["compiled"]
+    assert policy_recompiles == 0, \
+        f"{policy_recompiles} recompiles across policy switches (masks " \
+        f"must be data, not structure)"
+    assert sweep["interval_1"]["x0_rel_mse"] == 0.0, \
+        "interval=1 must be bit-identical to the uncached pipeline"
+    proxy = sweep["proxy_default"]
+    assert proxy["flops_saved_frac"] >= 0.25, \
+        f"default proxy policy saves only {proxy['flops_saved_frac']:.2f} " \
+        f"FLOPs (need >= 0.25)"
+    assert proxy["x0_rel_mse"] <= 10 * max(sweep["interval_2"]["x0_rel_mse"],
+                                           1e-12), \
+        "proxy drift far off the interval-2 matched-drift band"
+
+    # ------------------------------------------------------------------
+    # Engine drain: tokens/s with caching off vs on
+
+    plans = {0.6: SamplingPlan(T=T, budget=sched_budget,
+                               guidance_scale=1.5),
+             1.0: SamplingPlan(T=T, budget=1.0, guidance_scale=1.5)}
+    rng = np.random.default_rng(0)
+    reqs = [(int(rng.integers(0, cfg.dit.num_classes)),
+             0.6 if rng.random() < 0.5 else 1.0) for _ in range(N_REQ)]
+    level_tokens = {}
+    for b, plan in plans.items():
+        fs = plan.resolve_schedule(cfg)
+        level_tokens[b] = 2 * sum(
+            n * dit_mod.tokens_for_mode(cfg, m) for m, n in fs.phases)
+    useful_tokens = sum(level_tokens[lvl] for _, lvl in reqs)
+
+    def drain(cache):
+        engine = ServingEngine(pipe, plans,
+                               max_tokens_per_step=MAX_TOKENS, cache=cache)
+        for i, (label, lvl) in enumerate(reqs):
+            engine.submit(cond=label, budget=lvl,
+                          key=jax.random.fold_in(jax.random.PRNGKey(7), i))
+        results = engine.run()
+        jax.block_until_ready(results[-1].x0)
+        return engine
+
+    spec_on = CacheSpec(policy="proxy")
+    drain(None)
+    drain(spec_on)                          # bucket warmup both families
+    warm_eng = pipe.cache_stats()
+    dt_off = dt_on = float("inf")
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        drain(None)
+        dt_off = min(dt_off, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        eng_on = drain(spec_on)
+        dt_on = min(dt_on, time.perf_counter() - t0)
+    eng_recompiles = pipe.cache_stats()["compiled"] - warm_eng["compiled"]
+    assert eng_recompiles == 0, \
+        f"{eng_recompiles} engine recompiles after warmup"
+    cache_m = eng_on.metrics.cache_summary()
+    tps_off = useful_tokens / dt_off
+    tps_on = useful_tokens / dt_on
+    C.csv_row("cache_engine_drain", dt_on * 1e6,
+              f"tokens_per_s_on={tps_on:.0f};tokens_per_s_off={tps_off:.0f};"
+              f"speedup={tps_on / tps_off:.2f};"
+              f"hit_rate={cache_m['hit_rate']:.3f}")
+
+    print("BENCH " + json.dumps({
+        "name": "activation_cache", "arch": "dit-xl-2:reduced+4L128d",
+        "T": T, "train_T": TRAIN_T,
+        "split": CacheSpec().resolve_split(cfg.num_layers),
+        "policies": sweep,
+        "policy_switch_recompiles": policy_recompiles,
+        "engine": {
+            "requests": N_REQ,
+            "tokens_per_s_cache_off": tps_off,
+            "tokens_per_s_cache_on": tps_on,
+            "speedup": tps_on / tps_off,
+            "recompiles_after_warmup": eng_recompiles,
+            "cache": cache_m,
+        },
+    }))
+
+
+if __name__ == "__main__":
+    bench_cache()

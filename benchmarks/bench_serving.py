@@ -171,17 +171,15 @@ def bench_serving() -> None:
 
     # online-shape warmup: mid-trace cohort mixes hit (layout, k) combos
     # the drain never forms; capture them off the clock, as a serving
-    # deployment would at startup. The measured replay then runs FROZEN
-    # (allow_cold=False): only warm executables, zero compile stalls —
-    # asserted via cache_stats. The single-request k=1 layouts below
-    # guarantee the frozen planner ALWAYS finds a warm bucket (any demand
-    # has some mode with >= 1 request), so it can never fall back cold.
-    from repro.pipeline import PackLayout
-    for mode in (0, 1):
-        pipe.packed_step(
-            PackLayout.for_counts({mode: 1},
-                                  row_capacity=menu.row_capacity),
-            guidance_scale=1.5, k_steps=1)
+    # deployment would at startup. ``precapture_warm_set`` compiles AND
+    # executes the whole small-cohort bucket ladder (every menu layout
+    # with per-mode counts <= 2, at every power-of-two micro-step depth)
+    # so mid-trace Poisson cohorts land on exact fine layouts instead of
+    # coarse fallbacks, and the frozen planner always has a warm bucket.
+    # The measured replay then runs FROZEN (allow_cold=False): only warm
+    # executables, zero compile stalls — asserted via cache_stats.
+    pre = ServingEngine(pipe, plans, max_tokens_per_step=MAX_TOKENS,
+                        menu=menu).precapture_warm_set(max_per_mode=2)
     replay_engine()
     replay_engine()
     warm_online = pipe.cache_stats()["compiled"]
@@ -241,7 +239,12 @@ def bench_serving() -> None:
                    "p50_s": eng_lat["p50"], "p99_s": eng_lat["p99"],
                    "drain_tokens_per_s": useful_tokens / dt_eng_drain,
                    "recompiles_after_warmup": recompiles,
-                   "frozen_online_compiles": online_recompiles},
+                   "frozen_online_compiles": online_recompiles,
+                   "precaptured_small_cohort_executables": pre,
+                   # activation cache off in this bench (bench_cache
+                   # covers on/off); the ledger fields ride along so the
+                   # BENCH schema is stable either way
+                   "cache": engine.metrics.cache_summary()},
         "baseline": {"tokens_per_s": base_tps, "wall_s": dt_base,
                      "slot_fill_drain": N_REQ / slots,
                      "p50_s": base_p["p50"], "p99_s": base_p["p99"],

@@ -21,13 +21,14 @@ SUITES = {
                  "adaptive_scheduler", "flow_matching"),
     "distributed": ("distributed_seqpar",),
     "serving": ("serving_engine",),
+    "cache": ("activation_cache",),
 }
 
 
 def main() -> None:
-    from benchmarks import (bench_core, bench_distributed, bench_extensions,
-                            bench_modalities, bench_perf, bench_pipeline,
-                            bench_serving)
+    from benchmarks import (bench_cache, bench_core, bench_distributed,
+                            bench_extensions, bench_modalities, bench_perf,
+                            bench_pipeline, bench_serving)
     from benchmarks.roofline_table import bench_roofline
 
     benches = [
@@ -46,6 +47,7 @@ def main() -> None:
         ("pipeline_cache", bench_pipeline.bench_pipeline_cache),
         ("distributed_seqpar", bench_distributed.bench_distributed),
         ("serving_engine", bench_serving.bench_serving),
+        ("activation_cache", bench_cache.bench_cache),
         ("roofline", bench_roofline),
     ]
     argv = sys.argv[1:]

@@ -1,0 +1,20 @@
+"""Cross-step activation cache (DESIGN.md §cache).
+
+Adjacent denoise steps are highly redundant; this subsystem caches the
+deep transformer blocks' residual contribution at *refresh* steps and
+replays it (shallow blocks still recompute) at *skip* steps —
+composable with FlexiDiT's token-reduction on both the plain pipeline
+and the packed serving engine. ``policy`` decides when to refresh,
+``store`` carries per-request state across packed dispatches,
+``apply`` builds the cached sampling loops, and ``ledger`` prices
+cache-hit steps analytically.
+"""
+from repro.cache.apply import (make_cached_eps_fn,  # noqa: F401
+                               sample_phased_cached)
+from repro.cache.ledger import (cache_savings, cached_nfe_flops,  # noqa: F401
+                                deep_block_flops, delta_bytes,
+                                schedule_cached_flops, store_bytes)
+from repro.cache.policy import (CACHE_POLICIES, CacheSpec,  # noqa: F401
+                                conditioning_drift, ladder_refresh_mask,
+                                refresh_intervals, refresh_mask)
+from repro.cache.store import CacheStore  # noqa: F401

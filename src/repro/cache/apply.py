@@ -1,0 +1,153 @@
+"""Cached sampling loops (DESIGN.md §cache).
+
+Builds the per-phase ``eps_fn_c(x, t, delta, refresh) → (eps, logvar,
+new_delta)`` used by the cached pipeline runner, mirroring
+``core.guidance.make_eps_fn`` (plain + vanilla-CFG branches; weak_cond
+guidance mixes patch modes inside one step and is rejected at plan
+validation), and the cached ddim/ddpm phase loops that thread the
+deep-block residual delta through the ``lax.scan`` carry.
+
+The refresh mask is a *scanned input*, not structure: one compiled
+runner serves every policy/interval/threshold — switching policies
+never recompiles. Solver-key derivation matches
+``diffusion.sampler.sample_phased`` exactly (fold per non-empty phase,
+split over its timesteps) so a refresh-every-step run is bit-identical
+to the uncached pipeline.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.guidance import GuidanceConfig, split_model_out
+from repro.diffusion import schedule as sch
+from repro.models import dit as dit_mod
+
+# eps_fn_c(x, t[B], delta, refresh) -> (eps, logvar | None, new_delta)
+CachedEpsFn = Callable[[jax.Array, jax.Array, jax.Array, jax.Array], Tuple]
+
+
+def eff_batch(guided: bool, n: int) -> int:
+    """Leading dim of the delta carry: CFG doubles the token stream."""
+    return 2 * n if guided else n
+
+
+def delta_shape(cfg: ModelConfig, mode: int, batch: int, guided: bool
+                ) -> Tuple[int, int, int]:
+    return (eff_batch(guided, batch),
+            dit_mod.tokens_for_mode(cfg, mode), cfg.d_model)
+
+
+def make_cached_eps_fn(params: Any, cfg: ModelConfig, cond: Any,
+                       null_cond: Any, g: GuidanceConfig,
+                       text_mask: Optional[jax.Array],
+                       null_text_mask: Optional[jax.Array],
+                       split: int) -> CachedEpsFn:
+    """Cached counterpart of ``core.guidance.make_eps_fn``. ``delta``
+    covers the NFE's full token stream ([2B, N, d] under CFG — both
+    branches share the request's staleness clock but carry their own
+    features)."""
+    if g.kind != "uncond" or g.mode_cond != g.mode_uncond:
+        raise ValueError("the activation cache supports plain and "
+                         "vanilla-CFG guidance only (weak_cond mixes "
+                         "patch modes inside one step)")
+
+    if g.scale == 0.0 or cond is None:
+        def eps_plain(x, t, delta, refresh):
+            out, nd = dit_mod.dit_forward(
+                params, x, t, cond, cfg, mode=g.mode_cond,
+                text_mask=text_mask,
+                block_cache=dit_mod.BlockCache(delta, refresh, split))
+            eps, lv = split_model_out(out, cfg)
+            return eps, lv, nd
+        return eps_plain
+
+    def eps_cfg(x, t, delta, refresh):
+        x2 = jnp.concatenate([x, x], axis=0)
+        t2 = jnp.concatenate([t, t], axis=0)
+        c2 = jnp.concatenate([cond, null_cond], axis=0)
+        m2 = None
+        if cond.ndim >= 2 and text_mask is not None:
+            m2 = jnp.concatenate([text_mask, null_text_mask], axis=0)
+        out, nd = dit_mod.dit_forward(
+            params, x2, t2, c2, cfg, mode=g.mode_cond, text_mask=m2,
+            block_cache=dit_mod.BlockCache(delta, refresh, split))
+        eps, logvar = split_model_out(out, cfg)
+        e_c, e_u = jnp.split(eps, 2, axis=0)
+        lv = None if logvar is None else jnp.split(logvar, 2, axis=0)[0]
+        return e_u + g.scale * (e_c - e_u), lv, nd
+
+    return eps_cfg
+
+
+# ---------------------------------------------------------------------------
+# Cached phase loops (ddim / ddpm — the packed-step solver family)
+
+
+def cached_ddim_phase(eps_fn_c: CachedEpsFn, sched: sch.DiffusionSchedule,
+                      x: jax.Array, timesteps: np.ndarray,
+                      refresh: jax.Array, key: jax.Array,
+                      delta0: jax.Array, t_final: int = -1) -> jax.Array:
+    ts = jnp.asarray(timesteps, jnp.int32)
+    ts_prev = jnp.concatenate([ts[1:], jnp.asarray([t_final], jnp.int32)])
+    keys = jax.random.split(key, len(timesteps))
+
+    def body(carry, inp):
+        x, delta = carry
+        t, tp, k, rf = inp
+        tb = jnp.full((x.shape[0],), t, jnp.int32)
+        tpb = jnp.full((x.shape[0],), tp, jnp.int32)
+        eps, _, delta = eps_fn_c(x, tb, delta, rf)
+        return (sch.ddim_step(sched, x, eps, tb, tpb, 0.0, k), delta), None
+
+    (x, _), _ = jax.lax.scan(body, (x, delta0),
+                             (ts, ts_prev, keys, refresh))
+    return x
+
+
+def cached_ddpm_phase(eps_fn_c: CachedEpsFn, sched: sch.DiffusionSchedule,
+                      x: jax.Array, timesteps: np.ndarray,
+                      refresh: jax.Array, key: jax.Array,
+                      delta0: jax.Array, clip_x0: float = 0.0) -> jax.Array:
+    ts = jnp.asarray(timesteps, jnp.int32)
+    keys = jax.random.split(key, len(timesteps))
+
+    def body(carry, inp):
+        x, delta = carry
+        t, k, rf = inp
+        tb = jnp.full((x.shape[0],), t, jnp.int32)
+        eps, logvar, delta = eps_fn_c(x, tb, delta, rf)
+        return (sch.ddpm_step(sched, x, eps, tb, k, logvar, clip_x0),
+                delta), None
+
+    (x, _), _ = jax.lax.scan(body, (x, delta0), (ts, keys, refresh))
+    return x
+
+
+def sample_phased_cached(phases: Sequence[Tuple[CachedEpsFn, np.ndarray,
+                                                jax.Array, jax.Array]],
+                         sched: sch.DiffusionSchedule, x_T: jax.Array,
+                         key: jax.Array, solver: str = "ddim",
+                         clip_x0: float = 0.0) -> jax.Array:
+    """Chain cached phases — each ``(eps_fn_c, timesteps, refresh_mask,
+    delta0)``. Key folding matches ``sampler.sample_phased`` so
+    refresh-every-step reproduces it bit-for-bit."""
+    x = x_T
+    active = [p for p in phases if len(p[1])]
+    for i, (eps_fn_c, ts, refresh, delta0) in enumerate(active):
+        k = jax.random.fold_in(key, i)
+        t_final = int(active[i + 1][1][0]) if i + 1 < len(active) else -1
+        if solver == "ddpm":
+            x = cached_ddpm_phase(eps_fn_c, sched, x, ts, refresh, k,
+                                  delta0, clip_x0)
+        elif solver == "ddim":
+            x = cached_ddim_phase(eps_fn_c, sched, x, ts, refresh, k,
+                                  delta0, t_final=t_final)
+        else:
+            raise ValueError(f"cached sampling supports ddim|ddpm, "
+                             f"got {solver!r}")
+    return x

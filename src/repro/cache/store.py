@@ -1,0 +1,134 @@
+"""Per-request activation-cache slots for the serving engine
+(DESIGN.md §cache).
+
+The :class:`CacheStore` is the engine's first stateful-across-dispatch
+structure: one device-resident pytree per patch mode holding every
+in-flight request's deep-block residual delta, addressed by *slot*. The
+packed step gathers the dispatched cohort's slots into the layout's
+group order, and scatters the updated deltas back afterwards — cache
+state survives bucket migrations because slots are keyed by mode, never
+by layout.
+
+Slot management is host-side and O(1): a free list per mode, LRU
+eviction when a mode's pool is exhausted (the evicted request silently
+loses its cache and re-refreshes — correctness never depends on a slot
+surviving), and an owner tag so the engine can detect eviction. Bytes
+accounting (resident vs total) feeds the serving metrics ledger.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cache import ledger
+from repro.configs.base import ModelConfig
+from repro.models import dit as dit_mod
+
+
+class CacheStore:
+    """Slotted deep-block residual deltas, one pool per patch mode.
+
+    Each mode's pool is a ``[n_slots, mult, N_mode, d]`` array (``mult``
+    = 2 under CFG: conditional and unconditional branches share the
+    request's staleness clock but carry distinct features).
+    """
+
+    def __init__(self, cfg: ModelConfig, modes: Sequence[int],
+                 n_slots: int, *, guided: bool = True,
+                 dtype: Optional[jnp.dtype] = None):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        from repro.models.common import dtype_of
+        self.cfg = cfg
+        self.guided = guided
+        self.n_slots = n_slots
+        self.mult = 2 if guided else 1
+        self.dtype = dtype or dtype_of(cfg.compute_dtype)
+        self.modes = tuple(sorted(set(modes)))
+        self._deltas: Dict[int, jax.Array] = {}
+        self._free: Dict[int, List[int]] = {}
+        self._owner: Dict[int, Dict[int, int]] = {}    # mode → slot → owner
+        self._stamp: Dict[int, Dict[int, int]] = {}    # mode → slot → LRU tick
+        self._tick = itertools.count()
+        self.evictions = 0
+        for m in self.modes:
+            n_tok = dit_mod.tokens_for_mode(cfg, m)
+            self._deltas[m] = jnp.zeros(
+                (n_slots, self.mult, n_tok, cfg.d_model), self.dtype)
+            self._free[m] = list(range(n_slots - 1, -1, -1))
+            self._owner[m] = {}
+            self._stamp[m] = {}
+
+    # ------------------------------------------------------------------
+    # Slot lifecycle
+
+    def alloc(self, mode: int, owner: int) -> int:
+        """Claim a slot in ``mode``'s pool for ``owner`` (a request id).
+        When the pool is exhausted the least-recently-touched active
+        slot is evicted — its previous owner simply stops matching
+        ``owner_of`` and must refresh on its next dispatch."""
+        if self._free[mode]:
+            slot = self._free[mode].pop()
+        else:
+            slot = min(self._stamp[mode], key=self._stamp[mode].get)
+            self.evictions += 1
+        self._owner[mode][slot] = owner
+        self._stamp[mode][slot] = next(self._tick)
+        return slot
+
+    def release(self, mode: int, slot: int) -> None:
+        if slot in self._owner[mode]:
+            del self._owner[mode][slot]
+            del self._stamp[mode][slot]
+            self._free[mode].append(slot)
+
+    def owner_of(self, mode: int, slot: int) -> Optional[int]:
+        return self._owner[mode].get(slot)
+
+    def touch(self, mode: int, slot: int) -> None:
+        if slot in self._stamp[mode]:
+            self._stamp[mode][slot] = next(self._tick)
+
+    # ------------------------------------------------------------------
+    # Device state
+
+    def gather(self, mode: int, slots: Sequence[int]) -> jax.Array:
+        """[len(slots), mult, N_mode, d] deltas for a dispatch, in the
+        layout's request order (one device gather)."""
+        return self._deltas[mode][np.asarray(slots, np.int32)]
+
+    def scatter(self, mode: int, slots: Sequence[int],
+                values: jax.Array) -> None:
+        """Write a dispatch's updated deltas back (one scatter)."""
+        idx = np.asarray(slots, np.int32)
+        self._deltas[mode] = self._deltas[mode].at[idx].set(
+            values.astype(self.dtype))
+        for s in slots:
+            self.touch(mode, int(s))
+
+    # ------------------------------------------------------------------
+    # Accounting
+
+    @property
+    def n_active(self) -> int:
+        return sum(len(o) for o in self._owner.values())
+
+    def active_by_mode(self) -> Dict[int, int]:
+        return {m: len(self._owner[m]) for m in self.modes}
+
+    @property
+    def bytes_resident(self) -> int:
+        """Bytes of delta state belonging to live requests."""
+        return ledger.store_bytes(self.cfg, self.active_by_mode(),
+                                  self.guided)
+
+    @property
+    def bytes_total(self) -> int:
+        """Bytes the pools occupy on device (allocated up front)."""
+        return ledger.store_bytes(self.cfg,
+                                  {m: self.n_slots for m in self.modes},
+                                  self.guided)

@@ -78,8 +78,10 @@ def packed_mixed_forward(params: Any, cfg: ModelConfig,
                          groups: Tuple[Tuple[int, int], ...],
                          xs: Sequence[jax.Array], ts: Sequence[jax.Array],
                          conds: Sequence[jax.Array], *,
-                         row_capacity: Optional[int] = None
-                         ) -> List[jax.Array]:
+                         row_capacity: Optional[int] = None,
+                         cache_deltas: Optional[Sequence[jax.Array]] = None,
+                         cache_refresh: Optional[Sequence[jax.Array]] = None,
+                         cache_split: Optional[int] = None) -> Any:
     """Run NFEs for segments of (possibly) different patch modes packed
     token-wise into fixed-capacity rows.
 
@@ -95,6 +97,18 @@ def packed_mixed_forward(params: Any, cfg: ModelConfig,
     *blocks* (the shared-parameter recipe): per-mode LoRA adapters pick
     weights per row, not per token. Uniform packs (one group) work on any
     recipe.
+
+    Cross-step activation cache (DESIGN.md §cache): with ``cache_split``
+    set, ``cache_deltas[g]`` ([n_g, N_m, d] per segment) and
+    ``cache_refresh[g]`` ([n_g] bool) thread each segment's OWN
+    staleness clock through the pack. Shallow blocks always recompute on
+    the packed rows; the deep blocks run under ``lax.cond`` only when
+    ANY segment refreshes this step (attention is segment-masked, so a
+    refreshing segment's fresh features never leak into a stale
+    neighbour), and each token picks fresh vs replayed deltas by its
+    segment's flag. Returns ``(outs, new_deltas)`` instead of ``outs``;
+    a step where every segment refreshes is bit-identical to the
+    uncached forward.
     """
     modes_present = [m for m, n in groups if n > 0]
     if len(modes_present) > 1 and cfg.dit.lora_rank > 0:
@@ -160,7 +174,45 @@ def packed_mixed_forward(params: Any, cfg: ModelConfig,
         return h, None
 
     from repro.models.common import scan_or_unroll
-    tok, _ = scan_or_unroll(body, packed, params["blocks"], cfg.unroll)
+    cached = cache_split is not None
+    if not cached:
+        tok, _ = scan_or_unroll(body, packed, params["blocks"], cfg.unroll)
+    else:
+        # cached deltas packed row-wise with the SAME placement as the
+        # tokens; each token selects fresh vs replayed by its segment's
+        # refresh flag (padding rides along with flag False, delta 0)
+        drow_parts = []
+        for row in rows:
+            parts, off = [], 0
+            for si in row:
+                g, i, n = segs[si]
+                parts.append(cache_deltas[g][i].astype(dtype))
+                off += n
+            if off < capacity:
+                parts.append(jnp.zeros((capacity - off, d), dtype))
+            drow_parts.append(jnp.concatenate(parts))
+        delta_rows = jnp.stack(drow_parts)           # [R, C, d]
+        refresh_flat = jnp.concatenate(
+            [jnp.asarray(cache_refresh[g]).reshape(-1).astype(bool)
+             for g in range(len(groups))])           # [n_seg]
+        rf_pad = jnp.concatenate([refresh_flat, jnp.zeros((1,), bool)])
+        rmask = jnp.take(rf_pad, token_idx)[..., None]   # [R, C, 1]
+
+        shallow, deep = dit_mod.split_blocks(params["blocks"], cache_split)
+        h_s, _ = scan_or_unroll(body, packed, shallow, cfg.unroll)
+
+        def _with_deep(args):
+            h, cached_rows = args
+            h_d, _ = scan_or_unroll(body, h, deep, cfg.unroll)
+            return (jnp.where(rmask, h_d, h + cached_rows),
+                    jnp.where(rmask, h_d - h, cached_rows))
+
+        def _no_deep(args):
+            h, cached_rows = args
+            return h + cached_rows, cached_rows
+
+        tok, new_rows = jax.lax.cond(jnp.any(refresh_flat), _with_deep,
+                                     _no_deep, (h_s, delta_rows))
 
     ada = dit_mod._linear(jax.nn.silu(seg_c.astype(jnp.float32)).astype(dtype),
                           params["final"]["ada"]["w"],
@@ -169,18 +221,25 @@ def packed_mixed_forward(params: Any, cfg: ModelConfig,
     tok = dit_mod._ln(tok) * (1.0 + sc) + sh
 
     outs: List[jax.Array] = []
+    new_deltas: List[jax.Array] = []
     for g, (mode, n) in enumerate(groups):
         if n == 0:
             outs.append(jnp.zeros((0,) + cfg.dit.latent_shape[:-1]
                                   + (dit_mod.c_out_dim(cfg),), dtype))
+            if cached:
+                new_deltas.append(jnp.zeros((0, seg_n[g], d), dtype))
             continue
-        slices = []
+        slices, dslices = [], []
         for i in range(n):
             r, off = placement[(g, i)]
             slices.append(tok[r, off:off + seg_n[g]])
+            if cached:
+                dslices.append(new_rows[r, off:off + seg_n[g]])
         outs.append(dit_mod.deembed_mode_tokens(
             params, jnp.stack(slices), cfg, mode))
-    return outs
+        if cached:
+            new_deltas.append(jnp.stack(dslices))
+    return (outs, new_deltas) if cached else outs
 
 
 def packed_weak_forward(params: Any, x_ts: jax.Array, t: jax.Array,

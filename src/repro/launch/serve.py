@@ -120,12 +120,26 @@ def serve_dit(cfg, args) -> None:
 
 def _serve_dit_engine(cfg, args, pipe, plans) -> None:
     """The continuous-batching path (DESIGN.md §serving)."""
-    from repro.serving import ServingEngine
+    from repro.serving import CacheSpec, ServingEngine
 
     policy = getattr(args, "policy", None) or "fifo"
     max_tokens = getattr(args, "max_tokens_per_step", None)
+    cache = None
+    cache_policy = getattr(args, "cache_policy", None) or "off"
+    if cache_policy != "off":
+        cache = CacheSpec(policy=cache_policy,
+                          interval=getattr(args, "cache_interval", 2),
+                          threshold=getattr(args, "cache_threshold", 0.05))
+        print(f"[cache] activation cache on: policy={cache.policy} "
+              f"interval={cache.interval} threshold={cache.threshold} "
+              f"split={cache.resolve_split(cfg.num_layers)}/"
+              f"{cfg.num_layers} blocks")
     engine = ServingEngine(pipe, plans, policy=policy,
-                           max_tokens_per_step=max_tokens)
+                           max_tokens_per_step=max_tokens, cache=cache)
+    # warm-set shaping (ROADMAP): compile the small-cohort bucket ladder
+    # off the hot path so mid-trace arrivals never meet a coarse layout
+    n_pre = engine.precapture_warm_set(max_per_mode=2)
+    print(f"[warm-set] precaptured {n_pre} small-cohort executables")
     print(engine.menu.describe())
 
     levels = sorted(plans)
@@ -164,6 +178,12 @@ def _serve_dit_engine(cfg, args, pipe, plans) -> None:
           f"degraded={int(m['degraded'])}")
     print(f"[cache] runners={stats['runners']} compiled={stats['compiled']} "
           f"hits={stats['hits']} misses={stats['misses']}")
+    if cache is not None:
+        cs = engine.metrics.cache_summary()
+        print(f"[act-cache] hit_rate={cs['hit_rate']:.3f} "
+              f"refreshes={cs['refreshes']} skips={cs['skips']} "
+              f"interval_hist={cs['refresh_interval_hist']} "
+              f"store_bytes_total={engine.store.bytes_total}")
     # only the fifo drain replays deterministically (edf priorities move
     # with the wall clock, degradation shifts the level mix); frozen-mode
     # zero-compile serving for those is exercised in bench_serving
@@ -303,6 +323,16 @@ def main():
     ap.add_argument("--max-tokens-per-step", type=int, default=None,
                     help="token-packing budget of one engine step "
                          "(default: four full-grid CFG requests)")
+    ap.add_argument("--cache-policy", default="off",
+                    choices=["off", "interval", "banded", "proxy"],
+                    help="cross-step activation cache refresh policy "
+                         "(DESIGN.md §cache); off disables caching")
+    ap.add_argument("--cache-interval", type=int, default=2,
+                    help="refresh every k steps (interval policy / band "
+                         "fallback); 1 is bit-identical to no cache")
+    ap.add_argument("--cache-threshold", type=float, default=0.05,
+                    help="proxy policy: analytic conditioning-drift "
+                         "threshold triggering a refresh")
     ap.add_argument("--mesh", default=None,
                     help="DATAxSEQ device mesh for the DiT path, e.g. 1x8: "
                          "data-parallel replicas x sequence-parallel shards")

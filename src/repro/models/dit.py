@@ -17,6 +17,7 @@ the pre-trained forward pass is preserved bit-exactly.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any, Dict, Optional, Tuple
 
@@ -35,6 +36,23 @@ Params = Dict[str, Any]
 Patch = Tuple[int, int, int]
 
 T_EMB_DIM = 256
+
+
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=["delta", "refresh"], meta_fields=["split"])
+@dataclasses.dataclass
+class BlockCache:
+    """Cross-step activation cache handed to :func:`dit_forward`
+    (DESIGN.md §cache): ``delta`` is the deep-block residual recorded at
+    the last refresh ([B_eff, N, d], matching the token stream),
+    ``refresh`` a traced scalar bool, and ``split`` the static number of
+    shallow blocks that always recompute. When present, the forward
+    returns ``(out, new_delta)`` and the deep blocks [split, L) only run
+    on refresh steps (``lax.cond`` — skip steps pay shallow compute
+    only, then replay ``delta``)."""
+    delta: jax.Array
+    refresh: jax.Array
+    split: int
 
 
 def patch_sizes(cfg: ModelConfig) -> Tuple[Patch, ...]:
@@ -340,11 +358,19 @@ def deembed_mode_tokens(params: Params, tok: jax.Array, cfg: ModelConfig,
                                          ls, p, pp, c_out_dim(cfg))
 
 
+def split_blocks(blocks: Params, split: int) -> Tuple[Params, Params]:
+    """Slice a stacked block tree into (shallow [0, split), deep
+    [split, L)) for the cached forward path."""
+    return (jax.tree.map(lambda a: a[:split], blocks),
+            jax.tree.map(lambda a: a[split:], blocks))
+
+
 def dit_forward(params: Params, x_t: jax.Array, t: jax.Array, cond: Any,
                 cfg: ModelConfig, *, mode: int = 0,
                 text_mask: Optional[jax.Array] = None,
                 latent_shape: Optional[Tuple[int, int, int, int]] = None,
-                parallel: Optional[Any] = None) -> jax.Array:
+                parallel: Optional[Any] = None,
+                block_cache: Optional[BlockCache] = None) -> Any:
     """Denoiser NFE.  x_t: [B,F,H,W,C]; t: [B]; cond: labels [B] int32 (class)
     or text embeddings [B,T,dc] (text). Returns [B,F,H,W,c_out].
 
@@ -352,7 +378,16 @@ def dit_forward(params: Params, x_t: jax.Array, t: jax.Array, cond: Any,
     padded to the sequence-axis size, scattered across the mesh, and each
     block's attention runs the Ulysses/ring collective; the per-mode token
     count (and hence the sharding) changes at FlexiSchedule phase
-    boundaries, which is handled here by re-padding per call."""
+    boundaries, which is handled here by re-padding per call.
+
+    ``block_cache``: optional cross-step activation cache (DESIGN.md
+    §cache). When given, the return value is ``(out, new_delta)``: on
+    refresh steps the deep blocks run and the fresh residual
+    ``h_deep - h_shallow`` is returned for the caller to carry; on skip
+    steps only the shallow blocks run and the cached delta is replayed.
+    A refresh step computes the exact uncached forward (the output IS
+    the deep stack's result, not ``shallow + delta`` re-added), which is
+    what makes refresh-every-step bit-identical to no cache at all."""
     dit = cfg.dit
     ls = latent_shape or dit.latent_shape
     dtype = dtype_of(cfg.compute_dtype)
@@ -361,6 +396,9 @@ def dit_forward(params: Params, x_t: jax.Array, t: jax.Array, cond: Any,
     n_real = tok.shape[1]
     seg_ids = None
     if parallel is not None and parallel.sp > 1:
+        if block_cache is not None:
+            raise ValueError("the activation cache does not compose with "
+                             "sequence-parallel execution yet (ROADMAP)")
         tok, seg_ids = parallel.pad_and_shard(tok)
 
     text = None
@@ -379,7 +417,25 @@ def dit_forward(params: Params, x_t: jax.Array, t: jax.Array, cond: Any,
     if cfg.remat == "block":
         body = jax.checkpoint(body, prevent_cse=False)
     from repro.models.common import scan_or_unroll
-    tok, _ = scan_or_unroll(body, tok, params["blocks"], cfg.unroll)
+    new_delta = None
+    if block_cache is None:
+        tok, _ = scan_or_unroll(body, tok, params["blocks"], cfg.unroll)
+    else:
+        shallow, deep = split_blocks(params["blocks"],
+                                     block_cache.split)
+        tok, _ = scan_or_unroll(body, tok, shallow, cfg.unroll)
+
+        def _refresh(args):
+            h_s, _delta = args
+            h_d, _ = scan_or_unroll(body, h_s, deep, cfg.unroll)
+            return h_d, h_d - h_s
+
+        def _replay(args):
+            h_s, delta = args
+            return h_s + delta, delta
+
+        tok, new_delta = jax.lax.cond(block_cache.refresh, _refresh,
+                                      _replay, (tok, block_cache.delta))
     if parallel is not None and tok.shape[1] != n_real:
         tok = parallel.unshard(tok, n_real)
 
@@ -387,7 +443,8 @@ def dit_forward(params: Params, x_t: jax.Array, t: jax.Array, cond: Any,
                   params["final"]["ada"]["w"], params["final"]["ada"]["b"])
     sh, sc = jnp.split(ada, 2, axis=-1)
     tok = _modulate(_ln(tok), sh, sc)
-    return deembed_mode_tokens(params, tok, cfg, mode, ls)
+    out = deembed_mode_tokens(params, tok, cfg, mode, ls)
+    return out if block_cache is None else (out, new_delta)
 
 
 def eps_prediction(out: jax.Array, cfg: ModelConfig) -> jax.Array:

@@ -5,6 +5,7 @@ guidance, LoRA handling, optional sequence-parallel execution);
 ``FlexiPipeline`` owns the weights, the device mesh, and compiled
 executables and runs plans without ever recompiling for repeated calls.
 """
+from repro.cache.policy import CacheSpec  # noqa: F401
 from repro.distributed.partition import ParallelSpec  # noqa: F401
 from repro.pipeline.packed import PackLayout, make_packed_step_fn  # noqa: F401
 from repro.pipeline.pipeline import FlexiPipeline, SampleResult  # noqa: F401

@@ -93,7 +93,8 @@ def make_packed_step_fn(cfg: ModelConfig, sched: sch.DiffusionSchedule,
                         layout: PackLayout, *, solver: str = "ddim",
                         guidance_scale: float = 1.5,
                         clip_x0: float = 0.0,
-                        k_steps: int = 1) -> Callable:
+                        k_steps: int = 1,
+                        cache_split: Optional[int] = None) -> Callable:
     """Build ``step(params, xs, metas, keys)`` for a layout.
 
     Per group ``g`` (one per mode): ``xs[g]`` [n_g, F, H, W, C] latents;
@@ -111,6 +112,16 @@ def make_packed_step_fn(cfg: ModelConfig, sched: sch.DiffusionSchedule,
     ``FlexiPipeline.sample`` bit-for-bit in expectation: same embedding
     path, same guidance combine, same solver arithmetic, and DDPM noise
     drawn per request from the same key derivation.
+
+    ``cache_split`` enables the cross-step activation cache (DESIGN.md
+    §cache): the step becomes ``step(params, xs, metas, keys, deltas,
+    refreshes) → (xs', deltas')`` where ``deltas[g]`` is
+    [n_g, mult, N_mode, d] per-request deep-block residuals (mult = 2
+    under CFG) and ``refreshes[g]`` is [k, n_g] bool — each request's
+    own staleness clock, threaded through the ``lax.scan`` carry so a
+    K-deep dispatch refreshes exactly where the request's policy says.
+    Refresh flags are traced data: one compiled layout serves every
+    policy.
     """
     if solver not in PACKED_SOLVERS:
         raise ValueError(f"packed steps support solvers {PACKED_SOLVERS}, "
@@ -121,6 +132,10 @@ def make_packed_step_fn(cfg: ModelConfig, sched: sch.DiffusionSchedule,
                          "cross-attention plumbing)")
     if k_steps < 1:
         raise ValueError(f"k_steps must be >= 1, got {k_steps}")
+    if cache_split is not None and not 1 <= cache_split < cfg.num_layers:
+        raise ValueError(f"cache_split {cache_split} must leave at least "
+                         f"one deep block (model has {cfg.num_layers} "
+                         f"layers)")
     guided = layout.guided
     if guided and guidance_scale == 0.0:
         raise ValueError("guided layout with guidance_scale=0; build an "
@@ -130,8 +145,11 @@ def make_packed_step_fn(cfg: ModelConfig, sched: sch.DiffusionSchedule,
     cap = layout.resolve_capacity(cfg)
     seg_groups = tuple((m, (2 if guided else 1) * n) for m, n in groups)
 
-    def one_step(params, xs, metas, keys):
+    cached = cache_split is not None
+
+    def one_step(params, xs, metas, keys, deltas=None, refreshes=None):
         seg_xs, seg_ts, seg_conds = [], [], []
+        seg_deltas, seg_refresh = [], []
         for g, (mode, n) in enumerate(groups):
             t_g, cond_g = metas[g][0], metas[g][2]
             if guided:
@@ -143,9 +161,29 @@ def make_packed_step_fn(cfg: ModelConfig, sched: sch.DiffusionSchedule,
                 seg_xs.append(xs[g])
                 seg_ts.append(t_g)
                 seg_conds.append(cond_g)
-        outs = packing.packed_mixed_forward(params, cfg, seg_groups, seg_xs,
-                                            seg_ts, seg_conds,
-                                            row_capacity=cap)
+            if cached:
+                # [n, mult, N, d] → segment order (all cond, then all
+                # uncond) matching seg_xs; both branches share the clock
+                d_g = deltas[g]
+                seg_deltas.append(jnp.concatenate(
+                    [d_g[:, b] for b in range(d_g.shape[1])], axis=0))
+                rf = refreshes[g]
+                seg_refresh.append(jnp.concatenate([rf, rf], axis=0)
+                                   if guided else rf)
+        if cached:
+            outs, new_seg_deltas = packing.packed_mixed_forward(
+                params, cfg, seg_groups, seg_xs, seg_ts, seg_conds,
+                row_capacity=cap, cache_deltas=seg_deltas,
+                cache_refresh=seg_refresh, cache_split=cache_split)
+            new_deltas = []
+            for g, (mode, n) in enumerate(groups):
+                mult = deltas[g].shape[1]
+                new_deltas.append(jnp.stack(
+                    jnp.split(new_seg_deltas[g], mult, axis=0), axis=1))
+        else:
+            outs = packing.packed_mixed_forward(params, cfg, seg_groups,
+                                                seg_xs, seg_ts, seg_conds,
+                                                row_capacity=cap)
         x_prevs = []
         for g, (mode, n) in enumerate(groups):
             t_g, tp_g = metas[g][0], metas[g][1]
@@ -174,13 +212,36 @@ def make_packed_step_fn(cfg: ModelConfig, sched: sch.DiffusionSchedule,
                             sched, x1, e1, t1, k1, lv1, clip_x0)
                     )(xs[g], eps_g, t_g, keys[g], lv)
             x_prevs.append(x_prev)
+        if cached:
+            return tuple(x_prevs), tuple(new_deltas)
         return tuple(x_prevs)
 
     if k_steps == 1:
+        if cached:
+            def step(params, xs, metas, keys, deltas, refreshes):
+                m1 = tuple(m[0] for m in metas)
+                k1 = tuple(k[0] for k in keys)
+                r1 = tuple(r[0] for r in refreshes)
+                return one_step(params, xs, m1, k1, tuple(deltas), r1)
+            return step
+
         def step(params, xs, metas, keys):
             m1 = tuple(m[0] for m in metas)
             k1 = tuple(k[0] for k in keys)
             return one_step(params, xs, m1, k1)
+        return step
+
+    if cached:
+        def step(params, xs, metas, keys, deltas, refreshes):
+            def body(carry, per_step):
+                cxs, cdeltas = carry
+                m, k, r = per_step
+                nxs, nds = one_step(params, cxs, m, k, cdeltas, r)
+                return (nxs, nds), None
+            (out, dout), _ = jax.lax.scan(
+                body, (tuple(xs), tuple(deltas)),
+                (tuple(metas), tuple(keys), tuple(refreshes)))
+            return out, dout
         return step
 
     def step(params, xs, metas, keys):

@@ -217,37 +217,80 @@ class FlexiPipeline:
 
         return jax.jit(run)
 
+    def _cached_runner(self, plan: SamplingPlan, schedule: FlexiSchedule,
+                       ts: np.ndarray) -> Callable:
+        """Static runner with the cross-step activation cache (DESIGN.md
+        §cache): per-phase refresh masks arrive as TRACED inputs, so one
+        compiled runner serves every refresh policy at this (schedule,
+        split) signature."""
+        from repro.cache import apply as cache_apply
+        from repro.models import dit as dit_mod
+        from repro.models.common import dtype_of
+        splits = schedule.split_timesteps(ts)
+        set_idx = {m: i for i, m in
+                   enumerate(self._param_set_modes(plan, schedule))}
+        cfg = self.cfg
+        split = plan.cache.resolve_split(cfg.num_layers)
+
+        def run(param_sets, x_T, cond, null_cond, key, text_mask,
+                null_text_mask, masks):
+            B = x_T.shape[0]
+            dtype = dtype_of(cfg.compute_dtype)
+            phases = []
+            for i, (mode, tsub) in enumerate(splits):
+                p = param_sets[set_idx.get(mode, 0)]
+                g = self._phase_guidance(plan, mode)
+                fn = cache_apply.make_cached_eps_fn(
+                    p, cfg, cond, null_cond, g, text_mask,
+                    null_text_mask, split)
+                guided = g.scale != 0.0 and cond is not None
+                delta0 = jnp.zeros(
+                    cache_apply.delta_shape(cfg, mode, B, guided), dtype)
+                phases.append((fn, tsub, masks[i], delta0))
+            return cache_apply.sample_phased_cached(
+                phases, self.sched, x_T, key, solver=plan.solver,
+                clip_x0=plan.clip_x0)
+
+        return jax.jit(run)
+
     def packed_step(self, layout: PackLayout, *, solver: str = "ddim",
                     guidance_scale: float = 1.5, clip_x0: float = 0.0,
-                    k_steps: int = 1) -> Callable:
+                    k_steps: int = 1,
+                    cache_split: Optional[int] = None) -> Callable:
         """Step-granular entry point (DESIGN.md §serving): the compiled
         executable advancing ONE packed engine step (``k_steps``
         micro-steps under lax.scan) at ``layout``. Latents, timesteps,
         conditioning, params, and solver keys are traced, so the serving
         engine replays a layout across arbitrary requests and denoise
         steps without recompiling; runners share this pipeline's cache,
-        so ``cache_stats()`` tracks bucket warmup."""
-        key = ("packed", layout, solver, guidance_scale, clip_x0, k_steps)
+        so ``cache_stats()`` tracks bucket warmup. ``cache_split``
+        selects the activation-cached step family (per-request deltas +
+        refresh flags are traced too — refresh policies never join the
+        key)."""
+        key = ("packed", layout, solver, guidance_scale, clip_x0, k_steps,
+               cache_split)
         return self._lookup(
             self._runners, key,
             lambda: jax.jit(make_packed_step_fn(
                 self.cfg, self.sched, layout, solver=solver,
                 guidance_scale=guidance_scale, clip_x0=clip_x0,
-                k_steps=k_steps)))
+                k_steps=k_steps, cache_split=cache_split)))
 
     def packed_step_is_warm(self, layout: PackLayout, *, solver: str = "ddim",
                             guidance_scale: float = 1.5,
                             clip_x0: float = 0.0,
-                            k_steps: int = 1) -> bool:
+                            k_steps: int = 1,
+                            cache_split: Optional[int] = None) -> bool:
         """Whether :meth:`packed_step` would be a cache hit — the serving
         planner prefers warm executables so steady-state traffic never
         stalls on a compile."""
         return ("packed", layout, solver, guidance_scale, clip_x0,
-                k_steps) in self._runners
+                k_steps, cache_split) in self._runners
 
     def warm_packed_layouts(self, *, solver: str = "ddim",
                             guidance_scale: float = 1.5,
-                            clip_x0: float = 0.0
+                            clip_x0: float = 0.0,
+                            cache_split: Optional[int] = None
                             ) -> Dict[int, List[PackLayout]]:
         """Compiled packed-step layouts grouped by micro-step depth k, for
         the given step family. A frozen serving engine
@@ -255,7 +298,8 @@ class FlexiPipeline:
         out: Dict[int, List[PackLayout]] = {}
         for key in self._runners:
             if key[0] == "packed" and key[2:5] == (solver, guidance_scale,
-                                                   clip_x0):
+                                                   clip_x0) \
+                    and key[6] == cache_split:
                 out.setdefault(key[5], []).append(key[1])
         return out
 
@@ -295,6 +339,9 @@ class FlexiPipeline:
                                           or plan.solver in FLOW_SOLVERS):
             raise ValueError("eps_transform only applies to static "
                              "diffusion plans")
+        if eps_transform is not None and plan.cache is not None:
+            raise ValueError("eps_transform does not compose with the "
+                             "activation cache")
         if plan.is_adaptive:
             return self._sample_adaptive(plan, x_T, run_key, y, null,
                                          text_mask, null_text_mask)
@@ -334,6 +381,32 @@ class FlexiPipeline:
                 self._runners, ("flow",) + sig,
                 lambda: self._flow_runner(plan, schedule, engine))
             x0 = runner(param_sets, x_T, y)
+        elif plan.cache is not None:
+            from repro.cache import ledger as cache_ledger
+            from repro.cache import policy as cache_policy
+            # masks are runner INPUTS: interval/band/threshold switches
+            # replay the same executable with different flag arrays
+            masks = tuple(
+                jnp.asarray(cache_policy.refresh_mask(plan.cache, tsub))
+                for _m, tsub in schedule.split_timesteps(ts))
+            runner = self._lookup(
+                self._runners,
+                ("cached",) + sig
+                + (plan.cache.resolve_split(self.cfg.num_layers),),
+                lambda: self._cached_runner(plan, schedule, ts))
+            x0 = runner(param_sets, x_T, y, null, run_key, text_mask,
+                        null_text_mask, masks)
+            fl, n_refresh, n_steps = cache_ledger.schedule_cached_flops(
+                self.cfg, schedule, ts, plan.cache,
+                cfg_scale_active=plan.guidance_active,
+                lora_unmerged=(variant == "unmerged"))
+            return SampleResult(
+                x0=x0, flops=n * fl,
+                relative_compute=plan.relative_compute(self.cfg),
+                trace={"schedule": schedule, "timesteps": ts,
+                       "refresh_masks": tuple(np.asarray(m) for m in masks),
+                       "cache_refreshes": n_refresh,
+                       "cache_steps": n_steps})
         else:
             runner = self._lookup(
                 self._runners, ("static",) + sig,

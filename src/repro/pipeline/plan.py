@@ -20,10 +20,13 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Sequence, Tuple, Union
 
+from repro.cache.policy import CacheSpec
 from repro.configs.base import ModelConfig
 from repro.core.scheduler import (FlexiSchedule, dit_nfe_flops,
                                   lora_nfe_overhead, schedule_flops)
 from repro.distributed.partition import ParallelSpec
+
+CACHED_SOLVERS = ("ddim", "ddpm")    # the packed-step solver family
 
 STATIC_SOLVERS = ("ddpm", "ddim", "dpm2")
 FLOW_SOLVERS = ("flow_euler", "flow_heun")
@@ -63,6 +66,11 @@ class SamplingPlan:
     # sequence-parallel execution over a device mesh (repro.distributed);
     # the mesh itself is owned by the pipeline, keeping plans declarative
     parallel: Optional[ParallelSpec] = None
+    # cross-step activation cache (repro.cache, DESIGN.md §cache): deep
+    # blocks replay a cached residual on refresh-skip steps. The spec's
+    # SPLIT joins the runner key (structure); its policy/threshold only
+    # shape the refresh mask (data) — policy switches never recompile.
+    cache: Optional[CacheSpec] = None
 
     def __post_init__(self):
         if isinstance(self.budget, int):        # budget=1 → fraction 1.0
@@ -99,6 +107,24 @@ class SamplingPlan:
                 raise ValueError("sequence-parallel adaptive plans are not "
                                  "supported yet (the probe loop runs on the "
                                  "host); use a static or fraction budget")
+        if self.cache is not None:
+            if not isinstance(self.cache, CacheSpec):
+                raise ValueError(f"cache must be a CacheSpec, got "
+                                 f"{type(self.cache).__name__}")
+            if self.solver not in CACHED_SOLVERS:
+                raise ValueError(f"the activation cache supports solvers "
+                                 f"{CACHED_SOLVERS}, got {self.solver!r}")
+            if self.is_adaptive:
+                raise ValueError("adaptive plans decide modes per sample; "
+                                 "the activation cache needs a static "
+                                 "schedule")
+            if self.guidance_active and self.guidance_kind != "uncond":
+                raise ValueError("the activation cache supports vanilla "
+                                 "CFG only (weak_cond mixes patch modes "
+                                 "inside one step)")
+            if self.parallel is not None:
+                raise ValueError("the activation cache does not compose "
+                                 "with sequence-parallel plans yet")
 
     # ------------------------------------------------------------------
     @property
@@ -130,6 +156,8 @@ class SamplingPlan:
                 and not self.is_adaptive:
             # harmless no-op, but likely a caller mistake — surface it
             raise ValueError("lora='unmerged' on a model without LoRA adapters")
+        if self.cache is not None:
+            self.cache.resolve_split(cfg.num_layers)   # raises when invalid
 
     # ------------------------------------------------------------------
     # Budget resolution
@@ -199,6 +227,30 @@ class SamplingPlan:
         total = schedule_flops(cfg, schedule, **self._flop_kwargs(cfg, schedule))
         if self.solver in ("flow_heun", "dpm2"):
             total *= 2.0                 # 2nd-order solvers: 2 NFEs per step
+        return batch * total
+
+    def cached_flops(self, cfg: ModelConfig, batch: int = 1,
+                     num_train_steps: int = 1000) -> float:
+        """Denoising FLOPs with the activation cache applied: skip steps
+        pay shallow blocks only (``repro.cache.ledger``). Falls back to
+        :meth:`flops` when the plan carries no cache.
+
+        ``num_train_steps`` is the diffusion-schedule length the ladder
+        respaces over — banded/proxy masks depend on the actual ``t``
+        values, so callers that know the pipeline's schedule (the
+        serving controller does) should pass it; the default is the
+        paper's 1000-step convention."""
+        if self.cache is None:
+            return self.flops(cfg, batch)
+        from repro.cache.ledger import schedule_cached_flops
+        from repro.diffusion.schedule import respaced_timesteps
+        schedule = self.resolve_schedule(cfg)
+        ts = respaced_timesteps(num_train_steps, self.T)
+        total, _, _ = schedule_cached_flops(
+            cfg, schedule, ts, self.cache,
+            cfg_scale_active=self.guidance_active,
+            lora_unmerged=(self.lora == "unmerged"
+                           and cfg.dit.lora_rank > 0))
         return batch * total
 
     def relative_compute(self, cfg: ModelConfig) -> float:

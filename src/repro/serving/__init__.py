@@ -5,6 +5,8 @@ denoise steps and compute budgets are packed token-wise into
 compile-once bucket layouts every engine step, with SLA-aware admission
 (FIFO / earliest-deadline-first) and load-adaptive budget degradation.
 """
+from repro.cache.policy import CacheSpec  # noqa: F401
+from repro.cache.store import CacheStore  # noqa: F401
 from repro.serving.batcher import BucketMenu, count_chain  # noqa: F401
 from repro.serving.controller import (BudgetController,  # noqa: F401
                                       request_cost_flops)

@@ -19,16 +19,29 @@ from __future__ import annotations
 
 from typing import Dict, Optional
 
+from repro.cache.policy import CacheSpec
 from repro.configs.base import ModelConfig
 from repro.pipeline.plan import SamplingPlan
 
 
 def request_cost_flops(cfg: ModelConfig, plan: SamplingPlan,
-                       sp: int = 1) -> float:
+                       sp: int = 1,
+                       cache: Optional[CacheSpec] = None,
+                       num_train_steps: int = 1000) -> float:
     """Analytic FLOPs one request at ``plan`` costs the engine. With
     ``sp`` sequence-parallel shards the pad-to-divisible waste from the
-    partition plan is real compute and is charged too."""
-    fl = plan.flops(cfg)
+    partition plan is real compute and is charged too. With ``cache``
+    (the engine's cross-step activation cache) skip steps only pay the
+    shallow blocks, so the sustainable-budget solve sees the cheaper
+    cache-adjusted cost — caching raises the budget level a given
+    arrival rate sustains. ``num_train_steps`` must match the serving
+    pipeline's diffusion-schedule length: banded/proxy refresh masks
+    depend on the ladder's actual ``t`` values."""
+    if cache is not None and plan.cache is None:
+        import dataclasses
+        plan = dataclasses.replace(plan, cache=cache)
+    fl = (plan.cached_flops(cfg, num_train_steps=num_train_steps)
+          if plan.cache is not None else plan.flops(cfg))
     if sp > 1:
         from repro.distributed.partition import plan_partition
         part = plan_partition(cfg, plan.resolve_schedule(cfg), sp,
@@ -41,14 +54,17 @@ class BudgetController:
     """Solves for the degradation level; stateless apart from two EWMAs."""
 
     def __init__(self, cfg: ModelConfig, plans: Dict[float, SamplingPlan], *,
-                 target_util: float = 0.85, alpha: float = 0.3, sp: int = 1):
+                 target_util: float = 0.85, alpha: float = 0.3, sp: int = 1,
+                 cache: Optional[CacheSpec] = None,
+                 num_train_steps: int = 1000):
         if not plans:
             raise ValueError("controller needs a non-empty plan menu")
         if not 0.0 < target_util <= 1.0:
             raise ValueError(f"target_util must be in (0, 1], got "
                              f"{target_util}")
         self.levels = tuple(sorted(plans))            # ascending budgets
-        self.costs = {b: request_cost_flops(cfg, p, sp)
+        self.costs = {b: request_cost_flops(cfg, p, sp, cache=cache,
+                                            num_train_steps=num_train_steps)
                       for b, p in plans.items()}
         self.target_util = target_util
         self.alpha = alpha

@@ -63,6 +63,15 @@ class ServingMetrics:
         self.total_tokens = 0
         self.total_flops = 0.0
         self.total_degraded = 0
+        # activation-cache ledger (DESIGN.md §cache): refresh vs skip
+        # request-steps, a refresh-interval histogram (gap in denoise
+        # steps between consecutive refreshes), and a bytes-resident
+        # gauge fed by the engine's CacheStore
+        self.cache_refreshes = 0
+        self.cache_skips = 0
+        self.cache_bytes_resident = 0
+        self.refresh_interval_hist: collections.Counter = \
+            collections.Counter()
 
     def record_step(self, now: float, real_tokens: int, packed_tokens: int,
                     n_requests: int) -> None:
@@ -77,6 +86,18 @@ class ServingMetrics:
         self.total_flops += rec.flops
         self.total_degraded += int(rec.degraded)
 
+    def record_cache(self, refreshes: int, skips: int) -> None:
+        """One dispatch's refresh/skip request-step counts."""
+        self.cache_refreshes += refreshes
+        self.cache_skips += skips
+
+    def set_cache_bytes(self, n_bytes: int) -> None:
+        self.cache_bytes_resident = int(n_bytes)
+
+    def record_refresh_intervals(self, intervals) -> None:
+        """A retired request's realized refresh gaps (denoise steps)."""
+        self.refresh_interval_hist.update(int(i) for i in intervals)
+
     # ------------------------------------------------------------------
 
     @property
@@ -86,6 +107,27 @@ class ServingMetrics:
         packed = sum(s.packed_tokens for s in self.steps)
         return sum(s.real_tokens for s in self.steps) / packed if packed \
             else 1.0
+
+    @property
+    def cache_hit_rate(self) -> float:
+        """Skipped (deep-block replay) request-steps / all cached
+        request-steps; 0.0 before any cached dispatch."""
+        total = self.cache_refreshes + self.cache_skips
+        return self.cache_skips / total if total else 0.0
+
+    def cache_summary(self) -> Dict[str, object]:
+        """Activation-cache ledger view (json-friendly; the histogram
+        maps refresh gap → count)."""
+        return {
+            "enabled": bool(self.cache_refreshes + self.cache_skips),
+            "hit_rate": self.cache_hit_rate,
+            "refreshes": self.cache_refreshes,
+            "skips": self.cache_skips,
+            "bytes_resident": self.cache_bytes_resident,
+            "refresh_interval_hist": {
+                str(k): v for k, v in
+                sorted(self.refresh_interval_hist.items())},
+        }
 
     def latency_percentiles(self, qs=(50, 99)) -> Dict[str, float]:
         if not self.requests:
@@ -112,6 +154,9 @@ class ServingMetrics:
             out["deadline_hit_rate"] = float(
                 np.mean([r.met_deadline for r in self.requests]))
             out["flops"] = self.total_flops
+        if self.cache_refreshes + self.cache_skips:
+            out["cache_hit_rate"] = self.cache_hit_rate
+            out["cache_bytes_resident"] = float(self.cache_bytes_resident)
         if wall is not None and wall > 0:
             out["wall_s"] = wall
             out["tokens_per_s"] = self.total_tokens / wall

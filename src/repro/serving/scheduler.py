@@ -28,12 +28,16 @@ from __future__ import annotations
 import dataclasses
 import math
 import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cache import ledger as cache_ledger
+from repro.cache import policy as cache_policy
+from repro.cache.policy import CacheSpec
+from repro.cache.store import CacheStore
 from repro.core.scheduler import dit_nfe_flops
 from repro.diffusion import schedule as sch
 from repro.models import dit as dit_mod
@@ -71,6 +75,14 @@ class InFlight:
     admit: float
     seq: int
     step: int = 0
+    # cross-step activation cache (DESIGN.md §cache): this request's OWN
+    # staleness clock over its ladder, plus its slot in the engine's
+    # CacheStore (slot follows the request across bucket migrations;
+    # forced refreshes — join, phase switch, eviction — flip the mask
+    # in place so the retire-time histogram reflects reality)
+    refresh_mask: Optional[np.ndarray] = None
+    cache_slot: int = -1
+    cache_mode: int = -1
 
     @property
     def x(self) -> jax.Array:
@@ -111,7 +123,9 @@ class ServingEngine:
                  base_key: Optional[jax.Array] = None,
                  steps_per_dispatch: int = 8,
                  menu: Optional[BucketMenu] = None,
-                 allow_cold: bool = True):
+                 allow_cold: bool = True,
+                 cache: Optional[CacheSpec] = None,
+                 precapture_small: int = 0):
         if policy not in ENGINE_POLICIES:
             raise ValueError(f"unknown policy {policy!r}; known: "
                              f"{ENGINE_POLICIES}")
@@ -165,9 +179,24 @@ class ServingEngine:
                     f"one mode-{m} request's {mult} segment(s); such "
                     f"requests would starve")
         self.max_inflight = max_inflight or 2 * self.menu.max_requests
+        self.cache = cache
+        self.cache_split = (cache.resolve_split(self.cfg.num_layers)
+                            if cache is not None else None)
+        self.store: Optional[CacheStore] = None
+        self._level_masks: Dict[float, np.ndarray] = {}
+        if cache is not None:
+            self.store = CacheStore(self.cfg, sorted(modes),
+                                    n_slots=self.max_inflight,
+                                    guided=self.guided)
+            for b, lp in self.levels.items():
+                fs = lp.plan.resolve_schedule(self.cfg)
+                self._level_masks[b] = cache_policy.ladder_refresh_mask(
+                    cache, fs.split_timesteps(lp.ts))
         self.controller = controller
         if policy == "degrade" and controller is None:
-            self.controller = BudgetController(self.cfg, plans)
+            self.controller = BudgetController(
+                self.cfg, plans, cache=cache,
+                num_train_steps=pipe.sched.num_steps)
         self.metrics = ServingMetrics()
         self._layout_costs: Dict[Any, Any] = {}
         self._zero_blocks: Dict[int, jax.Array] = {}
@@ -181,6 +210,8 @@ class ServingEngine:
         self._last_sync_at: Optional[float] = self.clock()
         self._flops_since_sync = 0.0
         self.started_at = self.clock()
+        if precapture_small > 0:
+            self.precapture_warm_set(max_per_mode=precapture_small)
 
     # ------------------------------------------------------------------
     # Validation / setup
@@ -273,10 +304,12 @@ class ServingEngine:
             lp = self.levels[level]
             x_T = jax.random.normal(req.key,
                                     (1,) + self.cfg.dit.latent_shape)
+            mask = (self._level_masks[level].copy()
+                    if self.cache is not None else None)
             self._inflight.append(InFlight(
                 req=req, lp=lp, x_src=x_T, x_row=0,
                 keys=self._solver_keys(req.key, lp),
-                admit=now, seq=self._seq))
+                admit=now, seq=self._seq, refresh_mask=mask))
             self._seq += 1
 
     def _priority(self, f: InFlight) -> Tuple:
@@ -288,7 +321,22 @@ class ServingEngine:
         return self.pipe.packed_step_is_warm(
             layout, solver=self.solver,
             guidance_scale=self.guidance_scale, clip_x0=self.clip_x0,
-            k_steps=k)
+            k_steps=k, cache_split=self.cache_split)
+
+    def _ensure_slot(self, f: InFlight, mode: int) -> bool:
+        """Make sure ``f`` owns a live slot in ``mode``'s pool; returns
+        True when the slot is fresh (joined / phase-switched / evicted)
+        and the request must refresh on this dispatch's first step."""
+        if f.cache_slot >= 0 and f.cache_mode == mode \
+                and self.store.owner_of(mode, f.cache_slot) == f.req.id:
+            return False
+        if f.cache_slot >= 0 \
+                and self.store.owner_of(f.cache_mode,
+                                        f.cache_slot) == f.req.id:
+            self.store.release(f.cache_mode, f.cache_slot)
+        f.cache_slot = self.store.alloc(mode, f.req.id)
+        f.cache_mode = mode
+        return True
 
     def _gather_latents(self, sel: List[InFlight], pad: int) -> jax.Array:
         """[cap, F, H, W, C] group input with as few device ops as
@@ -316,6 +364,66 @@ class ServingEngine:
                     (pad,) + self.cfg.dit.latent_shape)
             parts.append(z)
         return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+
+    # ------------------------------------------------------------------
+    # Warm-set shaping
+
+    def precapture_warm_set(self, max_per_mode: int = 2,
+                            k_depths: Optional[Sequence[int]] = None) -> int:
+        """Compile (and execute once, with dummy inputs) the SMALL-cohort
+        bucket ladder: every menu layout with per-mode counts <=
+        ``max_per_mode``, at each micro-step depth in ``k_depths``
+        (default: powers of two up to ``steps_per_dispatch``).
+
+        Mid-trace cohorts — a Poisson straggler joining a part-drained
+        pack — otherwise fall back to whatever coarse layout happens to
+        be warm (bench: packing_eff ~0.6 vs 0.99 at drain). Capturing
+        the fine small layouts at startup keeps the frozen planner's
+        warm set shaped for them; returns how many executables were
+        actually cold (newly compiled)."""
+        if k_depths is None:
+            k_depths, kd = [], 1
+            while kd <= self.steps_per_dispatch:
+                k_depths.append(kd)
+                kd *= 2
+        n_cold = 0
+        for layout in self.menu.layouts:
+            if any(c > max_per_mode for _m, c in layout.groups):
+                continue
+            for k in k_depths:
+                if self._is_warm(layout, k):
+                    continue
+                n_cold += 1
+                self._dummy_dispatch(layout, k)
+        return n_cold
+
+    def _dummy_dispatch(self, layout: PackLayout, k: int) -> None:
+        """Run one throwaway dispatch at ``layout`` so the executable is
+        compiled AND loaded (a runner that merely exists in the cache
+        still stalls its first real step on compilation)."""
+        runner = self.pipe.packed_step(
+            layout, solver=self.solver,
+            guidance_scale=self.guidance_scale, clip_x0=self.clip_x0,
+            k_steps=k, cache_split=self.cache_split)
+        xs, metas, keys, deltas, refreshes = [], [], [], [], []
+        for mode, cap in layout.groups:
+            xs.append(jnp.zeros((cap,) + self.cfg.dit.latent_shape))
+            meta = np.zeros((k, 3, cap), np.int32)
+            meta[:, 1, :] = -1
+            metas.append(jnp.asarray(meta))
+            keys.append(jnp.zeros((k, cap, 2), jnp.uint32))
+            if self.cache is not None:
+                deltas.append(jnp.zeros(
+                    (cap, self.store.mult, self._seg_tokens[mode],
+                     self.cfg.d_model), self.store.dtype))
+                refreshes.append(jnp.zeros((k, cap), bool))
+        if self.cache is not None:
+            out = runner(self.pipe.params, tuple(xs), tuple(metas),
+                         tuple(keys), tuple(deltas), tuple(refreshes))
+        else:
+            out = runner(self.pipe.params, tuple(xs), tuple(metas),
+                         tuple(keys))
+        jax.block_until_ready(out)
 
     # ------------------------------------------------------------------
     # The engine iteration
@@ -360,7 +468,8 @@ class ServingEngine:
                     for kk, ls in self.pipe.warm_packed_layouts(
                         solver=self.solver,
                         guidance_scale=self.guidance_scale,
-                        clip_x0=self.clip_x0).items()}
+                        clip_x0=self.clip_x0,
+                        cache_split=self.cache_split).items()}
             kc = k_cap
             while kc >= 1:
                 eligible = [f for f in prio
@@ -411,31 +520,90 @@ class ServingEngine:
                   for mode, cap in layout.groups]
 
         xs, metas, keys = [], [], []
+        deltas, refreshes, slot_lists, rf_real = [], [], [], []
         real_tokens = 0
+        n_refresh = n_cached_steps = 0
         for (mode, cap), sel in zip(layout.groups, picked):
             pad = cap - len(sel)
             xs.append(self._gather_latents(sel, pad))
             meta = np.zeros((k, 3, cap), np.int32)
             meta[:, 1, :] = -1                   # dummy slots: final step
             kk = np.zeros((k, cap, 2), np.uint32)
+            rf = np.zeros((k, cap), bool)        # dummies never refresh
+            slots: List[int] = []
             for i, f in enumerate(sel):
                 s = f.step
                 meta[:, 0, i] = f.lp.ts[s:s + k]
                 meta[:, 1, i] = f.lp.t_prev[s:s + k]
                 meta[:, 2, i] = f.req.cond
                 kk[:, i] = f.keys[s:s + k]
+                if self.cache is not None:
+                    if self._ensure_slot(f, mode):
+                        f.refresh_mask[s] = True     # fresh slot: no replay
+                    rf[:, i] = f.refresh_mask[s:s + k]
+                    slots.append(f.cache_slot)
             metas.append(jnp.asarray(meta))
             keys.append(jnp.asarray(kk))
             real_tokens += mult * self._seg_tokens[mode] * len(sel) * k
+            if self.cache is not None:
+                refreshes.append(jnp.asarray(rf))
+                slot_lists.append(slots)
+                rf_real.append(rf[:, :len(sel)])
+                gathered = self.store.gather(mode, slots) if slots else None
+                if pad:
+                    z = jnp.zeros((pad, self.store.mult,
+                                   self._seg_tokens[mode],
+                                   self.cfg.d_model), self.store.dtype)
+                    gathered = (z if gathered is None
+                                else jnp.concatenate([gathered, z]))
+                deltas.append(gathered)
+
+        step_flops = 0.0
+        if self.cache is not None:
+            # honest device-cost accounting: the packed executable's
+            # lax.cond is DISPATCH-wide — the deep blocks run for the
+            # whole pack whenever any cohort member refreshes a
+            # micro-step, so only all-skip micro-steps realize the deep
+            # saving. The per-request replay counts below feed the
+            # quality/staleness ledger (hit rate, histogram); the FLOPs
+            # fed to the capacity EWMA charge what the hardware ran.
+            any_ref = np.zeros(k, bool)
+            for rf in rf_real:
+                if rf.size:
+                    any_ref |= rf.any(axis=1)
+            deep_skips = k - int(any_ref.sum())
+            for (mode, _cap), sel, rf in zip(layout.groups, picked,
+                                             rf_real):
+                n_refresh += int(rf.sum())
+                n_cached_steps += k * len(sel)
+                full = dit_nfe_flops(self.cfg, mode)
+                deep = cache_ledger.deep_block_flops(self.cfg, mode,
+                                                     self.cache_split)
+                step_flops += mult * len(sel) * (k * full
+                                                 - deep_skips * deep)
+        else:
+            step_flops = k * sum(
+                mult * len(sel) * dit_nfe_flops(self.cfg, mode)
+                for (mode, _cap), sel in zip(layout.groups, picked))
 
         runner = self.pipe.packed_step(
             layout, solver=self.solver,
             guidance_scale=self.guidance_scale, clip_x0=self.clip_x0,
-            k_steps=k)
-        outs = runner(self.pipe.params, tuple(xs), tuple(metas), tuple(keys))
-        step_flops = k * sum(
-            mult * len(sel) * dit_nfe_flops(self.cfg, mode)
-            for (mode, _cap), sel in zip(layout.groups, picked))
+            k_steps=k, cache_split=self.cache_split)
+        if self.cache is not None:
+            outs, new_deltas = runner(self.pipe.params, tuple(xs),
+                                      tuple(metas), tuple(keys),
+                                      tuple(deltas), tuple(refreshes))
+            for (mode, _cap), slots, nd in zip(layout.groups, slot_lists,
+                                               new_deltas):
+                if slots:
+                    self.store.scatter(mode, slots, nd[:len(slots)])
+            self.metrics.record_cache(n_refresh,
+                                      n_cached_steps - n_refresh)
+            self.metrics.set_cache_bytes(self.store.bytes_resident)
+        else:
+            outs = runner(self.pipe.params, tuple(xs), tuple(metas),
+                          tuple(keys))
         self._flops_since_sync += step_flops
         if any(f.step + k >= len(f.lp.ts) for sel in picked for f in sel):
             # someone completes on this dispatch: a result only counts as
@@ -473,6 +641,14 @@ class ServingEngine:
     def _retire(self, f: InFlight, now: float) -> ServedResult:
         mult = 2 if self.guided else 1
         tokens = int(mult * sum(self._seg_tokens[int(m)] for m in f.lp.modes))
+        if self.store is not None and f.cache_slot >= 0 \
+                and self.store.owner_of(f.cache_mode,
+                                        f.cache_slot) == f.req.id:
+            self.store.release(f.cache_mode, f.cache_slot)
+        if f.refresh_mask is not None:
+            self.metrics.record_refresh_intervals(
+                cache_policy.refresh_intervals(f.refresh_mask))
+            self.metrics.set_cache_bytes(self.store.bytes_resident)
         rec = RequestRecord(
             id=f.req.id, arrival=f.req.arrival, admit=f.admit, finish=now,
             deadline=f.req.deadline, budget_requested=f.req.budget,
