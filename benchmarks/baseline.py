@@ -1,0 +1,55 @@
+"""BENCH-json baseline gate (no network, pure threshold checks).
+
+``benchmarks/baselines.json`` records, per bench name, bounds on the
+analytic metrics a suite must hold, e.g.::
+
+    {"attention": {"attn_flops_reduction_frac": {"min": 0.30},
+                   "attn_flops_sparse": {"max": 2.1e9, "rtol": 0.05}}}
+
+``check_baseline(name, metrics)`` compares the freshly computed BENCH
+dict against those bounds and raises :class:`BaselineRegression` on any
+violation; ``run.py`` turns that into a non-zero exit so CI fails loudly
+when a change regresses the analytic attention-FLOPs ledger (silent cost
+regressions are how block-sparse savings rot).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict
+
+BASELINES_PATH = Path(__file__).resolve().parent / "baselines.json"
+
+
+class BaselineRegression(RuntimeError):
+    """A BENCH metric violated its recorded baseline bound."""
+
+
+def check_baseline(name: str, metrics: Dict[str, object],
+                   path: Path = BASELINES_PATH) -> None:
+    """Validate ``metrics`` against the recorded bounds for ``name``.
+
+    Bound spec per metric key: ``min`` (value must be >=), ``max``
+    (value must be <=); ``rtol`` loosens either bound by a relative
+    slack (default 0 — analytic numbers are deterministic). A bench
+    name with no recorded baselines passes vacuously.
+    """
+    if not path.exists():
+        return
+    bounds = json.loads(path.read_text()).get(name, {})
+    failures = []
+    for key, spec in bounds.items():
+        if key not in metrics:
+            failures.append(f"{key}: missing from BENCH output")
+            continue
+        val = float(metrics[key])
+        rtol = float(spec.get("rtol", 0.0))
+        if "min" in spec and val < float(spec["min"]) * (1.0 - rtol):
+            failures.append(f"{key}: {val:.6g} below baseline min "
+                            f"{float(spec['min']):.6g}")
+        if "max" in spec and val > float(spec["max"]) * (1.0 + rtol):
+            failures.append(f"{key}: {val:.6g} above baseline max "
+                            f"{float(spec['max']):.6g}")
+    if failures:
+        raise BaselineRegression(
+            f"bench {name!r} regressed vs {path.name}: " + "; ".join(failures))

@@ -71,8 +71,14 @@ def bench_serving() -> None:
     # one level per distinct T_weak: the full quality dial
     plans = {}
     for tw in range(T):
+        # this bench measures SCHEDULING (continuous batching vs fixed
+        # slots), so both sides hold the attention backend equal: the
+        # engine's default interpret-mode Pallas kernel is a CPU stand-in
+        # for the TPU kernel and would skew a same-host wall-clock race
+        # against the baseline's compiled XLA path (bench_attention owns
+        # the backend comparison)
         plan = SamplingPlan(T=T, budget=FlexiSchedule.weak_first(T, tw),
-                            guidance_scale=1.5)
+                            guidance_scale=1.5, attn_backend="dense")
         plan.validate(cfg)
         plans[round(plan.relative_compute(cfg), 3)] = plan
     levels = sorted(plans)
@@ -236,6 +242,9 @@ def bench_serving() -> None:
         "poisson_rate_per_s": lam,
         "engine": {"tokens_per_s": eng_tps, "wall_s": dt_eng,
                    "packing_efficiency": eng_eff,
+                   "attn_backend": engine.attn_backend,
+                   "attn_block_skip_rate":
+                       engine.metrics.attn_block_skip_rate,
                    "p50_s": eng_lat["p50"], "p99_s": eng_lat["p99"],
                    "drain_tokens_per_s": useful_tokens / dt_eng_drain,
                    "recompiles_after_warmup": recompiles,

@@ -22,13 +22,16 @@ SUITES = {
     "distributed": ("distributed_seqpar",),
     "serving": ("serving_engine",),
     "cache": ("activation_cache",),
+    "attention": ("attention_kernel",),
 }
 
 
 def main() -> None:
-    from benchmarks import (bench_cache, bench_core, bench_distributed,
-                            bench_extensions, bench_modalities, bench_perf,
-                            bench_pipeline, bench_serving)
+    from benchmarks import (bench_attention, bench_cache, bench_core,
+                            bench_distributed, bench_extensions,
+                            bench_modalities, bench_perf, bench_pipeline,
+                            bench_serving)
+    from benchmarks.baseline import BaselineRegression
     from benchmarks.roofline_table import bench_roofline
 
     benches = [
@@ -48,6 +51,7 @@ def main() -> None:
         ("distributed_seqpar", bench_distributed.bench_distributed),
         ("serving_engine", bench_serving.bench_serving),
         ("activation_cache", bench_cache.bench_cache),
+        ("attention_kernel", bench_attention.bench_attention),
         ("roofline", bench_roofline),
     ]
     argv = sys.argv[1:]
@@ -62,6 +66,7 @@ def main() -> None:
         del argv[i:i + 2]
     filters = [a for a in argv if not a.startswith("-")]
     print("name,us_per_call,derived")
+    regressions = []
     for name, fn in benches:
         if suite is not None and name not in SUITES[suite]:
             continue
@@ -71,8 +76,18 @@ def main() -> None:
         try:
             fn()
             print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except BaselineRegression as e:
+            # a recorded analytic baseline was violated: keep running the
+            # remaining benches, but fail the harness loudly at the end
+            regressions.append((name, str(e)))
+            print(f"{name},0.0,REGRESSION:{e}", flush=True)
         except Exception as e:  # keep the harness running
             print(f"{name},0.0,ERROR:{type(e).__name__}:{e}", flush=True)
+    if regressions:
+        for name, msg in regressions:
+            print(f"# BASELINE REGRESSION in {name}: {msg}",
+                  file=sys.stderr, flush=True)
+        raise SystemExit(1)
 
 
 if __name__ == '__main__':

@@ -46,7 +46,8 @@ def make_cached_eps_fn(params: Any, cfg: ModelConfig, cond: Any,
                        null_cond: Any, g: GuidanceConfig,
                        text_mask: Optional[jax.Array],
                        null_text_mask: Optional[jax.Array],
-                       split: int) -> CachedEpsFn:
+                       split: int,
+                       attn_backend: str = "auto") -> CachedEpsFn:
     """Cached counterpart of ``core.guidance.make_eps_fn``. ``delta``
     covers the NFE's full token stream ([2B, N, d] under CFG — both
     branches share the request's staleness clock but carry their own
@@ -60,7 +61,7 @@ def make_cached_eps_fn(params: Any, cfg: ModelConfig, cond: Any,
         def eps_plain(x, t, delta, refresh):
             out, nd = dit_mod.dit_forward(
                 params, x, t, cond, cfg, mode=g.mode_cond,
-                text_mask=text_mask,
+                text_mask=text_mask, attn_backend=attn_backend,
                 block_cache=dit_mod.BlockCache(delta, refresh, split))
             eps, lv = split_model_out(out, cfg)
             return eps, lv, nd
@@ -75,6 +76,7 @@ def make_cached_eps_fn(params: Any, cfg: ModelConfig, cond: Any,
             m2 = jnp.concatenate([text_mask, null_text_mask], axis=0)
         out, nd = dit_mod.dit_forward(
             params, x2, t2, c2, cfg, mode=g.mode_cond, text_mask=m2,
+            attn_backend=attn_backend,
             block_cache=dit_mod.BlockCache(delta, refresh, split))
         eps, logvar = split_model_out(out, cfg)
         e_c, e_u = jnp.split(eps, 2, axis=0)

@@ -22,23 +22,28 @@ from repro.models import dit as dit_mod
 _DTYPE_BYTES = {"float32": 4, "bfloat16": 2, "float16": 2}
 
 
-def deep_block_flops(cfg: ModelConfig, mode: int, split: int) -> float:
+def deep_block_flops(cfg: ModelConfig, mode: int, split: int,
+                     attn_backend: str = "dense") -> float:
     """FLOPs of the deep blocks ``[split, L)`` a cache-skip step avoids
     (batch 1, one NFE). ``dit_block_flops`` is linear in the layer count,
-    so the deep share is exact, not an estimate."""
+    so the deep share is exact, not an estimate. ``attn_backend`` prices
+    attention at what the serving backend actually issues (block-granular
+    under Pallas — DESIGN.md §attention-backend)."""
     L = cfg.num_layers
     N = dit_mod.tokens_for_mode(cfg, mode)
-    return dit_block_flops(cfg, N) * (L - split) / L
+    return dit_block_flops(cfg, N, attn_backend=attn_backend) \
+        * (L - split) / L
 
 
 def cached_nfe_flops(cfg: ModelConfig, mode: int, split: int,
-                     refresh: bool) -> float:
+                     refresh: bool, attn_backend: str = "dense") -> float:
     """FLOPs of one NFE at ``mode`` under the cache: full on refresh,
     shallow-only (plus embed/de-embed/conditioning) on skip."""
-    full = dit_nfe_flops(cfg, mode)
+    full = dit_nfe_flops(cfg, mode, attn_backend=attn_backend)
     if refresh:
         return full
-    return full - deep_block_flops(cfg, mode, split)
+    return full - deep_block_flops(cfg, mode, split,
+                                   attn_backend=attn_backend)
 
 
 def delta_bytes(cfg: ModelConfig, mode: int, guided: bool = True) -> int:
@@ -52,7 +57,8 @@ def delta_bytes(cfg: ModelConfig, mode: int, guided: bool = True) -> int:
 def schedule_cached_flops(cfg: ModelConfig, schedule: FlexiSchedule,
                           ts: np.ndarray, spec: CacheSpec, *,
                           cfg_scale_active: bool = True,
-                          lora_unmerged: bool = False
+                          lora_unmerged: bool = False,
+                          attn_backend: str = "dense"
                           ) -> Tuple[float, int, int]:
     """Denoising FLOPs of one batch-1 sample under ``spec``'s refresh
     policy (both CFG branches share the request's staleness clock).
@@ -67,7 +73,8 @@ def schedule_cached_flops(cfg: ModelConfig, schedule: FlexiSchedule,
         mask = refresh_mask(spec, tsub)
         lora = lora_nfe_overhead(cfg, mode) if lora_unmerged else 0.0
         for rf in mask:
-            total += mult * (cached_nfe_flops(cfg, mode, split, bool(rf))
+            total += mult * (cached_nfe_flops(cfg, mode, split, bool(rf),
+                                              attn_backend=attn_backend)
                              + lora * (1.0 if rf else skip_frac))
         n_refresh += int(mask.sum())
         n_steps += len(mask)

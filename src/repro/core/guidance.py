@@ -52,7 +52,8 @@ def make_eps_fn(params: Any, cfg: ModelConfig, cond: Any, null_cond: Any,
                 text_mask: Optional[jax.Array] = None,
                 null_text_mask: Optional[jax.Array] = None,
                 guidance_params: Any = None,
-                parallel: Any = None) -> Callable:
+                parallel: Any = None,
+                attn_backend: str = "auto") -> Callable:
     """Returns eps_fn(x, t) → (eps_guided, logvar_frac).
 
     ``guidance_params``: optional separate tree for the guidance NFE in the
@@ -61,6 +62,9 @@ def make_eps_fn(params: Any, cfg: ModelConfig, cond: Any, null_cond: Any,
 
     ``parallel``: optional ``distributed.engine.SeqParallel`` threaded into
     every NFE so all guidance variants run sequence-parallel.
+
+    ``attn_backend`` selects the attention implementation inside every
+    NFE (DESIGN.md §attention-backend).
     """
     s = g.effective_scale()
     g_params = params if guidance_params is None else guidance_params
@@ -68,7 +72,8 @@ def make_eps_fn(params: Any, cfg: ModelConfig, cond: Any, null_cond: Any,
     if g.scale == 0.0 or cond is None:
         def eps_plain(x, t):
             out = dit_mod.dit_forward(params, x, t, cond, cfg, mode=g.mode_cond,
-                                      text_mask=text_mask, parallel=parallel)
+                                      text_mask=text_mask, parallel=parallel,
+                                      attn_backend=attn_backend)
             return split_model_out(out, cfg)
         return eps_plain
 
@@ -87,7 +92,8 @@ def make_eps_fn(params: Any, cfg: ModelConfig, cond: Any, null_cond: Any,
                 m2 = None
             out = dit_mod.dit_forward(params, x2, t2, c2, cfg,
                                       mode=g.mode_cond, text_mask=m2,
-                                      parallel=parallel)
+                                      parallel=parallel,
+                                      attn_backend=attn_backend)
             eps, logvar = split_model_out(out, cfg)
             e_c, e_u = jnp.split(eps, 2, axis=0)
             lv = None if logvar is None else jnp.split(logvar, 2, axis=0)[0]
@@ -97,18 +103,21 @@ def make_eps_fn(params: Any, cfg: ModelConfig, cond: Any, null_cond: Any,
     # mixed patch sizes — two NFEs (packing alternatives in core.packing)
     def eps_weak_guided(x, t):
         out_c = dit_mod.dit_forward(params, x, t, cond, cfg, mode=g.mode_cond,
-                                    text_mask=text_mask, parallel=parallel)
+                                    text_mask=text_mask, parallel=parallel,
+                                    attn_backend=attn_backend)
         e_c, lv = split_model_out(out_c, cfg)
         if g.kind == "weak_cond":
             # paper: guidance = weak *conditional* prediction
             out_g = dit_mod.dit_forward(g_params, x, t, cond, cfg,
                                         mode=g.mode_uncond, text_mask=text_mask,
-                                        parallel=parallel)
+                                        parallel=parallel,
+                                        attn_backend=attn_backend)
         else:
             out_g = dit_mod.dit_forward(g_params, x, t, null_cond, cfg,
                                         mode=g.mode_uncond,
                                         text_mask=null_text_mask,
-                                        parallel=parallel)
+                                        parallel=parallel,
+                                        attn_backend=attn_backend)
         e_g, _ = split_model_out(out_g, cfg)
         return e_g + s * (e_c - e_g), lv
 

@@ -81,7 +81,8 @@ def packed_mixed_forward(params: Any, cfg: ModelConfig,
                          row_capacity: Optional[int] = None,
                          cache_deltas: Optional[Sequence[jax.Array]] = None,
                          cache_refresh: Optional[Sequence[jax.Array]] = None,
-                         cache_split: Optional[int] = None) -> Any:
+                         cache_split: Optional[int] = None,
+                         attn_backend: str = "auto") -> Any:
     """Run NFEs for segments of (possibly) different patch modes packed
     token-wise into fixed-capacity rows.
 
@@ -170,7 +171,7 @@ def packed_mixed_forward(params: Any, cfg: ModelConfig,
 
     def body(h, bp):
         h = _packed_block(bp, h, seg_c, token_idx, cfg, block_mode,
-                          segment_ids)
+                          segment_ids, attn_backend)
         return h, None
 
     from repro.models.common import scan_or_unroll
@@ -267,7 +268,8 @@ def packed_weak_forward(params: Any, x_ts: jax.Array, t: jax.Array,
 
 def _packed_block(p: Any, x: jax.Array, seg_c: jax.Array,
                   token_idx: jax.Array, cfg: ModelConfig,
-                  mode: int, segment_ids: jax.Array) -> jax.Array:
+                  mode: int, segment_ids: jax.Array,
+                  attn_backend: str = "auto") -> jax.Array:
     """DiT block with per-segment adaLN conditioning (gathered to token
     level via ``token_idx``) + segment-masked attention."""
     H = cfg.attn.num_heads
@@ -279,7 +281,7 @@ def _packed_block(p: Any, x: jax.Array, seg_c: jax.Array,
     lora = p.get("lora", {})
     h = dit_mod._ln(x) * (1.0 + sc1) + sh1
     attn = dit_mod._mha(p["attn"], h, H, lora=lora.get("attn"), mode=mode,
-                        segment_ids=segment_ids)
+                        segment_ids=segment_ids, attn_backend=attn_backend)
     x = x + g1 * attn
     h2 = dit_mod._ln(x) * (1.0 + sc2) + sh2
     mlp_lora = lora.get("mlp", {})
@@ -304,7 +306,8 @@ class PackingCost:
 
 
 def packed_row_flops(cfg: ModelConfig, modes: Sequence[int],
-                     capacity: Optional[int] = None) -> float:
+                     capacity: Optional[int] = None,
+                     attn_backend: str = "dense") -> float:
     """FLOPs of ONE packed row holding segments of the given modes.
 
     Accounts for the conditioning overhead packing introduces: every
@@ -312,7 +315,15 @@ def packed_row_flops(cfg: ModelConfig, modes: Sequence[int],
     projection and the 2d final projection run once per segment, then
     gather to token level), the blocks see the full (padded) row, and
     (de-)embedding runs per segment at that segment's real length.
+
+    ``attn_backend``: 'dense'/'xla-blocked' price the row's attention at
+    the full C² score matrix (what the XLA paths compute, masked or
+    not); 'pallas'/'auto' price only the block tiles the segment-aware
+    flash kernel visits (cross-segment and padding tiles are skipped) —
+    the serving controller and benches use this to charge what the
+    default backend actually issues.
     """
+    from repro.kernels.attention import costing
     seg_tokens = [dit_mod.tokens_for_mode(cfg, m) for m in modes]
     C = capacity if capacity is not None else sum(seg_tokens)
     if sum(seg_tokens) > C:
@@ -321,6 +332,9 @@ def packed_row_flops(cfg: ModelConfig, modes: Sequence[int],
     d, L = cfg.d_model, cfg.num_layers
     S = len(modes)
     fl = dit_block_flops(cfg, C)
+    if attn_backend in ("pallas", "auto"):
+        fl += L * (costing.block_sparse_attention_flops(seg_tokens, C, d)
+                   - costing.dense_attention_flops(C, C, d))
     fl += L * 2 * (S - 1) * d * 6 * d        # block adaLN: one per SEGMENT
     fl += 2 * S * d * 2 * d                  # final adaLN, per segment
     c_in = cfg.dit.latent_shape[-1]
@@ -349,18 +363,36 @@ class MixedPackCost:
 
 
 def mixed_pack_cost(cfg: ModelConfig, modes: Sequence[int],
-                    row_capacity: Optional[int] = None) -> MixedPackCost:
+                    row_capacity: Optional[int] = None,
+                    attn_backend: str = "dense") -> MixedPackCost:
     """Cost of packing one segment per entry of ``modes`` into rows of
     ``row_capacity`` tokens (default: the mode-0 length)."""
     seg_tokens = [dit_mod.tokens_for_mode(cfg, m) for m in modes]
     capacity = row_capacity or max([dit_mod.tokens_for_mode(cfg, 0)]
                                    + seg_tokens)
     rows = assign_rows(seg_tokens, capacity)
-    fl = sum(packed_row_flops(cfg, [modes[i] for i in row], capacity)
+    fl = sum(packed_row_flops(cfg, [modes[i] for i in row], capacity,
+                              attn_backend=attn_backend)
              for row in rows)
     return MixedPackCost(rows=len(rows), flops=fl,
                          real_tokens=sum(seg_tokens),
                          packed_tokens=len(rows) * capacity)
+
+
+def pack_attention_block_stats(cfg: ModelConfig, modes: Sequence[int],
+                               row_capacity: Optional[int] = None
+                               ) -> Tuple[int, int]:
+    """(active, total) attention block-tile visits for the pack one
+    segment-per-``modes``-entry assembles (same first-fit row assembly
+    as :func:`packed_mixed_forward`). ``1 - active/total`` is the
+    cross-segment block skip rate ``serving.metrics`` reports."""
+    from repro.kernels.attention import costing
+    seg_tokens = [dit_mod.tokens_for_mode(cfg, m) for m in modes]
+    capacity = row_capacity or max([dit_mod.tokens_for_mode(cfg, 0)]
+                                   + seg_tokens)
+    rows = assign_rows(seg_tokens, capacity)
+    return costing.pack_attention_stats(
+        [[seg_tokens[i] for i in row] for row in rows], capacity)
 
 
 def packing_cost(cfg: ModelConfig, mode_weak: int, n_images: int

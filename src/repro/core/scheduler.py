@@ -51,19 +51,29 @@ class FlexiSchedule:
 
 
 def dit_block_flops(cfg: ModelConfig, n_tokens: int,
-                    text_len: Optional[int] = None) -> float:
+                    text_len: Optional[int] = None,
+                    attn_backend: str = "dense") -> float:
     """FLOPs of all transformer blocks over ``n_tokens`` tokens (batch 1).
 
     Split out from :func:`dit_nfe_flops` so the distributed engine can
     price sequence padding exactly: padded tokens flow through the blocks
     only, never the (de-)embedding (``distributed.partition``).
+
+    ``attn_backend='pallas'``/``'auto'`` prices self-attention at the
+    block granularity the flash kernel launches (tiles of 128, rounded
+    up) instead of the exact N² — what the device actually issues when
+    the Pallas backend serves the request (DESIGN.md §attention-backend).
     """
     N = n_tokens
     d, L, f = cfg.d_model, cfg.num_layers, cfg.d_ff
     per_layer = 0.0
     per_layer += 2 * N * d * (3 * d)          # qkv proj
     per_layer += 2 * N * d * d                # out proj
-    per_layer += 2 * 2 * N * N * d            # QK^T and PV
+    if attn_backend in ("pallas", "auto"):
+        from repro.kernels.attention import costing
+        per_layer += costing.block_sparse_attention_flops([N], N, d)
+    else:
+        per_layer += 2 * 2 * N * N * d        # QK^T and PV
     per_layer += 2 * 2 * N * d * f            # mlp in/out
     per_layer += 2 * d * 6 * d                # adaLN linear (per sample)
     if cfg.dit.conditioning == "text":
@@ -77,7 +87,8 @@ def dit_block_flops(cfg: ModelConfig, n_tokens: int,
 
 
 def dit_nfe_flops(cfg: ModelConfig, mode: int = 0,
-                  text_len: Optional[int] = None) -> float:
+                  text_len: Optional[int] = None,
+                  attn_backend: str = "dense") -> float:
     """FLOPs of one DiT forward (batch 1) at the given patch mode."""
     N = dit_mod.tokens_for_mode(cfg, mode)
     d = cfg.d_model
@@ -86,7 +97,7 @@ def dit_nfe_flops(cfg: ModelConfig, mode: int = 0,
     c_out = dit_mod.c_out_dim(cfg)
     npix = int(np.prod(p))
 
-    total = dit_block_flops(cfg, N, text_len)
+    total = dit_block_flops(cfg, N, text_len, attn_backend=attn_backend)
     total += 2 * N * npix * c_in * d          # embed
     total += 2 * N * d * npix * c_out         # de-embed
     total += 2 * d * 2 * d                    # final adaLN
@@ -109,7 +120,8 @@ def lora_nfe_overhead(cfg: ModelConfig, mode: int) -> float:
 def schedule_flops(cfg: ModelConfig, schedule: FlexiSchedule, *,
                    cfg_scale_active: bool = True,
                    guidance_modes: Optional[Sequence[Tuple[int, int]]] = None,
-                   lora_unmerged: bool = False) -> float:
+                   lora_unmerged: bool = False,
+                   attn_backend: str = "dense") -> float:
     """Total denoising FLOPs for a batch-1 sample under the scheduler.
 
     ``guidance_modes``: optional per-phase (mode_cond, mode_uncond) for CFG;
@@ -118,7 +130,7 @@ def schedule_flops(cfg: ModelConfig, schedule: FlexiSchedule, *,
     total = 0.0
     for i, (mode, n) in enumerate(schedule.phases):
         def nfe(m: int) -> float:
-            fl = dit_nfe_flops(cfg, m)
+            fl = dit_nfe_flops(cfg, m, attn_backend=attn_backend)
             if lora_unmerged:
                 fl += lora_nfe_overhead(cfg, m)
             return fl

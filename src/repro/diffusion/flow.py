@@ -100,7 +100,8 @@ def split_tau_ladder(taus: np.ndarray, phases: Sequence[Tuple[int, int]]
     return out
 
 
-def make_flow_v_fn(params, cfg, cond, mode: int = 0, parallel=None) -> VFn:
+def make_flow_v_fn(params, cfg, cond, mode: int = 0, parallel=None,
+                   attn_backend: str = "auto") -> VFn:
     """Wrap a (learn_sigma=False) DiT as a velocity model: the τ∈[0,1] time
     is mapped onto the timestep-embedding range. ``parallel`` threads the
     sequence-parallel engine into the NFE (repro.distributed)."""
@@ -108,7 +109,8 @@ def make_flow_v_fn(params, cfg, cond, mode: int = 0, parallel=None) -> VFn:
 
     def v_fn(x, tau):
         out = dit_mod.dit_forward(params, x, tau * 1000.0, cond, cfg,
-                                  mode=mode, parallel=parallel)
+                                  mode=mode, parallel=parallel,
+                                  attn_backend=attn_backend)
         return dit_mod.eps_prediction(out, cfg)
 
     return v_fn

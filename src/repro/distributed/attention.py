@@ -45,11 +45,22 @@ def _inner_cfg(heads: int, head_dim: int) -> AttnConfig:
                       head_dim=head_dim, use_rope=False)
 
 
-def _dense_attend(q, k, v, seg, cfg: AttnConfig):
-    """Full-sequence inner attention on one shard's heads."""
+def _dense_attend(q, k, v, seg, cfg: AttnConfig, attn_backend: str = "auto"):
+    """Post-all-to-all inner attention on one shard's heads (every shard
+    sees the FULL sequence for H/sp heads). The backend selects the
+    implementation: 'auto'/'pallas' run the segment-aware Pallas flash
+    kernel — padding (segment -1) kv blocks and cross-segment tiles of a
+    packed stream are skipped, not computed-then-masked."""
     B, S = q.shape[:2]
+    resolved = attn_mod.resolve_backend(attn_backend, n_tokens=S,
+                                        segmented=seg is not None)
+    if resolved == "pallas":
+        from repro.kernels.attention import ops as attn_ops
+        return attn_ops.flash_attention(q, k, v, causal=False,
+                                        softcap=cfg.logit_softcap,
+                                        segment_ids=seg)
     pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
-    if S > attn_mod.BLOCKED_ATTN_THRESHOLD:
+    if resolved == "xla-blocked":
         return attn_mod.blocked_gqa_attend(q, k, v, positions=pos,
                                            causal=False, window=0, cfg=cfg,
                                            segment_ids=seg)
@@ -60,7 +71,8 @@ def _dense_attend(q, k, v, seg, cfg: AttnConfig):
 
 def ulysses_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                       mesh: Mesh, axis: str,
-                      segment_ids: Optional[jax.Array] = None) -> jax.Array:
+                      segment_ids: Optional[jax.Array] = None,
+                      attn_backend: str = "auto") -> jax.Array:
     """All-to-all attention: sequence-sharded in, sequence-sharded out."""
     B, N, H, hd = q.shape
     sp = mesh.shape[axis]
@@ -83,7 +95,7 @@ def ulysses_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         vf = jax.lax.all_to_all(v, axis, split_axis=2, concat_axis=1,
                                 tiled=True)
         segf = jax.lax.all_gather(seg, axis, axis=1, tiled=True)
-        o = _dense_attend(qf, kf, vf, segf, cfg)
+        o = _dense_attend(qf, kf, vf, segf, cfg, attn_backend=attn_backend)
         return jax.lax.all_to_all(o, axis, split_axis=1, concat_axis=2,
                                   tiled=True)
 
@@ -94,9 +106,14 @@ def ulysses_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 def ring_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                    mesh: Mesh, axis: str,
-                   segment_ids: Optional[jax.Array] = None) -> jax.Array:
+                   segment_ids: Optional[jax.Array] = None,
+                   attn_backend: str = "auto") -> jax.Array:
     """Ring attention: local queries, K/V chunks rotating via ppermute with
-    a streaming-softmax accumulator. Works for any head count."""
+    a streaming-softmax accumulator. Works for any head count.
+    ``attn_backend`` is accepted for interface parity with
+    :func:`ulysses_attention` but unused: the rotating accumulator IS the
+    flash-style inner loop (one chunk-sized score tile at a time)."""
+    del attn_backend
     B, N, H, hd = q.shape
     sp = mesh.shape[axis]
     if N % sp != 0:
@@ -115,7 +132,8 @@ def ring_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             m, num, den = acc
             s = jnp.einsum("bqhd,bkhd->bqhk", q, k_c,
                            preferred_element_type=jnp.float32) * scale
-            mask = seg_q[:, :, None] == seg_c[:, None, :]
+            from repro.kernels.attention import mask as mask_mod
+            mask = mask_mod.segment_allowed(seg_q, seg_c)
             s = jnp.where(mask[:, :, None, :], s, -jnp.inf)
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)

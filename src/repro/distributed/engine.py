@@ -38,10 +38,14 @@ class SeqParallel:
     mesh: Mesh
     axis: str
     impl: str                    # 'ulysses' | 'ring' (resolved)
+    # attention backend for the post-all-to-all inner attend (Ulysses);
+    # DESIGN.md §attention-backend. 'auto' → the segment-aware Pallas
+    # flash kernel (padding segments become skipped blocks, not masks).
+    attn_backend: str = "auto"
 
     @classmethod
     def create(cls, mesh: Optional[Mesh], spec: ParallelSpec,
-               cfg: ModelConfig) -> "SeqParallel":
+               cfg: ModelConfig, attn_backend: str = "auto") -> "SeqParallel":
         if mesh is None:
             raise ValueError("plan.parallel needs a device mesh; construct "
                              "FlexiPipeline(..., mesh=...) or set_mesh()")
@@ -49,7 +53,8 @@ class SeqParallel:
             raise ValueError(f"mesh has no '{spec.axis}' axis "
                              f"(axes: {mesh.axis_names})")
         return cls(mesh=mesh, axis=spec.axis,
-                   impl=resolve_impl(cfg, spec, mesh.shape[spec.axis]))
+                   impl=resolve_impl(cfg, spec, mesh.shape[spec.axis]),
+                   attn_backend=attn_backend)
 
     @property
     def sp(self) -> int:
@@ -103,7 +108,7 @@ class SeqParallel:
             segment_ids = jax.lax.with_sharding_constraint(segment_ids, repl)
         fn = dist_attn.ATTN_FNS[self.impl]
         out = fn(q, k, v, mesh=self.mesh, axis=self.axis,
-                 segment_ids=segment_ids)
+                 segment_ids=segment_ids, attn_backend=self.attn_backend)
         # ... and pin the collective's output the same way so downstream
         # consumers never see a seq-sharded intermediate either.
         return jax.lax.with_sharding_constraint(out, repl)

@@ -1,11 +1,24 @@
-"""Pallas TPU flash attention (blocked online softmax).
+"""Pallas TPU flash attention (blocked online softmax, segment-aware).
 
 TPU-native layout: grid ``(batch·q_heads, num_q_blocks, num_kv_blocks)``, the
 kv-block axis iterated sequentially ("arbitrary" semantics) with the running
 max / normalizer / accumulator held in VMEM scratch. Block sizes default to
 128 (MXU-aligned). Supports GQA (kv-head index map), causal masks, sliding
-windows, and Gemma-style logit soft-capping — the same semantics as the XLA
-reference in ``repro.models.attention`` (= ``ref.py``'s oracle).
+windows, Gemma-style logit soft-capping, and NaViT-style packing segment
+masks — the same semantics as the XLA reference in ``repro.models.attention``
+(= ``ref.py``'s oracle), sharing its mask algebra via
+``kernels.attention.mask`` so the two backends cannot drift.
+
+Block-sparse cross-segment skipping (DESIGN.md §attention-backend): a
+host/graph-side block map marks every (q block, kv block) pair whose segment
+ranges cannot intersect (including the causal/window envelope), and the
+kernel skips the whole score tile under ``pl.when`` — packing's masked-out
+work is never issued. The map is int32 DATA (a traced operand), so swapping
+pack layouts under a fixed bucket shape replays the same executable.
+
+Padding: sequences are padded internally to block multiples; padded keys
+carry segment id -1 and are never attended, padded query rows are sliced
+off. Rows whose segment has no visible key (e.g. padding queries) return 0.
 
 Validated with ``interpret=True`` on CPU; compiled path targets TPU.
 """
@@ -20,6 +33,9 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.attention import mask as mask_mod
+from repro.runtime.padding import pad_to
+
 # jax 0.4.x names this TPUCompilerParams; 0.5+ renamed it CompilerParams
 _CompilerParams = getattr(pltpu, "CompilerParams",
                           getattr(pltpu, "TPUCompilerParams", None))
@@ -27,9 +43,16 @@ _CompilerParams = getattr(pltpu, "CompilerParams",
 NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-                  causal: bool, softcap: float, window: int,
-                  block_q: int, block_k: int, sm_scale: float, num_kv: int):
+def _flash_kernel(*refs, causal: bool, softcap: float, window: int,
+                  block_q: int, block_k: int, sm_scale: float, num_kv: int,
+                  segmented: bool):
+    if segmented:
+        (bmap_ref, qseg_ref, kseg_ref, q_ref, k_ref, v_ref, o_ref,
+         m_scr, l_scr, acc_scr) = refs
+    else:
+        (bmap_ref, q_ref, k_ref, v_ref, o_ref,
+         m_scr, l_scr, acc_scr) = refs
+        qseg_ref = kseg_ref = None
     qi = pl.program_id(1)
     ki = pl.program_id(2)
 
@@ -39,32 +62,43 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    q = q_ref[0]                                   # [bq, hd]
-    k = k_ref[0]                                   # [bk, hd]
-    v = v_ref[0]
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * sm_scale
-    if softcap > 0.0:
-        s = jnp.tanh(s / softcap) * softcap
+    # Skip the whole score tile when the block map proves it fully masked
+    # (cross-segment, outside the window, or acausal). The map is traced
+    # data: layout switches replay this executable.
+    @pl.when(bmap_ref[0, 0, 0] > 0)
+    def _visit():
+        q = q_ref[0]                                   # [bq, hd]
+        k = k_ref[0]                                   # [bk, hd]
+        v = v_ref[0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * sm_scale
+        if softcap > 0.0:
+            s = jnp.tanh(s / softcap) * softcap
 
-    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
-    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    mask = jnp.ones(s.shape, jnp.bool_)
-    if causal:
-        mask &= q_pos >= k_pos
-    if window > 0:
-        mask &= (q_pos - k_pos < window) & (k_pos - q_pos < window)
-    s = jnp.where(mask, s, NEG_INF)
+        # rank-2 iotas: TPU Mosaic rejects 1-D iota, so the tile path
+        # builds full [bq, bk] position grids and uses the elementwise
+        # variant of the shared position mask
+        tile = (block_q, block_k)
+        q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, tile, 0)
+        k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, tile, 1)
+        allowed = mask_mod.position_allowed_grid(q_pos, k_pos, causal=causal,
+                                                 window=window)
+        if segmented:
+            allowed &= mask_mod.segment_allowed(qseg_ref[0], kseg_ref[0])
 
-    m_prev = m_scr[...]
-    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
-    alpha = jnp.exp(m_prev - m_cur)
-    p = jnp.exp(s - m_cur[:, None])
-    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
-    m_scr[...] = m_cur
-    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
-        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
+        # Streaming softmax with fully-masked-tile safety: probabilities
+        # are zeroed where masked (a conservative block map may admit a
+        # tile with no visible key — the running max must not poison it).
+        s = jnp.where(allowed, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.where(allowed, jnp.exp(s - m_cur[:, None]), 0.0)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        m_scr[...] = m_cur
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
 
     @pl.when(ki == num_kv - 1)
     def _done():
@@ -76,15 +110,23 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
     "causal", "softcap", "window", "block_q", "block_k", "interpret"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, softcap: float = 0.0,
-                    window: int = 0, segment_ids=None,
+                    window: int = 0,
+                    segment_ids: Optional[jax.Array] = None,
+                    block_map: Optional[jax.Array] = None,
                     block_q: int = 128, block_k: int = 128,
                     interpret: bool = True) -> jax.Array:
     """q: [B,S,H,hd]; k,v: [B,Sk,K,hd] (GQA) → [B,S,H,hd].
 
+    ``segment_ids``: optional [B, S] int32 shared by queries and keys
+    (self-attention packing); tokens attend within their segment only,
+    ids < 0 mark padding (never attends, never attended). ``block_map``:
+    optional precomputed [B, ceil(S/bq), ceil(Sk/bk)] int32 activity map;
+    derived from the segment ids / causal / window envelope when absent.
+    Both are traced operands — pack-layout switches never recompile.
+
     ``interpret=True`` runs the kernel body on CPU (this container);
     pass False on real TPU hardware.
     """
-    assert segment_ids is None, "packing masks: use the XLA path"
     B, S, H, hd = q.shape
     Sk, K = k.shape[1], k.shape[2]
     G = H // K
@@ -92,26 +134,61 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     bk = min(block_k, Sk)
     nq = -(-S // bq)
     nk = -(-Sk // bk)
-    assert S % bq == 0 and Sk % bk == 0, "pad sequences to block multiples"
+    Sp, Skp = nq * bq, nk * bk
 
-    qt = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
-    kt = k.transpose(0, 2, 1, 3).reshape(B * K, Sk, hd)
-    vt = v.transpose(0, 2, 1, 3).reshape(B * K, Sk, hd)
+    if segment_ids is not None:
+        assert segment_ids.shape == (B, S), (segment_ids.shape, (B, S))
+        assert S == Sk, "segment packing is self-attention only"
+    segmented = segment_ids is not None or Sp != S or Skp != Sk
+    q_seg = k_seg = None
+    if segmented:
+        q_seg, _ = mask_mod.pad_to_block_multiple(segment_ids, B, S, bq)
+        k_seg, _ = mask_mod.pad_to_block_multiple(segment_ids, B, Sk, bk)
+    if block_map is None:
+        if segmented:
+            block_map = mask_mod.attention_block_map(
+                q_seg, k_seg, block_q=bq, block_k=bk, causal=causal,
+                window=window)
+        else:
+            env = mask_mod.block_position_envelope(
+                nq, nk, bq, bk, causal=causal, window=window)
+            block_map = jnp.asarray(
+                np.broadcast_to(env.astype(np.int32), (B, nq, nk)))
+    assert block_map.shape == (B, nq, nk), (block_map.shape, (B, nq, nk))
+
+    qt = pad_to(q, Sp, axis=1).transpose(0, 2, 1, 3).reshape(B * H, Sp, hd)
+    kt = pad_to(k, Skp, axis=1).transpose(0, 2, 1, 3).reshape(B * K, Skp, hd)
+    vt = pad_to(v, Skp, axis=1).transpose(0, 2, 1, 3).reshape(B * K, Skp, hd)
 
     kernel = functools.partial(
         _flash_kernel, causal=causal, softcap=softcap, window=window,
-        block_q=bq, block_k=bk, sm_scale=1.0 / np.sqrt(hd), num_kv=nk)
+        block_q=bq, block_k=bk, sm_scale=1.0 / np.sqrt(hd), num_kv=nk,
+        segmented=segmented)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, 1), lambda b, i, j, H=H: (b // H, i, j),
+                     memory_space=pltpu.SMEM),
+    ]
+    inputs = [jnp.asarray(block_map, jnp.int32)]
+    if segmented:
+        in_specs += [
+            pl.BlockSpec((1, bq), lambda b, i, j, H=H: (b // H, i)),
+            pl.BlockSpec((1, bk), lambda b, i, j, H=H: (b // H, j)),
+        ]
+        inputs += [q_seg, k_seg]
+    in_specs += [
+        pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        pl.BlockSpec((1, bk, hd), lambda b, i, j, G=G: (b // G, j, 0)),
+        pl.BlockSpec((1, bk, hd), lambda b, i, j, G=G: (b // G, j, 0)),
+    ]
+    inputs += [qt, kt, vt]
 
     out = pl.pallas_call(
         kernel,
         grid=(B * H, nq, nk),
-        in_specs=[
-            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, bk, hd), lambda b, i, j, G=G: (b // G, j, 0)),
-            pl.BlockSpec((1, bk, hd), lambda b, i, j, G=G: (b // G, j, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((B * H, S, hd), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sp, hd), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((bq,), jnp.float32),
             pltpu.VMEM((bq,), jnp.float32),
@@ -120,5 +197,5 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(qt, kt, vt)
-    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    )(*inputs)
+    return out.reshape(B, H, Sp, hd).transpose(0, 2, 1, 3)[:, :S]

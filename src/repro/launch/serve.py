@@ -79,7 +79,9 @@ def build_plan_menu(cfg, args, parallel=None) -> Dict[float, "object"]:
     plans: Dict[float, SamplingPlan] = {}
     for b in levels:
         plan = SamplingPlan(T=args.T, budget=float(b), solver=args.solver,
-                            guidance_scale=args.cfg_scale, parallel=parallel)
+                            guidance_scale=args.cfg_scale, parallel=parallel,
+                            attn_backend=getattr(args, "attn_backend",
+                                                 "auto") or "auto")
         plan.validate(cfg)
         plans[b] = plan
         fs = plan.resolve_schedule(cfg)
@@ -176,6 +178,10 @@ def _serve_dit_engine(cfg, args, pipe, plans) -> None:
           f"packing_eff={m['packing_efficiency']:.3f} "
           f"deadline_hit={m.get('deadline_hit_rate', 1.0):.2f} "
           f"degraded={int(m['degraded'])}")
+    if "attn_block_skip_rate" in m:
+        print(f"[attn] backend={engine.attn_backend} "
+              f"block_skip_rate={m['attn_block_skip_rate']:.3f} "
+              f"(cross-segment score tiles never issued)")
     print(f"[cache] runners={stats['runners']} compiled={stats['compiled']} "
           f"hits={stats['hits']} misses={stats['misses']}")
     if cache is not None:
@@ -333,6 +339,14 @@ def main():
     ap.add_argument("--cache-threshold", type=float, default=0.05,
                     help="proxy policy: analytic conditioning-drift "
                          "threshold triggering a refresh")
+    ap.add_argument("--attn-backend", default="auto",
+                    choices=["auto", "pallas", "xla-blocked", "dense"],
+                    help="attention backend (DESIGN.md §attention-backend): "
+                         "auto runs the segment-aware Pallas flash kernel "
+                         "on packed/long token streams, dense XLA otherwise. "
+                         "On CPU-only hosts the kernel executes in interpret "
+                         "mode (semantics-true, wall-clock-slow) — pass "
+                         "'dense' there when serving for throughput")
     ap.add_argument("--mesh", default=None,
                     help="DATAxSEQ device mesh for the DiT path, e.g. 1x8: "
                          "data-parallel replicas x sequence-parallel shards")

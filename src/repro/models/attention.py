@@ -12,10 +12,40 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import AttnConfig
+from repro.kernels.attention import mask as mask_mod
 from repro.models.common import (ParamSpec, apply_rope, norm_schema, rms_norm,
                                  softcap)
 
 Params = Dict[str, Any]
+
+# ---------------------------------------------------------------------------
+# Backend selection (DESIGN.md §attention-backend)
+
+ATTN_BACKENDS = ("auto", "pallas", "xla-blocked", "dense")
+
+
+def resolve_backend(backend: str, *, n_tokens: int, segmented: bool,
+                    window_traced: bool = False) -> str:
+    """Resolve an ``attn_backend`` name to a concrete implementation.
+
+    ``auto`` picks the segment-aware Pallas flash kernel whenever segment
+    ids are in play (packed serving, distributed padding) or the sequence
+    is long, the dense XLA path otherwise; a *traced* sliding window
+    (per-phase window schedules) stays on the XLA paths — the kernel's
+    window is a static compile-time parameter. ``xla`` is accepted as a
+    legacy alias for the pre-backend auto (never Pallas)."""
+    if backend in ("auto", "xla"):
+        long = n_tokens > BLOCKED_ATTN_THRESHOLD
+        if window_traced or backend == "xla":
+            return "xla-blocked" if long else "dense"
+        return "pallas" if (segmented or long) else "dense"
+    if backend not in ATTN_BACKENDS:
+        raise ValueError(f"unknown attn_backend {backend!r}; known: "
+                         f"{ATTN_BACKENDS}")
+    if backend == "pallas" and window_traced:
+        raise ValueError("the Pallas kernel takes a static window; traced "
+                         "window schedules need an XLA backend")
+    return backend
 
 
 def attention_schema(d_model: int, cfg: AttnConfig) -> Params:
@@ -60,17 +90,17 @@ def make_attention_bias(q_pos: jax.Array, k_pos: jax.Array, *, causal: bool,
 
     ``window`` may be a traced int32 scalar: 0 means full attention; w>0 means
     only keys with q_pos - k_pos < w are visible (plus causality if set).
+
+    The position and segment tiles come from ``kernels.attention.mask`` —
+    the SAME helpers the Pallas flash kernel applies per block, so the XLA
+    and kernel backends share one mask semantics: tokens attend within
+    their segment, and segment ids < 0 (packing padding) neither attend
+    nor are attended to.
     """
-    allowed = jnp.ones(q_pos.shape[:-1] + (q_pos.shape[-1], k_pos.shape[-1]), bool)
-    dq = q_pos[..., :, None]
-    dk = k_pos[..., None, :]
-    if causal:
-        allowed &= dq >= dk
-    window = jnp.asarray(window, jnp.int32)
-    in_window = (dq - dk < window) & (dq - dk > -window)
-    allowed &= jnp.where(window > 0, in_window, True)
+    allowed = mask_mod.position_allowed(q_pos, k_pos, causal=causal,
+                                        window=window)
     if q_segment is not None and k_segment is not None:
-        allowed &= q_segment[..., :, None] == k_segment[..., None, :]
+        allowed &= mask_mod.segment_allowed(q_segment, k_segment)
     if k_valid is not None:
         allowed &= k_valid[..., None, :]
     return jnp.where(allowed, 0.0, -1e30).astype(jnp.float32)
@@ -173,7 +203,7 @@ def blocked_gqa_attend(q: jax.Array, k: jax.Array, v: jax.Array, *,
             if k_seg_full is not None:
                 ks = jax.lax.dynamic_slice_in_dim(k_seg_full, start, k_span,
                                                   axis=1)
-                allowed &= seg_i[:, :, None] == ks[:, None, :]
+                allowed &= mask_mod.segment_allowed(seg_i, ks)
             s = s + jnp.where(allowed, 0.0, -1e30)[:, None, None]
             p = jax.nn.softmax(s, axis=-1)
             o = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v_s,
@@ -203,7 +233,7 @@ def blocked_gqa_attend(q: jax.Array, k: jax.Array, v: jax.Array, *,
         allowed &= jnp.where(window > 0, in_w, True)
         allowed &= dq >= 0                               # padded queries
         if k_seg_full is not None:
-            allowed &= seg_i[:, :, None] == k_seg_full[:, None, :]
+            allowed &= mask_mod.segment_allowed(seg_i, k_seg_full)
         s = s + jnp.where(allowed, 0.0, -1e30)[:, None, None]
         p = jax.nn.softmax(s, axis=-1)
         o = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v,
@@ -240,7 +270,7 @@ def attention(params: Params, x: jax.Array, cfg: AttnConfig, *,
               causal: bool = True,
               window: jax.Array | int = 0,
               segment_ids: Optional[jax.Array] = None,
-              backend: str = "xla", unroll: bool = False) -> jax.Array:
+              backend: str = "auto", unroll: bool = False) -> jax.Array:
     """Self-attention over x: [B,S,d] → [B,S,d]."""
     B, S, _ = x.shape
     if positions is None:
@@ -249,12 +279,15 @@ def attention(params: Params, x: jax.Array, cfg: AttnConfig, *,
     if cfg.use_rope:
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
-    if backend == "pallas":
+    resolved = resolve_backend(backend, n_tokens=S,
+                               segmented=segment_ids is not None,
+                               window_traced=hasattr(window, "dtype"))
+    if resolved == "pallas":
         from repro.kernels.attention import ops as attn_ops
         out = attn_ops.flash_attention(
-            q, k, v, causal=causal, window=int(window) if not hasattr(window, "dtype") else 0,
+            q, k, v, causal=causal, window=int(window),
             softcap=cfg.logit_softcap, segment_ids=segment_ids)
-    elif S > BLOCKED_ATTN_THRESHOLD:
+    elif resolved == "xla-blocked":
         out = blocked_gqa_attend(q, k, v, positions=positions, causal=causal,
                                  window=window, cfg=cfg, unroll=unroll,
                                  segment_ids=segment_ids)
@@ -369,12 +402,14 @@ def prefill_attention(params: Params, x: jax.Array, cfg: AttnConfig, *,
     if cfg.use_rope:
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
-    if backend == "pallas":
+    resolved = resolve_backend(backend, n_tokens=S, segmented=False,
+                               window_traced=hasattr(window, "dtype"))
+    if resolved == "pallas":
         from repro.kernels.attention import ops as attn_ops
         out = attn_ops.flash_attention(q, k, v, causal=True,
-                                       window=int(window) if not hasattr(window, "dtype") else 0,
+                                       window=int(window),
                                        softcap=cfg.logit_softcap)
-    elif S > BLOCKED_ATTN_THRESHOLD:
+    elif resolved == "xla-blocked":
         out = blocked_gqa_attend(q, k, v, positions=positions, causal=True,
                                  window=window, cfg=cfg, unroll=unroll)
     else:

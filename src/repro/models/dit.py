@@ -193,7 +193,8 @@ def _modulate(x: jax.Array, shift: jax.Array, scale: jax.Array) -> jax.Array:
 def _mha(p: Params, x: jax.Array, num_heads: int, *,
          lora: Optional[Params] = None, mode: int = 0,
          segment_ids: Optional[jax.Array] = None,
-         unroll: bool = False, parallel: Optional[Any] = None) -> jax.Array:
+         unroll: bool = False, parallel: Optional[Any] = None,
+         attn_backend: str = "auto") -> jax.Array:
     B, N, d = x.shape
     hd = d // num_heads
     la = (lora or {})
@@ -203,12 +204,23 @@ def _mha(p: Params, x: jax.Array, num_heads: int, *,
     if parallel is not None and parallel.sp > 1:
         # sequence-parallel engine: Ulysses all-to-all / ring attention over
         # the mesh's sequence axis (repro.distributed, DESIGN.md
-        # §distributed); padding tokens carry segment id -1
+        # §distributed); padding tokens carry segment id -1. The backend
+        # selects the post-all-to-all inner attend (Ulysses).
         o = parallel.attend(q, k, v, segment_ids=segment_ids)
         return _linear(o.reshape(B, N, d), p["wo"], lora=la.get("wo"),
                        mode=mode)
     from repro.models import attention as attn_mod
-    if N > attn_mod.BLOCKED_ATTN_THRESHOLD:
+    resolved = attn_mod.resolve_backend(attn_backend, n_tokens=N,
+                                        segmented=segment_ids is not None)
+    if resolved == "pallas":
+        # segment-aware flash kernel with block-sparse cross-segment
+        # skipping: packed rows never issue fully-masked score tiles
+        from repro.kernels.attention import ops as attn_ops
+        o = attn_ops.flash_attention(q, k, v, causal=False,
+                                     segment_ids=segment_ids)
+        return _linear(o.reshape(B, N, d), p["wo"], lora=la.get("wo"),
+                       mode=mode)
+    if resolved == "xla-blocked":
         # long (possibly packed) video sequences: flash-style blocked path
         # with q blocks sharded over the model axis; segment ids thread
         # through so packed CFG never materializes [B,H,N,N] scores
@@ -224,7 +236,8 @@ def _mha(p: Params, x: jax.Array, num_heads: int, *,
     scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
                         preferred_element_type=jnp.float32) / np.sqrt(hd)
     if segment_ids is not None:
-        mask = segment_ids[:, :, None] == segment_ids[:, None, :]
+        from repro.kernels.attention import mask as mask_mod
+        mask = mask_mod.segment_allowed(segment_ids, segment_ids)
         scores = scores + jnp.where(mask, 0.0, -1e30)[:, None]
     probs = jax.nn.softmax(scores, axis=-1)
     o = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v,
@@ -261,7 +274,8 @@ def dit_block_apply(p: Params, x: jax.Array, c: jax.Array, cfg: ModelConfig, *,
                     mode: int = 0, text: Optional[jax.Array] = None,
                     text_mask: Optional[jax.Array] = None,
                     segment_ids: Optional[jax.Array] = None,
-                    parallel: Optional[Any] = None) -> jax.Array:
+                    parallel: Optional[Any] = None,
+                    attn_backend: str = "auto") -> jax.Array:
     H = cfg.attn.num_heads
     ada = _linear(jax.nn.silu(c.astype(jnp.float32)).astype(x.dtype),
                   p["ada"]["w"], p["ada"]["b"])
@@ -270,7 +284,8 @@ def dit_block_apply(p: Params, x: jax.Array, c: jax.Array, cfg: ModelConfig, *,
     h = _modulate(_ln(x), sh1, sc1)
     x = x + g1[:, None] * _mha(p["attn"], h, H, lora=lora.get("attn"),
                                mode=mode, segment_ids=segment_ids,
-                               unroll=cfg.unroll, parallel=parallel)
+                               unroll=cfg.unroll, parallel=parallel,
+                               attn_backend=attn_backend)
     if "xattn" in p and text is not None:
         x = x + _cross_mha(p["xattn"], _ln(x), text, H, kv_mask=text_mask)
     h2 = _modulate(_ln(x), sh2, sc2)
@@ -370,7 +385,8 @@ def dit_forward(params: Params, x_t: jax.Array, t: jax.Array, cond: Any,
                 text_mask: Optional[jax.Array] = None,
                 latent_shape: Optional[Tuple[int, int, int, int]] = None,
                 parallel: Optional[Any] = None,
-                block_cache: Optional[BlockCache] = None) -> Any:
+                block_cache: Optional[BlockCache] = None,
+                attn_backend: str = "auto") -> Any:
     """Denoiser NFE.  x_t: [B,F,H,W,C]; t: [B]; cond: labels [B] int32 (class)
     or text embeddings [B,T,dc] (text). Returns [B,F,H,W,c_out].
 
@@ -411,7 +427,7 @@ def dit_forward(params: Params, x_t: jax.Array, t: jax.Array, cond: Any,
     def body(h, bp):
         h = dit_block_apply(bp, h, c, cfg, mode=mode, text=text,
                             text_mask=text_mask, segment_ids=seg_ids,
-                            parallel=parallel)
+                            parallel=parallel, attn_backend=attn_backend)
         return h, None
 
     if cfg.remat == "block":

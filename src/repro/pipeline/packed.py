@@ -76,10 +76,18 @@ class PackLayout:
             out.extend([m] * (mult * n))
         return tuple(out)
 
-    def cost(self, cfg: ModelConfig) -> packing.MixedPackCost:
+    def cost(self, cfg: ModelConfig,
+             attn_backend: str = "dense") -> packing.MixedPackCost:
         """Rows / FLOPs / token ledger of one step at this layout."""
         return packing.mixed_pack_cost(cfg, self.segment_modes(),
-                                       self.resolve_capacity(cfg))
+                                       self.resolve_capacity(cfg),
+                                       attn_backend=attn_backend)
+
+    def attention_block_stats(self, cfg: ModelConfig) -> Tuple[int, int]:
+        """(active, total) attention block-tile visits of one step at
+        this layout under the segment-aware Pallas kernel."""
+        return packing.pack_attention_block_stats(
+            cfg, self.segment_modes(), self.resolve_capacity(cfg))
 
     @staticmethod
     def for_counts(counts: Dict[int, int], guided: bool = True,
@@ -94,7 +102,8 @@ def make_packed_step_fn(cfg: ModelConfig, sched: sch.DiffusionSchedule,
                         guidance_scale: float = 1.5,
                         clip_x0: float = 0.0,
                         k_steps: int = 1,
-                        cache_split: Optional[int] = None) -> Callable:
+                        cache_split: Optional[int] = None,
+                        attn_backend: str = "auto") -> Callable:
     """Build ``step(params, xs, metas, keys)`` for a layout.
 
     Per group ``g`` (one per mode): ``xs[g]`` [n_g, F, H, W, C] latents;
@@ -174,7 +183,8 @@ def make_packed_step_fn(cfg: ModelConfig, sched: sch.DiffusionSchedule,
             outs, new_seg_deltas = packing.packed_mixed_forward(
                 params, cfg, seg_groups, seg_xs, seg_ts, seg_conds,
                 row_capacity=cap, cache_deltas=seg_deltas,
-                cache_refresh=seg_refresh, cache_split=cache_split)
+                cache_refresh=seg_refresh, cache_split=cache_split,
+                attn_backend=attn_backend)
             new_deltas = []
             for g, (mode, n) in enumerate(groups):
                 mult = deltas[g].shape[1]
@@ -183,7 +193,8 @@ def make_packed_step_fn(cfg: ModelConfig, sched: sch.DiffusionSchedule,
         else:
             outs = packing.packed_mixed_forward(params, cfg, seg_groups,
                                                 seg_xs, seg_ts, seg_conds,
-                                                row_capacity=cap)
+                                                row_capacity=cap,
+                                                attn_backend=attn_backend)
         x_prevs = []
         for g, (mode, n) in enumerate(groups):
             t_g, tp_g = metas[g][0], metas[g][1]

@@ -183,7 +183,8 @@ class FlexiPipeline:
                       else None)
                 base_fn = make_eps_fn(p, cfg, cond, null_cond, g,
                                       text_mask, null_text_mask,
-                                      guidance_params=gp, parallel=engine)
+                                      guidance_params=gp, parallel=engine,
+                                      attn_backend=plan.attn_backend)
                 if transform is None:
                     fn = base_fn
                 else:
@@ -210,9 +211,9 @@ class FlexiPipeline:
             phases = []
             for mode, tsub in splits:
                 p = param_sets[set_idx.get(mode, 0)]
-                phases.append((flow.make_flow_v_fn(p, cfg, cond, mode=mode,
-                                                   parallel=engine),
-                               tsub))
+                phases.append((flow.make_flow_v_fn(
+                    p, cfg, cond, mode=mode, parallel=engine,
+                    attn_backend=plan.attn_backend), tsub))
             return flow.sample_flow_phased(phases, x_T, solver=solver)
 
         return jax.jit(run)
@@ -242,7 +243,8 @@ class FlexiPipeline:
                 g = self._phase_guidance(plan, mode)
                 fn = cache_apply.make_cached_eps_fn(
                     p, cfg, cond, null_cond, g, text_mask,
-                    null_text_mask, split)
+                    null_text_mask, split,
+                    attn_backend=plan.attn_backend)
                 guided = g.scale != 0.0 and cond is not None
                 delta0 = jnp.zeros(
                     cache_apply.delta_shape(cfg, mode, B, guided), dtype)
@@ -256,7 +258,8 @@ class FlexiPipeline:
     def packed_step(self, layout: PackLayout, *, solver: str = "ddim",
                     guidance_scale: float = 1.5, clip_x0: float = 0.0,
                     k_steps: int = 1,
-                    cache_split: Optional[int] = None) -> Callable:
+                    cache_split: Optional[int] = None,
+                    attn_backend: str = "auto") -> Callable:
         """Step-granular entry point (DESIGN.md §serving): the compiled
         executable advancing ONE packed engine step (``k_steps``
         micro-steps under lax.scan) at ``layout``. Latents, timesteps,
@@ -268,29 +271,32 @@ class FlexiPipeline:
         refresh flags are traced too — refresh policies never join the
         key)."""
         key = ("packed", layout, solver, guidance_scale, clip_x0, k_steps,
-               cache_split)
+               cache_split, attn_backend)
         return self._lookup(
             self._runners, key,
             lambda: jax.jit(make_packed_step_fn(
                 self.cfg, self.sched, layout, solver=solver,
                 guidance_scale=guidance_scale, clip_x0=clip_x0,
-                k_steps=k_steps, cache_split=cache_split)))
+                k_steps=k_steps, cache_split=cache_split,
+                attn_backend=attn_backend)))
 
     def packed_step_is_warm(self, layout: PackLayout, *, solver: str = "ddim",
                             guidance_scale: float = 1.5,
                             clip_x0: float = 0.0,
                             k_steps: int = 1,
-                            cache_split: Optional[int] = None) -> bool:
+                            cache_split: Optional[int] = None,
+                            attn_backend: str = "auto") -> bool:
         """Whether :meth:`packed_step` would be a cache hit — the serving
         planner prefers warm executables so steady-state traffic never
         stalls on a compile."""
         return ("packed", layout, solver, guidance_scale, clip_x0,
-                k_steps, cache_split) in self._runners
+                k_steps, cache_split, attn_backend) in self._runners
 
     def warm_packed_layouts(self, *, solver: str = "ddim",
                             guidance_scale: float = 1.5,
                             clip_x0: float = 0.0,
-                            cache_split: Optional[int] = None
+                            cache_split: Optional[int] = None,
+                            attn_backend: str = "auto"
                             ) -> Dict[int, List[PackLayout]]:
         """Compiled packed-step layouts grouped by micro-step depth k, for
         the given step family. A frozen serving engine
@@ -299,17 +305,19 @@ class FlexiPipeline:
         for key in self._runners:
             if key[0] == "packed" and key[2:5] == (solver, guidance_scale,
                                                    clip_x0) \
-                    and key[6] == cache_split:
+                    and key[6:8] == (cache_split, attn_backend):
                 out.setdefault(key[5], []).append(key[1])
         return out
 
-    def _nfe_fn(self, mode: int, scale: float) -> Callable:
+    def _nfe_fn(self, mode: int, scale: float,
+                attn_backend: str = "auto") -> Callable:
         cfg = self.cfg
         g = GuidanceConfig(scale=scale, mode_cond=mode, mode_uncond=mode)
 
         def nfe(params, x, t, cond, null_cond, text_mask, null_text_mask):
             return make_eps_fn(params, cfg, cond, null_cond, g,
-                               text_mask, null_text_mask)(x, t)
+                               text_mask, null_text_mask,
+                               attn_backend=attn_backend)(x, t)
 
         return jax.jit(nfe)
 
@@ -350,7 +358,8 @@ class FlexiPipeline:
         schedule = plan.resolve_schedule(self.cfg)
         param_sets = tuple(self._params_for_mode(m, variant)
                            for m in self._param_set_modes(plan, schedule))
-        engine = (SeqParallel.create(self.mesh, plan.parallel, self.cfg)
+        engine = (SeqParallel.create(self.mesh, plan.parallel, self.cfg,
+                                     attn_backend=plan.attn_backend)
                   if plan.parallel is not None else None)
         if self.mesh is not None:
             # committed single-device params can't mix with mesh-sharded
@@ -375,7 +384,8 @@ class FlexiPipeline:
         sig = (plan.solver, plan.clip_x0, plan.guidance_scale,
                plan.guidance_kind, plan.weak_mode, variant,
                schedule.phases, tuple(int(t) for t in ts), eps_transform,
-               plan.parallel, mesh_fingerprint(self.mesh))
+               plan.parallel, mesh_fingerprint(self.mesh),
+               plan.attn_backend)
         if plan.solver in FLOW_SOLVERS:
             runner = self._lookup(
                 self._runners, ("flow",) + sig,
@@ -428,8 +438,10 @@ class FlexiPipeline:
         fns: List[Callable] = []
         for mode in range(n_modes):
             jf = self._lookup(
-                self._nfes, ("nfe", mode, plan.guidance_scale, variant),
-                lambda m=mode: self._nfe_fn(m, plan.guidance_scale))
+                self._nfes, ("nfe", mode, plan.guidance_scale, variant,
+                             plan.attn_backend),
+                lambda m=mode: self._nfe_fn(m, plan.guidance_scale,
+                                            plan.attn_backend))
             p = self._params_for_mode(mode, variant)
             fns.append(lambda x, t, _f=jf, _p=p:
                        _f(_p, x, t, y, null, text_mask, null_text_mask))

@@ -71,6 +71,12 @@ class SamplingPlan:
     # SPLIT joins the runner key (structure); its policy/threshold only
     # shape the refresh mask (data) — policy switches never recompile.
     cache: Optional[CacheSpec] = None
+    # attention backend (DESIGN.md §attention-backend): 'auto' resolves
+    # to the segment-aware Pallas flash kernel on packed/long token
+    # streams and the dense XLA path otherwise; joins the pipeline's
+    # runner-cache key, so switching backends compiles fresh runners
+    # while budget switches under a fixed backend stay compile-free.
+    attn_backend: str = "auto"
 
     def __post_init__(self):
         if isinstance(self.budget, int):        # budget=1 → fraction 1.0
@@ -82,6 +88,10 @@ class SamplingPlan:
                              f"known: {STATIC_SOLVERS + FLOW_SOLVERS}")
         if self.guidance_kind not in ("uncond", "weak_cond"):
             raise ValueError(f"unknown guidance_kind {self.guidance_kind!r}")
+        from repro.models.attention import ATTN_BACKENDS
+        if self.attn_backend not in ATTN_BACKENDS:
+            raise ValueError(f"unknown attn_backend {self.attn_backend!r}; "
+                             f"known: {ATTN_BACKENDS}")
         if self.lora not in ("merged", "unmerged"):
             raise ValueError(f"lora must be 'merged'|'unmerged', got {self.lora!r}")
         if self.weak_mode < 1:
@@ -208,29 +218,39 @@ class SamplingPlan:
     # ------------------------------------------------------------------
     # Analytic FLOPs
 
-    def flops(self, cfg: ModelConfig, batch: int = 1) -> float:
+    def flops(self, cfg: ModelConfig, batch: int = 1,
+              attn_backend: str = "dense") -> float:
         """Denoising FLOPs for a ``batch``-sample run.
 
         Static plans delegate to ``core.scheduler.schedule_flops``. Adaptive
         plans return the worst case (never switching + all probes); the
         actual spend is reported per run in ``SampleResult.flops``.
+
+        ``attn_backend`` defaults to the paper's dense-N² reporting
+        convention; the serving controller passes the plan's real backend
+        so capacity math charges what the kernel issues (DESIGN.md
+        §attention-backend). Budget RESOLUTION always stays on the dense
+        convention — backends change pricing, never schedules.
         """
         if self.is_adaptive:
             mult = 2.0 if self.guidance_active else 1.0
-            f_w = mult * dit_nfe_flops(cfg, self.weak_mode)
+            f_w = mult * dit_nfe_flops(cfg, self.weak_mode,
+                                       attn_backend=attn_backend)
             if self.lora == "unmerged" and cfg.dit.lora_rank > 0:
                 f_w += mult * lora_nfe_overhead(cfg, self.weak_mode)
-            f_p = mult * dit_nfe_flops(cfg, 0)
+            f_p = mult * dit_nfe_flops(cfg, 0, attn_backend=attn_backend)
             n_probes = len(range(0, self.T, self.budget.probe_every))
             return batch * (self.T * f_w + n_probes * f_p)
         schedule = self.resolve_schedule(cfg)
-        total = schedule_flops(cfg, schedule, **self._flop_kwargs(cfg, schedule))
+        total = schedule_flops(cfg, schedule, attn_backend=attn_backend,
+                               **self._flop_kwargs(cfg, schedule))
         if self.solver in ("flow_heun", "dpm2"):
             total *= 2.0                 # 2nd-order solvers: 2 NFEs per step
         return batch * total
 
     def cached_flops(self, cfg: ModelConfig, batch: int = 1,
-                     num_train_steps: int = 1000) -> float:
+                     num_train_steps: int = 1000,
+                     attn_backend: str = "dense") -> float:
         """Denoising FLOPs with the activation cache applied: skip steps
         pay shallow blocks only (``repro.cache.ledger``). Falls back to
         :meth:`flops` when the plan carries no cache.
@@ -241,7 +261,7 @@ class SamplingPlan:
         serving controller does) should pass it; the default is the
         paper's 1000-step convention."""
         if self.cache is None:
-            return self.flops(cfg, batch)
+            return self.flops(cfg, batch, attn_backend=attn_backend)
         from repro.cache.ledger import schedule_cached_flops
         from repro.diffusion.schedule import respaced_timesteps
         schedule = self.resolve_schedule(cfg)
@@ -250,7 +270,8 @@ class SamplingPlan:
             cfg, schedule, ts, self.cache,
             cfg_scale_active=self.guidance_active,
             lora_unmerged=(self.lora == "unmerged"
-                           and cfg.dit.lora_rank > 0))
+                           and cfg.dit.lora_rank > 0),
+            attn_backend=attn_backend)
         return batch * total
 
     def relative_compute(self, cfg: ModelConfig) -> float:

@@ -27,7 +27,8 @@ from repro.pipeline.plan import SamplingPlan
 def request_cost_flops(cfg: ModelConfig, plan: SamplingPlan,
                        sp: int = 1,
                        cache: Optional[CacheSpec] = None,
-                       num_train_steps: int = 1000) -> float:
+                       num_train_steps: int = 1000,
+                       attn_backend: Optional[str] = None) -> float:
     """Analytic FLOPs one request at ``plan`` costs the engine. With
     ``sp`` sequence-parallel shards the pad-to-divisible waste from the
     partition plan is real compute and is charged too. With ``cache``
@@ -36,12 +37,21 @@ def request_cost_flops(cfg: ModelConfig, plan: SamplingPlan,
     cache-adjusted cost — caching raises the budget level a given
     arrival rate sustains. ``num_train_steps`` must match the serving
     pipeline's diffusion-schedule length: banded/proxy refresh masks
-    depend on the ladder's actual ``t`` values."""
+    depend on the ladder's actual ``t`` values.
+
+    Attention is priced at what the plan's backend actually issues
+    (DESIGN.md §attention-backend): under 'pallas'/'auto' the segment-
+    aware kernel computes block-granular score tiles — a pack's cross-
+    segment blocks are skipped, never charged — while the XLA backends
+    pay the dense N² convention. Override with ``attn_backend``."""
+    backend = plan.attn_backend if attn_backend is None else attn_backend
     if cache is not None and plan.cache is None:
         import dataclasses
         plan = dataclasses.replace(plan, cache=cache)
-    fl = (plan.cached_flops(cfg, num_train_steps=num_train_steps)
-          if plan.cache is not None else plan.flops(cfg))
+    fl = (plan.cached_flops(cfg, num_train_steps=num_train_steps,
+                            attn_backend=backend)
+          if plan.cache is not None
+          else plan.flops(cfg, attn_backend=backend))
     if sp > 1:
         from repro.distributed.partition import plan_partition
         part = plan_partition(cfg, plan.resolve_schedule(cfg), sp,
@@ -56,7 +66,8 @@ class BudgetController:
     def __init__(self, cfg: ModelConfig, plans: Dict[float, SamplingPlan], *,
                  target_util: float = 0.85, alpha: float = 0.3, sp: int = 1,
                  cache: Optional[CacheSpec] = None,
-                 num_train_steps: int = 1000):
+                 num_train_steps: int = 1000,
+                 attn_backend: Optional[str] = None):
         if not plans:
             raise ValueError("controller needs a non-empty plan menu")
         if not 0.0 < target_util <= 1.0:
@@ -64,7 +75,8 @@ class BudgetController:
                              f"{target_util}")
         self.levels = tuple(sorted(plans))            # ascending budgets
         self.costs = {b: request_cost_flops(cfg, p, sp, cache=cache,
-                                            num_train_steps=num_train_steps)
+                                            num_train_steps=num_train_steps,
+                                            attn_backend=attn_backend)
                       for b, p in plans.items()}
         self.target_util = target_util
         self.alpha = alpha

@@ -72,6 +72,11 @@ class ServingMetrics:
         self.cache_bytes_resident = 0
         self.refresh_interval_hist: collections.Counter = \
             collections.Counter()
+        # segment-aware attention ledger (DESIGN.md §attention-backend):
+        # score-block tiles the Pallas kernel visited vs the dense grid —
+        # the skip rate is packing's cross-segment work never issued
+        self.attn_blocks_active = 0
+        self.attn_blocks_total = 0
 
     def record_step(self, now: float, real_tokens: int, packed_tokens: int,
                     n_requests: int) -> None:
@@ -91,6 +96,11 @@ class ServingMetrics:
         self.cache_refreshes += refreshes
         self.cache_skips += skips
 
+    def record_attention_blocks(self, active: int, total: int) -> None:
+        """One dispatch's attention block-tile ledger (active <= total)."""
+        self.attn_blocks_active += int(active)
+        self.attn_blocks_total += int(total)
+
     def set_cache_bytes(self, n_bytes: int) -> None:
         self.cache_bytes_resident = int(n_bytes)
 
@@ -107,6 +117,14 @@ class ServingMetrics:
         packed = sum(s.packed_tokens for s in self.steps)
         return sum(s.real_tokens for s in self.steps) / packed if packed \
             else 1.0
+
+    @property
+    def attn_block_skip_rate(self) -> float:
+        """Fraction of score-block tiles the segment-aware kernel skipped
+        (cross-segment / padding blocks); 0.0 before any dispatch."""
+        if not self.attn_blocks_total:
+            return 0.0
+        return 1.0 - self.attn_blocks_active / self.attn_blocks_total
 
     @property
     def cache_hit_rate(self) -> float:
@@ -157,6 +175,8 @@ class ServingMetrics:
         if self.cache_refreshes + self.cache_skips:
             out["cache_hit_rate"] = self.cache_hit_rate
             out["cache_bytes_resident"] = float(self.cache_bytes_resident)
+        if self.attn_blocks_total:
+            out["attn_block_skip_rate"] = self.attn_block_skip_rate
         if wall is not None and wall > 0:
             out["wall_s"] = wall
             out["tokens_per_s"] = self.total_tokens / wall

@@ -139,6 +139,11 @@ class ServingEngine:
         self.guidance_scale = ref.guidance_scale
         self.clip_x0 = ref.clip_x0
         self.guided = ref.guidance_active
+        # one engine = one compiled step family = one attention backend
+        # (DESIGN.md §attention-backend); 'auto' resolves to the segment-
+        # aware Pallas kernel inside packed steps, so FLOPs accounting
+        # below prices block-granular attention with cross-segment skips
+        self.attn_backend = ref.attn_backend
         self.levels: Dict[float, LevelPlan] = {}
         modes = {0}
         for b in sorted(plans):
@@ -196,9 +201,11 @@ class ServingEngine:
         if policy == "degrade" and controller is None:
             self.controller = BudgetController(
                 self.cfg, plans, cache=cache,
-                num_train_steps=pipe.sched.num_steps)
+                num_train_steps=pipe.sched.num_steps,
+                attn_backend=self.attn_backend)
         self.metrics = ServingMetrics()
         self._layout_costs: Dict[Any, Any] = {}
+        self._layout_blocks: Dict[Any, Any] = {}
         self._zero_blocks: Dict[int, jax.Array] = {}
         self._queue = RequestQueue()
         self._inflight: List[InFlight] = []
@@ -243,11 +250,14 @@ class ServingEngine:
                 raise ValueError("packed steps implement vanilla CFG; "
                                  "weak_cond guidance mixes modes inside "
                                  "one NFE pair")
-            if (plan.solver, plan.guidance_scale, plan.clip_x0) != \
-                    (ref.solver, ref.guidance_scale, ref.clip_x0):
+            if (plan.solver, plan.guidance_scale, plan.clip_x0,
+                    plan.attn_backend) != \
+                    (ref.solver, ref.guidance_scale, ref.clip_x0,
+                     ref.attn_backend):
                 raise ValueError("all menu plans must share solver, "
-                                 "guidance scale, and clip_x0 (one engine "
-                                 "= one compiled step family)")
+                                 "guidance scale, clip_x0, and "
+                                 "attn_backend (one engine = one "
+                                 "compiled step family)")
 
     # ------------------------------------------------------------------
     # Request lifecycle
@@ -321,7 +331,8 @@ class ServingEngine:
         return self.pipe.packed_step_is_warm(
             layout, solver=self.solver,
             guidance_scale=self.guidance_scale, clip_x0=self.clip_x0,
-            k_steps=k, cache_split=self.cache_split)
+            k_steps=k, cache_split=self.cache_split,
+            attn_backend=self.attn_backend)
 
     def _ensure_slot(self, f: InFlight, mode: int) -> bool:
         """Make sure ``f`` owns a live slot in ``mode``'s pool; returns
@@ -404,7 +415,8 @@ class ServingEngine:
         runner = self.pipe.packed_step(
             layout, solver=self.solver,
             guidance_scale=self.guidance_scale, clip_x0=self.clip_x0,
-            k_steps=k, cache_split=self.cache_split)
+            k_steps=k, cache_split=self.cache_split,
+            attn_backend=self.attn_backend)
         xs, metas, keys, deltas, refreshes = [], [], [], [], []
         for mode, cap in layout.groups:
             xs.append(jnp.zeros((cap,) + self.cfg.dit.latent_shape))
@@ -469,7 +481,8 @@ class ServingEngine:
                         solver=self.solver,
                         guidance_scale=self.guidance_scale,
                         clip_x0=self.clip_x0,
-                        cache_split=self.cache_split).items()}
+                        cache_split=self.cache_split,
+                        attn_backend=self.attn_backend).items()}
             kc = k_cap
             while kc >= 1:
                 eligible = [f for f in prio
@@ -576,20 +589,25 @@ class ServingEngine:
                                              rf_real):
                 n_refresh += int(rf.sum())
                 n_cached_steps += k * len(sel)
-                full = dit_nfe_flops(self.cfg, mode)
-                deep = cache_ledger.deep_block_flops(self.cfg, mode,
-                                                     self.cache_split)
+                full = dit_nfe_flops(self.cfg, mode,
+                                     attn_backend=self.attn_backend)
+                deep = cache_ledger.deep_block_flops(
+                    self.cfg, mode, self.cache_split,
+                    attn_backend=self.attn_backend)
                 step_flops += mult * len(sel) * (k * full
                                                  - deep_skips * deep)
         else:
             step_flops = k * sum(
-                mult * len(sel) * dit_nfe_flops(self.cfg, mode)
+                mult * len(sel)
+                * dit_nfe_flops(self.cfg, mode,
+                                attn_backend=self.attn_backend)
                 for (mode, _cap), sel in zip(layout.groups, picked))
 
         runner = self.pipe.packed_step(
             layout, solver=self.solver,
             guidance_scale=self.guidance_scale, clip_x0=self.clip_x0,
-            k_steps=k, cache_split=self.cache_split)
+            k_steps=k, cache_split=self.cache_split,
+            attn_backend=self.attn_backend)
         if self.cache is not None:
             outs, new_deltas = runner(self.pipe.params, tuple(xs),
                                       tuple(metas), tuple(keys),
@@ -635,6 +653,15 @@ class ServingEngine:
             cost = self._layout_costs[layout] = layout.cost(self.cfg)
         self.metrics.record_step(now, real_tokens, cost.packed_tokens * k,
                                  stepped)
+        if self.attn_backend in ("auto", "pallas"):
+            # cross-segment block skip ledger (DESIGN.md
+            # §attention-backend): what fraction of the pack's score
+            # tiles the segment-aware kernel never issued
+            blk = self._layout_blocks.get(layout)
+            if blk is None:
+                blk = self._layout_blocks[layout] = \
+                    layout.attention_block_stats(self.cfg)
+            self.metrics.record_attention_blocks(blk[0] * k, blk[1] * k)
         self._last_step_at = now
         return finished
 
