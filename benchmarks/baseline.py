@@ -25,24 +25,49 @@ class BaselineRegression(RuntimeError):
     """A BENCH metric violated its recorded baseline bound."""
 
 
+_MISSING = object()
+
+
+def _resolve(metrics: object, key: str) -> object:
+    """Dotted-path lookup into nested BENCH dicts and lists:
+    ``engine.recompiles_after_warmup``, ``results.3.parallel_efficiency``.
+    Flat keys containing dots still win if present verbatim."""
+    if isinstance(metrics, dict) and key in metrics:
+        return metrics[key]
+    node = metrics
+    for part in key.split("."):
+        if isinstance(node, dict) and part in node:
+            node = node[part]
+        elif isinstance(node, (list, tuple)) and part.lstrip("-").isdigit():
+            try:
+                node = node[int(part)]
+            except IndexError:
+                return _MISSING
+        else:
+            return _MISSING
+    return node
+
+
 def check_baseline(name: str, metrics: Dict[str, object],
                    path: Path = BASELINES_PATH) -> None:
     """Validate ``metrics`` against the recorded bounds for ``name``.
 
     Bound spec per metric key: ``min`` (value must be >=), ``max``
     (value must be <=); ``rtol`` loosens either bound by a relative
-    slack (default 0 — analytic numbers are deterministic). A bench
-    name with no recorded baselines passes vacuously.
+    slack (default 0 — analytic numbers are deterministic). Keys may be
+    dotted paths into nested dicts / list indices. A bench name with no
+    recorded baselines passes vacuously.
     """
     if not path.exists():
         return
     bounds = json.loads(path.read_text()).get(name, {})
     failures = []
     for key, spec in bounds.items():
-        if key not in metrics:
+        raw = _resolve(metrics, key)
+        if raw is _MISSING:
             failures.append(f"{key}: missing from BENCH output")
             continue
-        val = float(metrics[key])
+        val = float(raw)
         rtol = float(spec.get("rtol", 0.0))
         if "min" in spec and val < float(spec["min"]) * (1.0 - rtol):
             failures.append(f"{key}: {val:.6g} below baseline min "

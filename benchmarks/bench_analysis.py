@@ -1,0 +1,58 @@
+"""Static-analysis suite as a bench: runs the full trace-safety pass
+(Level-1 AST lint over ``src/repro`` + Level-2 jaxpr audit) and gates it
+through ``baselines.json`` like every other suite — zero non-baselined
+errors, every fingerprint invariance intact (DESIGN.md §analysis).
+
+The BENCH line records the finding counts and the per-unit jaxpr
+fingerprints, so CI diffs show WHICH step family's structure moved when
+a fingerprint changes.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+
+def bench_analysis() -> None:
+    from benchmarks import common as C
+    from benchmarks.baseline import check_baseline
+    from repro.analysis import engine
+
+    t0 = time.perf_counter()
+    lint_only = engine.run_analysis(
+        [engine.REPO_ROOT / "src" / "repro"], with_jaxpr=False)
+    dt_lint = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    report = engine.run_analysis([engine.REPO_ROOT / "src" / "repro"])
+    dt_full = time.perf_counter() - t0
+
+    new_err = len(report.new_errors)
+    new_warn = len(report.new) - new_err
+    drift = sum(1 for f in report.new + report.baselined
+                if f.rule == "jaxpr-fingerprint-drift")
+    C.csv_row("analysis_lint", dt_lint * 1e6,
+              f"new_errors={new_err};warnings={new_warn};"
+              f"baselined={len(report.baselined)}")
+    C.csv_row("analysis_full", dt_full * 1e6,
+              f"fingerprinted_units={len(report.fingerprints)};"
+              f"drift={drift}")
+    bench = {
+        "name": "analysis",
+        "lint_wall_s": dt_lint, "full_wall_s": dt_full,
+        "new_errors": new_err, "new_warnings": new_warn,
+        "baselined": len(report.baselined),
+        "fingerprint_drift": drift,
+        "fingerprints": report.fingerprints,
+    }
+    print("BENCH " + json.dumps(bench))
+    check_baseline("analysis", bench)
+
+
+if __name__ == "__main__":
+    bench_analysis()

@@ -54,6 +54,7 @@ def bench_cache() -> None:
     import numpy as np
 
     from benchmarks import common as C
+    from benchmarks.baseline import check_baseline
     from repro.cache import CacheSpec, cache_savings
     from repro.core.scheduler import FlexiSchedule
     from repro.diffusion import schedule as sch
@@ -179,7 +180,7 @@ def bench_cache() -> None:
               f"speedup={tps_on / tps_off:.2f};"
               f"hit_rate={cache_m['hit_rate']:.3f}")
 
-    print("BENCH " + json.dumps({
+    bench = {
         "name": "activation_cache", "arch": "dit-xl-2:reduced+4L128d",
         "T": T, "train_T": TRAIN_T,
         "split": CacheSpec().resolve_split(cfg.num_layers),
@@ -193,7 +194,9 @@ def bench_cache() -> None:
             "recompiles_after_warmup": eng_recompiles,
             "cache": cache_m,
         },
-    }))
+    }
+    print("BENCH " + json.dumps(bench))
+    check_baseline("activation_cache", bench)
 
 
 if __name__ == "__main__":

@@ -36,6 +36,11 @@ def bench_distributed() -> None:
     sys.stdout.write(r.stdout)
     if r.returncode != 0:
         raise RuntimeError(f"inner distributed bench failed:\n{r.stderr[-2000:]}")
+    # the inner subprocess prints the BENCH line; the gate runs out here
+    from benchmarks.baseline import check_baseline
+    for line in r.stdout.splitlines():
+        if line.startswith("BENCH "):
+            check_baseline("distributed_seqpar", json.loads(line[len("BENCH "):]))
 
 
 def _inner() -> None:

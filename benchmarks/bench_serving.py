@@ -59,6 +59,7 @@ def bench_serving() -> None:
     import numpy as np
 
     from benchmarks import common as C
+    from benchmarks.baseline import check_baseline
     from repro.core.scheduler import FlexiSchedule
     from repro.diffusion import schedule as sch
     from repro.models import dit as dit_mod
@@ -235,7 +236,7 @@ def bench_serving() -> None:
               f"p50={eng_lat['p50']:.3f}s;p99={eng_lat['p99']:.3f}s;"
               f"baseline_p50={base_p['p50']:.3f}s;"
               f"baseline_p99={base_p['p99']:.3f}s")
-    print("BENCH " + json.dumps({
+    bench = {
         "name": "serving_engine", "arch": "dit-xl-2:reduced+4L128d",
         "T": T, "requests": N_REQ, "levels": levels,
         "max_tokens_per_step": MAX_TOKENS, "slot_batch": SLOT_B,
@@ -260,7 +261,9 @@ def bench_serving() -> None:
                      "drain_tokens_per_s": useful_tokens / dt_base_drain},
         "speedup_tokens_per_s_drain": drain_speedup,
         "speedup_tokens_per_s_poisson": speedup,
-    }))
+    }
+    print("BENCH " + json.dumps(bench))
+    check_baseline("serving_engine", bench)
     assert drain_speedup >= 1.3, \
         f"engine only {drain_speedup:.2f}x the fixed-slot baseline at " \
         f"saturation (need >=1.3x)"

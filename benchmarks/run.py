@@ -23,12 +23,13 @@ SUITES = {
     "serving": ("serving_engine",),
     "cache": ("activation_cache",),
     "attention": ("attention_kernel",),
+    "analysis": ("static_analysis",),
 }
 
 
 def main() -> None:
-    from benchmarks import (bench_attention, bench_cache, bench_core,
-                            bench_distributed, bench_extensions,
+    from benchmarks import (bench_analysis, bench_attention, bench_cache,
+                            bench_core, bench_distributed, bench_extensions,
                             bench_modalities, bench_perf, bench_pipeline,
                             bench_serving)
     from benchmarks.baseline import BaselineRegression
@@ -52,6 +53,7 @@ def main() -> None:
         ("serving_engine", bench_serving.bench_serving),
         ("activation_cache", bench_cache.bench_cache),
         ("attention_kernel", bench_attention.bench_attention),
+        ("static_analysis", bench_analysis.bench_analysis),
         ("roofline", bench_roofline),
     ]
     argv = sys.argv[1:]

@@ -1,0 +1,33 @@
+"""Trace-safety static analysis (DESIGN.md §analysis).
+
+Two levels, one goal: *prove* the invariants the whole engine rests on —
+budget / cache-policy / pack-layout switches are data, not structure —
+instead of only observing them through runtime recompile counters.
+
+* **Level 1 — AST lint** (:mod:`repro.analysis.engine` + the rule
+  modules): repo-specific rules over the Python source. Trace-safety
+  (host syncs and Python control flow on traced values inside
+  jit/scan/shard_map regions), cache-key completeness (every structural
+  field of ``SamplingPlan`` / ``CacheSpec`` / ``ParallelSpec`` /
+  ``PackLayout`` must join the FlexiPipeline runner / packed-step cache
+  key), and mask-parity (only ``kernels/attention/mask.py`` may define
+  segment/window/causal admissibility).
+
+* **Level 2 — jaxpr audit** (:mod:`repro.analysis.jaxpr_audit`): traces
+  the real step functions with ``jax.make_jaxpr``, computes structural
+  fingerprints, and asserts they are bit-identical across budget
+  ladders, cache policies, and pack-layout contents — a static proof of
+  zero-recompile — while flagging host callbacks, silent dtype
+  promotions, and non-donated hot-path buffers.
+
+Findings can be suppressed inline (``# repro: ignore[rule]``) or
+grandfathered in ``src/repro/analysis/baseline.json`` with a
+justification. CLI::
+
+    python -m repro.analysis --strict src/repro
+"""
+from repro.analysis.engine import (Finding, lint_paths, load_baseline,
+                                   run_analysis, split_baselined)
+
+__all__ = ["Finding", "lint_paths", "load_baseline", "run_analysis",
+           "split_baselined"]

@@ -130,7 +130,7 @@ def cached_ddpm_phase(eps_fn_c: CachedEpsFn, sched: sch.DiffusionSchedule,
     return x
 
 
-def sample_phased_cached(phases: Sequence[Tuple[CachedEpsFn, np.ndarray,
+def sample_phased_cached(phases: Sequence[Tuple[CachedEpsFn, np.ndarray,  # repro: traced
                                                 jax.Array, jax.Array]],
                          sched: sch.DiffusionSchedule, x_T: jax.Array,
                          key: jax.Array, solver: str = "ddim",

@@ -74,7 +74,7 @@ def assign_rows(seg_tokens: Sequence[int], capacity: int) -> List[List[int]]:
 # Packed forwards
 
 
-def packed_mixed_forward(params: Any, cfg: ModelConfig,
+def packed_mixed_forward(params: Any, cfg: ModelConfig,  # repro: traced
                          groups: Tuple[Tuple[int, int], ...],
                          xs: Sequence[jax.Array], ts: Sequence[jax.Array],
                          conds: Sequence[jax.Array], *,

@@ -82,7 +82,7 @@ def dpm2_phase(eps_fn: EpsFn, sched: sch.DiffusionSchedule, x: jax.Array,
 PHASE_FNS = {"ddpm": ddpm_phase, "ddim": ddim_phase, "dpm2": dpm2_phase}
 
 
-def sample_phased(phases: Sequence[Tuple[EpsFn, np.ndarray]],
+def sample_phased(phases: Sequence[Tuple[EpsFn, np.ndarray]],  # repro: traced
                   sched: sch.DiffusionSchedule, x_T: jax.Array,
                   key: jax.Array, solver: str = "ddpm",
                   clip_x0: float = 0.0) -> jax.Array:

@@ -152,8 +152,10 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         else:
             env = mask_mod.block_position_envelope(
                 nq, nk, bq, bk, causal=causal, window=window)
+            # env is static host numpy (window/causal are compile-time
+            # here; resolve_backend rejects traced windows for Pallas)
             block_map = jnp.asarray(
-                np.broadcast_to(env.astype(np.int32), (B, nq, nk)))
+                np.broadcast_to(env.astype(np.int32), (B, nq, nk)))  # repro: ignore[trace-host-np]
     assert block_map.shape == (B, nq, nk), (block_map.shape, (B, nq, nk))
 
     qt = pad_to(q, Sp, axis=1).transpose(0, 2, 1, 3).reshape(B * H, Sp, hd)

@@ -170,7 +170,7 @@ def _serve_dit_engine(cfg, args, pipe, plans) -> None:
     for r in results[:4]:
         print(f"[served] req={r.request.id} budget={r.budget_served:.2f} "
               f"latency={r.record.latency:.2f}s "
-              f"x0_std={float(jnp.std(r.x0)):.3f}", flush=True)
+              f"x0_std={float(jnp.std(r.x0)):.3f}", flush=True)  # repro: ignore[hot-host-sync] — 4-sample debug print after drain
     print(f"served {done} requests in {int(m['steps'])} engine steps, "
           f"{dt:.1f}s ({done / max(dt, 1e-9):.2f} img/s), "
           f"{m.get('flops', 0.0) / 1e9:.2f} GFLOPs total")
@@ -244,7 +244,7 @@ def _serve_dit_fixed_slots(cfg, args, pipe, plans, s_sz, parallel, key
         total_flops += res.flops * n_real / B
         print(f"[batch {batches}] budget={b:.2f} served={n_real} "
               f"(pad={B - n_real}) rel_compute={res.relative_compute:.3f} "
-              f"x0_std={float(jnp.std(res.x0[:n_real])):.3f}", flush=True)
+              f"x0_std={float(jnp.std(res.x0[:n_real])):.3f}", flush=True)  # repro: ignore[hot-host-sync] — per-batch progress log
     dt = time.time() - t0
     stats = pipe.cache_stats()
     print(f"served {done} requests in {batches} batches, {dt:.1f}s "

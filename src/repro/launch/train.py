@@ -118,7 +118,7 @@ def main():
         hb.heartbeat(0)
         sd.record(0, (time.time() - t0) * 1e3)
         if step % 10 == 0 or step == args.steps - 1:
-            loss = float(metrics.get("loss", metrics.get("distill_loss", 0.0)))
+            loss = float(metrics.get("loss", metrics.get("distill_loss", 0.0)))  # repro: ignore[hot-host-sync] — logging every 10 steps, intentional sync point
             print(f"step {step:5d} loss {loss:.4f} "
                   f"({(time.time()-t0)*1e3:.0f} ms)", flush=True)
         if step and step % args.ckpt_every == 0:

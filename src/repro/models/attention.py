@@ -110,7 +110,7 @@ def make_attention_bias(q_pos: jax.Array, k_pos: jax.Array, *, causal: bool,
 # Core attention math (GQA, no repeated-KV materialization)
 
 
-def gqa_attend(q: jax.Array, k: jax.Array, v: jax.Array, bias: jax.Array,
+def gqa_attend(q: jax.Array, k: jax.Array, v: jax.Array, bias: jax.Array,  # repro: traced
                cfg: AttnConfig) -> jax.Array:
     """q: [B,Sq,H,hd]; k,v: [B,Sk,K,hd]; bias: [B,Sq,Sk] additive (f32).
 
@@ -134,7 +134,7 @@ def gqa_attend(q: jax.Array, k: jax.Array, v: jax.Array, bias: jax.Array,
     return out.reshape(B, Sq, H, hd).astype(q.dtype)
 
 
-def blocked_gqa_attend(q: jax.Array, k: jax.Array, v: jax.Array, *,
+def blocked_gqa_attend(q: jax.Array, k: jax.Array, v: jax.Array, *,  # repro: traced
                        positions: jax.Array, causal: bool,
                        window: jax.Array | int, cfg: AttnConfig,
                        q_block: int = 1024, unroll: bool = False,
@@ -178,9 +178,9 @@ def blocked_gqa_attend(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
     # Static per-layer window (unrolled cost path / eager) → sliced-K fast
     # path: each causal q block only visits keys in [start, start+qb+w).
-    static_window = isinstance(window, (int, _np.integer)) and int(window) > 0
-    if static_window and causal and int(window) < S:
-        w = int(window)
+    static_window = isinstance(window, (int, _np.integer)) and int(window) > 0  # repro: ignore[trace-host-cast] — isinstance-guarded
+    if static_window and causal and int(window) < S:  # repro: ignore[trace-host-cast] — only reached when window is a host int
+        w = int(window)  # repro: ignore[trace-host-cast] — guarded by static_window
         k_span = min(q_block + w, S)
 
         def step(_, inp):

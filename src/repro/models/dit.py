@@ -380,7 +380,7 @@ def split_blocks(blocks: Params, split: int) -> Tuple[Params, Params]:
             jax.tree.map(lambda a: a[split:], blocks))
 
 
-def dit_forward(params: Params, x_t: jax.Array, t: jax.Array, cond: Any,
+def dit_forward(params: Params, x_t: jax.Array, t: jax.Array, cond: Any,  # repro: traced
                 cfg: ModelConfig, *, mode: int = 0,
                 text_mask: Optional[jax.Array] = None,
                 latent_shape: Optional[Tuple[int, int, int, int]] = None,

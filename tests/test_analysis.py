@@ -1,0 +1,339 @@
+"""Trace-safety analysis layer: per-rule fixtures (one flagged, one
+passing), suppression + baseline round-trips, the pinned cache-key field
+sets, jaxpr fingerprint invariance across data-only switches, and the
+strict CLI (DESIGN.md §analysis)."""
+import dataclasses
+import json
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import engine
+from repro.analysis import rules_cachekey as rc
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+pytestmark = pytest.mark.tier1
+
+
+def _lint_src(tmp_path, name, src, **kw):
+    p = tmp_path / name
+    p.write_text(textwrap.dedent(src))
+    return engine.lint_paths([p], **kw)
+
+
+def _rules(findings):
+    return {f.rule for f in findings}
+
+
+# ---------------------------------------------------------------------------
+# Trace-safety rule: flagged / passing fixtures
+
+
+BAD_TRACED = """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    @jax.jit
+    def step(x, t):
+        if t > 0:
+            x = x + 1
+        n = int(jnp.sum(x))
+        k = len(x)
+        msg = f"value={x}"
+        y = np.abs(x)
+        return x * n + y
+"""
+
+GOOD_TRACED = """
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def step(x, t, flag=None):
+        if flag is None:
+            x = x * 2
+        if x.ndim == 3:
+            x = x[None]
+        n = x.shape[0]
+        return jnp.where(t > 0, x + 1.0, x) * n
+"""
+
+
+def test_trace_rules_flag_bad_fixture(tmp_path):
+    found = _rules(_lint_src(tmp_path, "bad.py", BAD_TRACED))
+    assert {"trace-python-branch", "trace-host-cast", "trace-len",
+            "trace-fstring", "trace-host-np"} <= found
+
+
+def test_trace_rules_pass_good_fixture(tmp_path):
+    assert _lint_src(tmp_path, "good.py", GOOD_TRACED) == []
+
+
+def test_traced_marker_extends_coverage(tmp_path):
+    src = """
+        import jax.numpy as jnp
+
+        def helper(x):  # repro: traced
+            return int(jnp.sum(x))
+    """
+    assert "trace-host-cast" in _rules(_lint_src(tmp_path, "m.py", src))
+    # without the marker the function is host code: int() on a device
+    # value is only flagged inside loops (hot-host-sync)
+    assert _lint_src(tmp_path, "n.py", src.replace("# repro: traced", "")) \
+        == []
+
+
+def test_hot_host_sync_rule(tmp_path):
+    bad = """
+        import jax.numpy as jnp
+
+        def drive(xs):
+            out = []
+            for x in xs:
+                out.append(float(jnp.mean(x)))
+            return out
+    """
+    good = """
+        import jax.numpy as jnp
+
+        def drive(xs):
+            total = jnp.mean(jnp.stack([jnp.mean(x) for x in xs]))
+            return float(total)
+    """
+    assert "hot-host-sync" in _rules(_lint_src(tmp_path, "bad.py", bad))
+    assert _lint_src(tmp_path, "good.py", good) == []
+
+
+# ---------------------------------------------------------------------------
+# Mask-parity rule
+
+
+def test_mask_parity_flags_reimplementation(tmp_path):
+    bad = """
+        def segment_allowed(q_seg, k_seg):
+            return q_seg == k_seg
+    """
+    rules = _rules(_lint_src(tmp_path, "bad.py", bad))
+    assert "mask-parity" in rules
+
+
+def test_mask_parity_flags_inline_comparison(tmp_path):
+    bad = """
+        import jax.numpy as jnp
+
+        def my_mask(q_seg, k_seg):
+            return jnp.where(q_seg[:, None] == k_seg[None, :], 0.0, -1e9)
+    """
+    assert "mask-parity" in _rules(_lint_src(tmp_path, "bad.py", bad))
+
+
+def test_mask_parity_passes_importer(tmp_path):
+    good = """
+        from repro.kernels.attention import mask
+
+        def my_mask(q_seg, k_seg):
+            return mask.segment_allowed(q_seg, k_seg)
+    """
+    assert _lint_src(tmp_path, "good.py", good) == []
+
+
+def test_backends_import_shared_mask():
+    """The real backends must keep importing the canonical mask module."""
+    findings = engine.lint_paths(
+        [engine.REPO_ROOT / "src" / "repro" / "models",
+         engine.REPO_ROOT / "src" / "repro" / "kernels",
+         engine.REPO_ROOT / "src" / "repro" / "distributed"])
+    assert not [f for f in findings if f.rule.startswith("mask-parity")], \
+        [f.render() for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# Suppressions + baseline round-trip
+
+
+def test_inline_suppression_roundtrip(tmp_path):
+    src = """
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def step(x):
+            return int(jnp.sum(x))  # repro: ignore[trace-host-cast]
+    """
+    assert _lint_src(tmp_path, "s.py", src) == []
+    kept = _lint_src(tmp_path, "s.py", src, collect_suppressed=True)
+    assert "trace-host-cast" in _rules(kept)
+
+
+def test_bare_suppression_covers_all_rules(tmp_path):
+    src = """
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def step(x):
+            return int(jnp.sum(x))  # repro: ignore
+    """
+    assert _lint_src(tmp_path, "s.py", src) == []
+
+
+def test_baseline_roundtrip(tmp_path):
+    f = engine.Finding("trace-host-cast", "error", "pkg/mod.py", 12,
+                      "msg", "fn")
+    entries = engine.baseline_entries([f], justification="known")
+    new, old = engine.split_baselined([f], entries)
+    assert new == [] and old == [f]
+    # the key is line-free: the same finding at a drifted line still
+    # matches its baseline entry
+    f2 = dataclasses.replace(f, line=99)
+    new2, old2 = engine.split_baselined([f2], entries)
+    assert new2 == [] and old2 == [f2]
+
+
+def test_baseline_requires_justification(tmp_path):
+    p = tmp_path / "baseline.json"
+    p.write_text(json.dumps({"findings": [
+        {"rule": "r", "path": "p.py", "symbol": "f"}]}))
+    with pytest.raises(ValueError, match="justification"):
+        engine.load_baseline(p)
+
+
+# ---------------------------------------------------------------------------
+# Cache-key completeness (satellite: the pinned field sets)
+
+
+def test_check_witnesses_core():
+    ok = rc.check_witnesses(["a", "b"], {"a": ("wa",)}, ("b",),
+                            "key = (wa, other)", "X")
+    assert ok == []
+    missing = rc.check_witnesses(["a"], {"a": ("zzz",)}, (), "key = (wa,)",
+                                 "X")
+    assert missing and missing[0][0] == "a"
+    unclass = rc.check_witnesses(["c"], {}, (), "", "X")
+    assert unclass == [("c", "unclassified")]
+
+
+def test_sampling_plan_field_set_pinned():
+    """Adding a SamplingPlan field must update the witness tables (and
+    the cache key) — this pin makes the omission a test failure."""
+    from repro.pipeline.plan import SamplingPlan
+    fields = {f.name for f in dataclasses.fields(SamplingPlan)}
+    assert fields == {"T", "budget", "solver", "guidance_scale",
+                      "guidance_kind", "weak_mode", "lora", "weak_last",
+                      "clip_x0", "parallel", "cache", "attn_backend"}
+    assert fields == set(rc.PLAN_WITNESSES) | set(rc.PLAN_DATA_ONLY)
+
+
+def test_spec_field_sets_pinned():
+    from repro.cache.policy import CacheSpec
+    from repro.distributed.partition import ParallelSpec
+    from repro.pipeline.packed import PackLayout
+    assert {f.name for f in dataclasses.fields(CacheSpec)} == \
+        {"policy", "interval", "bands", "threshold", "split"}
+    assert {f.name for f in dataclasses.fields(CacheSpec)} == \
+        set(rc.CACHESPEC_STRUCTURAL) | set(rc.CACHESPEC_DATA_ONLY)
+    assert {f.name for f in dataclasses.fields(ParallelSpec)} == \
+        {"axis", "attn"}
+    assert {f.name for f in dataclasses.fields(PackLayout)} == \
+        {"groups", "guided", "row_capacity"}
+
+
+def test_cachekey_rule_clean_on_repo():
+    """Every structural field's witness is present in the live runner /
+    packed keys (the rule would flag a key gap)."""
+    findings = engine.lint_paths(
+        [engine.REPO_ROOT / "src" / "repro" / "pipeline"])
+    cachekey = [f for f in findings if f.rule.startswith("cachekey")]
+    assert cachekey == [], [f.render() for f in cachekey]
+
+
+def test_cachekey_rule_flags_a_gap():
+    """Drop a witness from the extracted key text and the rule fires."""
+    problems = rc.check_witnesses(
+        ["attn_backend"], rc.PLAN_WITNESSES, rc.PLAN_DATA_ONLY,
+        "sig = (plan.solver, plan.clip_x0)", "SamplingPlan")
+    assert problems and problems[0][0] == "attn_backend"
+
+
+# ---------------------------------------------------------------------------
+# Level 2: jaxpr fingerprints
+
+
+def test_fingerprint_sees_baked_constants():
+    """Two closures identical in structure but with different baked
+    constant VALUES must fingerprint differently — baked data is a
+    per-trace recompile hazard."""
+    import jax
+    import jax.numpy as jnp
+    from repro.analysis.jaxpr_audit import fingerprint
+    c1 = jnp.arange(4.0)
+    c2 = jnp.arange(4.0) * 2
+    x = jnp.zeros((4,))
+    f1 = fingerprint(jax.make_jaxpr(lambda v: v + c1)(x))
+    f2 = fingerprint(jax.make_jaxpr(lambda v: v + c2)(x))
+    f1b = fingerprint(jax.make_jaxpr(lambda v: v + c1)(x))
+    assert f1 == f1b
+    assert f1 != f2
+
+
+def test_fingerprint_invariant_across_budget_ladder():
+    from repro.analysis import jaxpr_audit
+    rep = jaxpr_audit.audit_packed_step()
+    bad = [f for f in rep.findings
+           if f.rule in ("jaxpr-fingerprint-drift", "jaxpr-trace-failure")]
+    assert bad == [], [f.render() for f in bad]
+
+
+def test_fingerprint_invariant_across_cache_policy():
+    from repro.analysis import jaxpr_audit
+    for unit in (jaxpr_audit.audit_packed_cached_step,
+                 jaxpr_audit.audit_cached_runner):
+        rep = unit()
+        bad = [f for f in rep.findings
+               if f.rule in ("jaxpr-fingerprint-drift",
+                             "jaxpr-trace-failure")]
+        assert bad == [], [f.render() for f in bad]
+
+
+def test_fingerprint_invariant_across_pack_segments():
+    from repro.analysis import jaxpr_audit
+    rep = jaxpr_audit.audit_attention_segments()
+    bad = [f for f in rep.findings
+           if f.rule in ("jaxpr-fingerprint-drift", "jaxpr-trace-failure")]
+    assert bad == [], [f.render() for f in bad]
+
+
+# ---------------------------------------------------------------------------
+# The strict gate itself
+
+
+def test_strict_cli_clean_against_baseline():
+    """`python -m repro.analysis --strict src/repro` (Level 1) must be
+    clean against the committed baseline — the tier-1 form of the CI
+    gate (the full jaxpr pass is covered unit-wise above and by
+    `benchmarks.run --suite analysis`)."""
+    from repro.analysis.__main__ import main
+    rc_ = main(["--no-jaxpr", "--strict",
+                str(engine.REPO_ROOT / "src" / "repro")])
+    assert rc_ == 0
+
+
+def test_bench_baseline_dotted_paths(tmp_path):
+    from benchmarks.baseline import BaselineRegression, check_baseline
+    p = tmp_path / "baselines.json"
+    p.write_text(json.dumps({"b": {
+        "engine.recompiles": {"max": 0},
+        "results.1.eff": {"min": 0.9},
+    }}))
+    metrics = {"engine": {"recompiles": 0},
+               "results": [{"eff": 0.5}, {"eff": 0.95}]}
+    check_baseline("b", metrics, path=p)
+    metrics["engine"]["recompiles"] = 2
+    with pytest.raises(BaselineRegression, match="engine.recompiles"):
+        check_baseline("b", metrics, path=p)
+    with pytest.raises(BaselineRegression, match="missing"):
+        check_baseline("b", {"engine": {}}, path=p)
