@@ -1,6 +1,10 @@
 """Benchmark harness — one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows. Benches that emit a
+``BENCH {...}`` json line get that summary persisted: after a run the
+harness writes ``benchmarks/BENCH_<suite>.json`` (git sha, timestamp,
+one summary dict per bench) so CI diffs and dashboards read artifacts,
+not stdout scrollback.
 
   PYTHONPATH=src python -m benchmarks.run                  # all
   PYTHONPATH=src python -m benchmarks.run fig6 fig12       # substring filter
@@ -8,12 +12,17 @@ Prints ``name,us_per_call,derived`` CSV rows.
 """
 from __future__ import annotations
 
+import json
+import subprocess
 import sys
 import time
+from datetime import datetime, timezone
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+ARTIFACT_DIR = Path(__file__).resolve().parent
 
 # Named suites: exact bench names run together by `--suite <name>`.
 SUITES = {
@@ -24,14 +33,67 @@ SUITES = {
     "cache": ("activation_cache",),
     "attention": ("attention_kernel",),
     "analysis": ("static_analysis",),
+    "telemetry": ("telemetry",),
 }
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=Path(__file__).resolve().parents[1], capture_output=True,
+            text=True, timeout=10).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+class _BenchCapture:
+    """stdout tee that collects ``BENCH {json}`` summary lines."""
+
+    def __init__(self, wrapped):
+        self._wrapped = wrapped
+        self._buf = ""
+        self.summaries = {}
+
+    def write(self, s: str) -> int:
+        self._buf += s
+        while "\n" in self._buf:
+            line, self._buf = self._buf.split("\n", 1)
+            if line.startswith("BENCH "):
+                try:
+                    d = json.loads(line[len("BENCH "):])
+                    self.summaries[d.get("name", f"bench{len(self.summaries)}")] = d
+                except (json.JSONDecodeError, AttributeError):
+                    pass
+        return self._wrapped.write(s)
+
+    def flush(self) -> None:
+        self._wrapped.flush()
+
+    def __getattr__(self, name):
+        return getattr(self._wrapped, name)
+
+
+def write_artifact(suite: str, summaries: dict, sha: str,
+                   out_dir: Path = ARTIFACT_DIR) -> Path:
+    """Persist one suite run's BENCH summaries as
+    ``BENCH_<suite>.json`` (overwritten per run — the git sha inside is
+    the provenance, the file name is the stable handle)."""
+    out = out_dir / f"BENCH_{suite}.json"
+    out.write_text(json.dumps({
+        "suite": suite,
+        "git_sha": sha,
+        "timestamp": datetime.now(timezone.utc).isoformat(),
+        "benches": summaries,
+    }, indent=1, sort_keys=True) + "\n")
+    return out
 
 
 def main() -> None:
     from benchmarks import (bench_analysis, bench_attention, bench_cache,
                             bench_core, bench_distributed, bench_extensions,
                             bench_modalities, bench_perf, bench_pipeline,
-                            bench_serving)
+                            bench_serving, bench_telemetry)
     from benchmarks.baseline import BaselineRegression
     from benchmarks.roofline_table import bench_roofline
 
@@ -54,6 +116,7 @@ def main() -> None:
         ("activation_cache", bench_cache.bench_cache),
         ("attention_kernel", bench_attention.bench_attention),
         ("static_analysis", bench_analysis.bench_analysis),
+        ("telemetry", bench_telemetry.bench_telemetry),
         ("roofline", bench_roofline),
     ]
     argv = sys.argv[1:]
@@ -67,24 +130,33 @@ def main() -> None:
             raise SystemExit(f"unknown suite {suite!r}; known: {sorted(SUITES)}")
         del argv[i:i + 2]
     filters = [a for a in argv if not a.startswith("-")]
+    cap = _BenchCapture(sys.stdout)
+    sys.stdout = cap
     print("name,us_per_call,derived")
     regressions = []
-    for name, fn in benches:
-        if suite is not None and name not in SUITES[suite]:
-            continue
-        if filters and not any(f in name for f in filters):
-            continue
-        t0 = time.time()
-        try:
-            fn()
-            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
-        except BaselineRegression as e:
-            # a recorded analytic baseline was violated: keep running the
-            # remaining benches, but fail the harness loudly at the end
-            regressions.append((name, str(e)))
-            print(f"{name},0.0,REGRESSION:{e}", flush=True)
-        except Exception as e:  # keep the harness running
-            print(f"{name},0.0,ERROR:{type(e).__name__}:{e}", flush=True)
+    try:
+        for name, fn in benches:
+            if suite is not None and name not in SUITES[suite]:
+                continue
+            if filters and not any(f in name for f in filters):
+                continue
+            t0 = time.time()
+            try:
+                fn()
+                print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+            except BaselineRegression as e:
+                # a recorded analytic baseline was violated: keep running the
+                # remaining benches, but fail the harness loudly at the end
+                regressions.append((name, str(e)))
+                print(f"{name},0.0,REGRESSION:{e}", flush=True)
+            except Exception as e:  # keep the harness running
+                print(f"{name},0.0,ERROR:{type(e).__name__}:{e}", flush=True)
+    finally:
+        sys.stdout = cap._wrapped
+    if cap.summaries:
+        out = write_artifact(suite or "all", cap.summaries, _git_sha())
+        print(f"# wrote {out} ({len(cap.summaries)} bench summaries)",
+              flush=True)
     if regressions:
         for name, msg in regressions:
             print(f"# BASELINE REGRESSION in {name}: {msg}",

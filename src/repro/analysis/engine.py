@@ -72,6 +72,14 @@ RULE_IDS: Dict[str, str] = {
                              "(f32->f64 / bf16->f32) in a hot-path jaxpr",
     "jaxpr-nondonated-hotbuf": "large recurrent buffer not donated on a "
                                "hot-path jit entry point",
+    "jaxpr-tap-structure": "DCE-ing the telemetry tap outputs does not "
+                           "recover the untapped step jaxpr (taps must be "
+                           "data, not structure)",
+    "telemetry-host-callback": "telemetry code injects a host callback / "
+                               "debug print into a traced region",
+    "telemetry-tap-host-sync": "tap arrays forced to host on the dispatch "
+                               "path (np.asarray/.item/float outside the "
+                               "aggregate sink)",
 }
 
 
@@ -185,8 +193,10 @@ def iter_py_files(paths: Iterable[Path]) -> List[Path]:
 
 def _load_rules():
     # local import: rule modules import Finding from here
-    from repro.analysis import rules_cachekey, rules_mask, rules_trace
-    source_rules = [rules_trace.TraceSafetyRule()]
+    from repro.analysis import (rules_cachekey, rules_mask, rules_telemetry,
+                                rules_trace)
+    source_rules = [rules_trace.TraceSafetyRule(),
+                    rules_telemetry.TelemetryRule()]
     repo_rules = [rules_mask.MaskParityRule(),
                   rules_cachekey.CacheKeyRule()]
     return source_rules, repo_rules

@@ -21,7 +21,14 @@ Invariances asserted (``jaxpr-fingerprint-drift`` on violation):
   threshold) at the same split;
 * the dense attention backend traced at two different segment-id
   contents at fixed geometry (a pack-layout occupancy change);
-* the plain eps + DDIM step at two different timesteps.
+* the plain eps + DDIM step at two different timesteps;
+* the tapped packed step (``taps=True``, DESIGN.md §telemetry): dead-code
+  eliminating the tap outputs must recover the untapped jaxpr **exactly**
+  (``pe.dce_jaxpr_consts`` keeping only the primary outputs), proving taps
+  are pure extra data — they read the step's existing intermediates and
+  feed nothing back; and the tapped family must itself be
+  ladder/policy-invariant (turning telemetry on costs zero recompiles
+  across budget or policy switches).
 
 What the fingerprint does NOT prove: full phase-runner equality across
 *budgets* — a budget switch changes the phase split, so those jaxprs
@@ -386,6 +393,68 @@ def audit_cached_runner() -> AuditReport:
     return AuditReport(findings, {"cached_runner": fps.get("interval", "")})
 
 
+def _dce_keep_primary(closed: jax.core.ClosedJaxpr,
+                      n_keep: int) -> jax.core.ClosedJaxpr:
+    """Dead-code-eliminate all but the first ``n_keep`` outputs, dropping
+    the constants whose constvars die with them."""
+    from jax.interpreters import partial_eval as pe
+    used = [True] * n_keep + [False] * (len(closed.jaxpr.outvars) - n_keep)
+    dj, used_consts, _used_in = pe.dce_jaxpr_consts(closed.jaxpr, used)
+    consts = [c for c, u in zip(closed.consts, used_consts) if u]
+    return jax.core.ClosedJaxpr(dj, consts)
+
+
+def audit_tapped_step() -> AuditReport:
+    """Telemetry taps are data, not structure (DESIGN.md §telemetry).
+
+    For the plain and cached packed families: DCE-ing the tap outputs
+    out of the tapped jaxpr must reproduce the untapped jaxpr
+    fingerprint byte-for-byte (both sides normalized through the same
+    DCE pass), and the tapped jaxpr must be invariant under the same
+    data-only switches PR 6 proves for the untapped one."""
+    from repro.pipeline.packed import PackLayout, make_packed_step_fn
+    fparams, fcfg, sched = _tiny()
+    layout = PackLayout(groups=((0, 1), (1, 2)), guided=True)
+    findings: List[Finding] = []
+    fingerprints: Dict[str, str] = {}
+    for split, unit in ((None, "packed_step_tapped"),
+                        (1, "packed_cached_step_tapped")):
+        off = make_packed_step_fn(fcfg, sched, layout, k_steps=2,
+                                  cache_split=split)
+        on = make_packed_step_fn(fcfg, sched, layout, k_steps=2,
+                                 cache_split=split, taps=True)
+        fps: Dict[str, str] = {}
+        last = None
+        for tag, ladder in {"ladder-hi": (90, 80),
+                            "ladder-lo": (30, 20)}.items():
+            args = _packed_args(layout, 2, ladder, cache_split=split)
+            ct, errs = _trace(unit, on, *args)
+            findings.extend(errs)
+            if ct is None:
+                continue
+            fps[tag] = fingerprint(ct)
+            last = ct
+            co, errs = _trace(unit, off, *args)
+            findings.extend(errs)
+            if co is None:
+                continue
+            n_primary = len(co.jaxpr.outvars)
+            dce_t = fingerprint(_dce_keep_primary(ct, n_primary))
+            dce_o = fingerprint(_dce_keep_primary(co, n_primary))
+            if dce_t != dce_o:
+                findings.append(Finding(
+                    "jaxpr-tap-structure", "error", PIPELINE_PATH, 0,
+                    f"{unit} ({tag}): DCE-ing the tap outputs does not "
+                    f"recover the untapped jaxpr ({dce_t[:10]} != "
+                    f"{dce_o[:10]}) — taps changed the step's structure, "
+                    f"not just its outputs", unit))
+        findings.extend(_drift(unit, fps, "budget ladders (taps on)"))
+        if last is not None:
+            findings.extend(check_jaxpr(last, unit))
+            fingerprints[unit] = fps.get("ladder-hi", "")
+    return AuditReport(findings, fingerprints)
+
+
 def audit_attention_segments() -> AuditReport:
     """Dense attention backend at fixed geometry, two segment-id
     contents (a pack-layout occupancy change)."""
@@ -477,7 +546,8 @@ def audit_step_functions() -> AuditReport:
     findings: List[Finding] = []
     fingerprints: Dict[str, str] = {}
     units = [audit_plain_step, audit_packed_step, audit_packed_cached_step,
-             audit_cached_runner, audit_attention_segments, audit_donation]
+             audit_cached_runner, audit_tapped_step,
+             audit_attention_segments, audit_donation]
     for unit in units:
         try:
             rep = unit()

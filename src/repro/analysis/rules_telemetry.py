@@ -1,0 +1,108 @@
+"""Telemetry data-only lint rules (DESIGN.md §telemetry, §analysis).
+
+The telemetry layer's contract is **observability must be data, not
+structure**: taps ride along as extra outputs of already-compiled
+steps, and the host sees their values only at the aggregate/export
+sink. Two rules keep that contract honest as the code grows:
+
+* ``telemetry-host-callback`` — telemetry source must never inject a
+  host callback (``jax.debug.print``/``debug.callback``,
+  ``pure_callback``, ``io_callback``, ``host_callback``) anywhere. A
+  callback inside a tap helper would ride into every tapped step's
+  jaxpr and break the DCE-recovers-untapped proof
+  (``jaxpr_audit.audit_tapped_step``).
+* ``telemetry-tap-host-sync`` — in ``telemetry/taps.py``, host
+  materialization of tap values (``np.*`` calls, ``float()``/``int()``
+  casts, ``.item()``, ``jax.device_get``, ``block_until_ready``) is
+  legal ONLY inside the declared export-time sinks
+  (``TapAggregator.aggregate`` / ``counter_series``). Anywhere else —
+  the tap helpers (traced), ``TapSample`` construction,
+  ``TapAggregator.add`` — it would block the dispatch path on the
+  device.
+
+Both are scoped to ``src/repro/telemetry/``; the general trace-safety
+rule covers the rest of the repo.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.engine import Finding
+
+#: call names (last dotted component) that reach back into Python from
+#: compiled code
+CALLBACK_NAMES = {"pure_callback", "io_callback", "host_callback",
+                  "debug_callback", "call_tpu", "id_tap", "id_print"}
+
+#: host materialization of a (possibly device) value
+HOST_SYNC_CALLS = {"asarray", "array", "concatenate", "percentile",
+                   "device_get", "block_until_ready"}
+HOST_CASTS = {"float", "int", "bool"}
+
+#: the only functions allowed to pull tap values to the host
+TAP_SINKS = ("aggregate", "counter_series")
+
+
+def _dotted(func: ast.AST) -> List[str]:
+    parts: List[str] = []
+    while isinstance(func, ast.Attribute):
+        parts.append(func.attr)
+        func = func.value
+    if isinstance(func, ast.Name):
+        parts.append(func.id)
+    return parts[::-1]
+
+
+class TelemetryRule:
+    """Per-file source rule over ``src/repro/telemetry/``."""
+
+    def check(self, path: str, tree: ast.AST, text: str) -> List[Finding]:
+        if "repro/telemetry/" not in path.replace("\\", "/"):
+            return []
+        findings: List[Finding] = []
+        is_taps = path.endswith("taps.py")
+        stack: List[str] = []
+
+        class V(ast.NodeVisitor):
+            def visit_FunctionDef(self, node):
+                stack.append(node.name)
+                self.generic_visit(node)
+                stack.pop()
+
+            visit_AsyncFunctionDef = visit_FunctionDef
+
+            def visit_Call(self, node):
+                parts = _dotted(node.func)
+                name = parts[-1] if parts else ""
+                sym = stack[-1] if stack else "<module>"
+                if name in CALLBACK_NAMES or \
+                        (len(parts) >= 2 and parts[-2] == "debug"
+                         and name in ("print", "callback")):
+                    findings.append(Finding(
+                        "telemetry-host-callback", "error", path,
+                        node.lineno,
+                        f"telemetry code calls `{'.'.join(parts)}` — a "
+                        f"host callback would ride into every tapped "
+                        f"jaxpr (taps must be data, not structure)", sym))
+                elif is_taps and not any(f in TAP_SINKS for f in stack):
+                    is_np = (len(parts) >= 2
+                             and parts[0] in ("np", "numpy")
+                             and name in HOST_SYNC_CALLS)
+                    is_jax_sync = name in ("device_get",
+                                           "block_until_ready")
+                    is_item = (isinstance(node.func, ast.Attribute)
+                               and node.func.attr == "item")
+                    if is_np or is_jax_sync or is_item:
+                        findings.append(Finding(
+                            "telemetry-tap-host-sync", "error", path,
+                            node.lineno,
+                            f"`{'.'.join(parts) or 'item'}` materializes "
+                            f"tap values outside the "
+                            f"TapAggregator sinks {TAP_SINKS} — the "
+                            f"dispatch path must never block on a tap",
+                            sym))
+                self.generic_visit(node)
+
+        V().visit(tree)
+        return findings

@@ -26,6 +26,7 @@ from repro.configs.base import ModelConfig
 from repro.core.guidance import GuidanceConfig, split_model_out
 from repro.diffusion import schedule as sch
 from repro.models import dit as dit_mod
+from repro.telemetry import taps as taps_mod
 
 # eps_fn_c(x, t[B], delta, refresh) -> (eps, logvar | None, new_delta)
 CachedEpsFn = Callable[[jax.Array, jax.Array, jax.Array, jax.Array], Tuple]
@@ -93,7 +94,8 @@ def make_cached_eps_fn(params: Any, cfg: ModelConfig, cond: Any,
 def cached_ddim_phase(eps_fn_c: CachedEpsFn, sched: sch.DiffusionSchedule,
                       x: jax.Array, timesteps: np.ndarray,
                       refresh: jax.Array, key: jax.Array,
-                      delta0: jax.Array, t_final: int = -1) -> jax.Array:
+                      delta0: jax.Array, t_final: int = -1,
+                      taps: bool = False):
     ts = jnp.asarray(timesteps, jnp.int32)
     ts_prev = jnp.concatenate([ts[1:], jnp.asarray([t_final], jnp.int32)])
     keys = jax.random.split(key, len(timesteps))
@@ -103,18 +105,21 @@ def cached_ddim_phase(eps_fn_c: CachedEpsFn, sched: sch.DiffusionSchedule,
         t, tp, k, rf = inp
         tb = jnp.full((x.shape[0],), t, jnp.int32)
         tpb = jnp.full((x.shape[0],), tp, jnp.int32)
-        eps, _, delta = eps_fn_c(x, tb, delta, rf)
-        return (sch.ddim_step(sched, x, eps, tb, tpb, 0.0, k), delta), None
+        eps, _, nd = eps_fn_c(x, tb, delta, rf)
+        ys = ({"eps_norm": taps_mod.eps_norm_tap(eps),
+               "drift": taps_mod.drift_tap(nd, delta)} if taps else None)
+        return (sch.ddim_step(sched, x, eps, tb, tpb, 0.0, k), nd), ys
 
-    (x, _), _ = jax.lax.scan(body, (x, delta0),
-                             (ts, ts_prev, keys, refresh))
-    return x
+    (x, _), tap = jax.lax.scan(body, (x, delta0),
+                               (ts, ts_prev, keys, refresh))
+    return (x, tap) if taps else x
 
 
 def cached_ddpm_phase(eps_fn_c: CachedEpsFn, sched: sch.DiffusionSchedule,
                       x: jax.Array, timesteps: np.ndarray,
                       refresh: jax.Array, key: jax.Array,
-                      delta0: jax.Array, clip_x0: float = 0.0) -> jax.Array:
+                      delta0: jax.Array, clip_x0: float = 0.0,
+                      taps: bool = False):
     ts = jnp.asarray(timesteps, jnp.int32)
     keys = jax.random.split(key, len(timesteps))
 
@@ -122,34 +127,45 @@ def cached_ddpm_phase(eps_fn_c: CachedEpsFn, sched: sch.DiffusionSchedule,
         x, delta = carry
         t, k, rf = inp
         tb = jnp.full((x.shape[0],), t, jnp.int32)
-        eps, logvar, delta = eps_fn_c(x, tb, delta, rf)
+        eps, logvar, nd = eps_fn_c(x, tb, delta, rf)
+        ys = ({"eps_norm": taps_mod.eps_norm_tap(eps),
+               "drift": taps_mod.drift_tap(nd, delta)} if taps else None)
         return (sch.ddpm_step(sched, x, eps, tb, k, logvar, clip_x0),
-                delta), None
+                nd), ys
 
-    (x, _), _ = jax.lax.scan(body, (x, delta0), (ts, keys, refresh))
-    return x
+    (x, _), tap = jax.lax.scan(body, (x, delta0), (ts, keys, refresh))
+    return (x, tap) if taps else x
 
 
 def sample_phased_cached(phases: Sequence[Tuple[CachedEpsFn, np.ndarray,  # repro: traced
                                                 jax.Array, jax.Array]],
                          sched: sch.DiffusionSchedule, x_T: jax.Array,
                          key: jax.Array, solver: str = "ddim",
-                         clip_x0: float = 0.0) -> jax.Array:
+                         clip_x0: float = 0.0, taps: bool = False):
     """Chain cached phases — each ``(eps_fn_c, timesteps, refresh_mask,
     delta0)``. Key folding matches ``sampler.sample_phased`` so
-    refresh-every-step reproduces it bit-for-bit."""
+    refresh-every-step reproduces it bit-for-bit.
+
+    ``taps`` (DESIGN.md §telemetry) additionally returns one tap dict
+    per phase — ``{"eps_norm": [T_phase, B], "drift": [T_phase, effB]}``
+    stacked by the phase scan — as pure extra data outputs; the sampled
+    latents are bit-identical to ``taps=False``."""
     x = x_T
+    phase_taps = []
     active = [p for p in phases if len(p[1])]
     for i, (eps_fn_c, ts, refresh, delta0) in enumerate(active):
         k = jax.random.fold_in(key, i)
         t_final = int(active[i + 1][1][0]) if i + 1 < len(active) else -1
         if solver == "ddpm":
             x = cached_ddpm_phase(eps_fn_c, sched, x, ts, refresh, k,
-                                  delta0, clip_x0)
+                                  delta0, clip_x0, taps=taps)
         elif solver == "ddim":
             x = cached_ddim_phase(eps_fn_c, sched, x, ts, refresh, k,
-                                  delta0, t_final=t_final)
+                                  delta0, t_final=t_final, taps=taps)
         else:
             raise ValueError(f"cached sampling supports ddim|ddpm, "
                              f"got {solver!r}")
-    return x
+        if taps:
+            x, tap = x
+            phase_taps.append(tap)
+    return (x, tuple(phase_taps)) if taps else x

@@ -17,10 +17,20 @@ arrival rate sustains). With ``--mesh DATAxSEQ`` the legacy fixed-slot
 driver runs instead: the packed engine is single-host, while the mesh
 path shards each batch over devices (DESIGN.md §distributed).
 
+Telemetry (DESIGN.md §telemetry): ``--trace out.json`` records the
+request lifecycle (admit → plan → pack → dispatch → materialize →
+finish, plus compile events) and the on-device taps, dumping a
+Chrome-trace JSON loadable in https://ui.perfetto.dev;
+``--metrics-interval N`` emits one structured ``[metrics]`` line every
+N engine steps. Either flag routes dispatches through the tapped step
+family — bit-identical latents, zero extra compiles.
+
   python -m repro.launch.serve --arch deepseek-7b --smoke --requests 8
   python -m repro.launch.serve --arch dit-xl-2 --budget 0.6 --smoke
   python -m repro.launch.serve --arch dit-xl-2 --smoke --policy degrade
   python -m repro.launch.serve --arch dit-xl-2 --mesh 1x8 --budget 0.6 --smoke
+  python -m repro.launch.serve --arch dit-xl-2 --smoke --attn-backend dense \
+      --cache-policy interval --trace trace.json --metrics-interval 25
 """
 from __future__ import annotations
 
@@ -123,6 +133,8 @@ def serve_dit(cfg, args) -> None:
 def _serve_dit_engine(cfg, args, pipe, plans) -> None:
     """The continuous-batching path (DESIGN.md §serving)."""
     from repro.serving import CacheSpec, ServingEngine
+    from repro.telemetry import Telemetry
+    from repro.telemetry import export as tel_export
 
     policy = getattr(args, "policy", None) or "fifo"
     max_tokens = getattr(args, "max_tokens_per_step", None)
@@ -136,8 +148,18 @@ def _serve_dit_engine(cfg, args, pipe, plans) -> None:
               f"interval={cache.interval} threshold={cache.threshold} "
               f"split={cache.resolve_split(cfg.num_layers)}/"
               f"{cfg.num_layers} blocks")
+    trace_path = getattr(args, "trace", None)
+    metrics_interval = getattr(args, "metrics_interval", 0) or 0
+    telemetry = None
+    if trace_path or metrics_interval:
+        # tracing implies taps: the tapped step family is bit-identical
+        # and compile-parallel to the untapped one (DESIGN.md §telemetry)
+        telemetry = Telemetry(taps=True)
+        print(f"[telemetry] spans+taps on"
+              + (f", trace -> {trace_path}" if trace_path else ""))
     engine = ServingEngine(pipe, plans, policy=policy,
-                           max_tokens_per_step=max_tokens, cache=cache)
+                           max_tokens_per_step=max_tokens, cache=cache,
+                           telemetry=telemetry)
     # warm-set shaping (ROADMAP): compile the small-cohort bucket ladder
     # off the hot path so mid-trace arrivals never meet a coarse layout
     n_pre = engine.precapture_warm_set(max_per_mode=2)
@@ -155,13 +177,28 @@ def _serve_dit_engine(cfg, args, pipe, plans) -> None:
                           budget=levels[i % len(levels)], deadline=deadline)
 
     t0 = time.time()
+
+    def drain():
+        """engine.run(), stepwise, emitting the periodic metrics line."""
+        out = []
+        while not engine.idle:
+            out.extend(engine.step())
+            if metrics_interval and \
+                    engine.metrics.total_steps % metrics_interval == 0:
+                print(tel_export.metrics_line(
+                    engine.metrics.summary(wall=time.time() - t0),
+                    taps=(telemetry.taps.aggregate()
+                          if telemetry is not None else None),
+                    compile_stats=engine.cache_stats()))
+        return out
+
     # warmup wave compiles the bucket layouts this workload visits ...
     submit_wave(args.requests)
-    results = engine.run()
+    results = drain()
     warm = engine.cache_stats()
     # ... after which serving the same workload shape is compile-free
     submit_wave(args.requests)
-    results += engine.run()
+    results += drain()
     dt = time.time() - t0
 
     done = len(results)
@@ -174,7 +211,8 @@ def _serve_dit_engine(cfg, args, pipe, plans) -> None:
     print(f"served {done} requests in {int(m['steps'])} engine steps, "
           f"{dt:.1f}s ({done / max(dt, 1e-9):.2f} img/s), "
           f"{m.get('flops', 0.0) / 1e9:.2f} GFLOPs total")
-    print(f"[metrics] policy={policy} p50={m['p50']:.2f}s p99={m['p99']:.2f}s "
+    print(f"[metrics] policy={policy} p50={m.get('p50', 0.0):.2f}s "
+          f"p99={m.get('p99', 0.0):.2f}s "
           f"packing_eff={m['packing_efficiency']:.3f} "
           f"deadline_hit={m.get('deadline_hit_rate', 1.0):.2f} "
           f"degraded={int(m['degraded'])}")
@@ -190,6 +228,27 @@ def _serve_dit_engine(cfg, args, pipe, plans) -> None:
               f"refreshes={cs['refreshes']} skips={cs['skips']} "
               f"interval_hist={cs['refresh_interval_hist']} "
               f"store_bytes_total={engine.store.bytes_total}")
+    if telemetry is not None:
+        agg = telemetry.taps.aggregate()
+        if "drift" in agg:
+            print(f"[taps] drift_mean={agg['drift']['mean']:.4g} "
+                  f"drift_max={agg['drift']['max']:.4g} "
+                  f"eps_norm_mean={agg['eps_norm']['mean']:.4g} over "
+                  f"{agg['request_steps']} request-steps")
+        elif "eps_norm" in agg:
+            print(f"[taps] eps_norm_mean={agg['eps_norm']['mean']:.4g} "
+                  f"over {agg['request_steps']} request-steps")
+        print(tel_export.metrics_line(m, taps=agg, compile_stats=stats,
+                                      tag="metrics-final"))
+        if trace_path:
+            # drift/eps counter tracks: the timeline shows WHEN replay
+            # error spiked, aligned with the dispatch spans
+            for when, vals in telemetry.taps.counter_series():
+                telemetry.recorder.counter("taps", vals, ts=when)
+            telemetry.recorder.dump(trace_path)
+            print(f"[trace] {telemetry.recorder.events_recorded} events "
+                  f"({telemetry.recorder.events_dropped} dropped) -> "
+                  f"{trace_path} (open in ui.perfetto.dev)")
     # only the fifo drain replays deterministically (edf priorities move
     # with the wall clock, degradation shifts the level mix); frozen-mode
     # zero-compile serving for those is exercised in bench_serving
@@ -347,6 +406,14 @@ def main():
                          "On CPU-only hosts the kernel executes in interpret "
                          "mode (semantics-true, wall-clock-slow) — pass "
                          "'dense' there when serving for throughput")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record per-request span tracing + device taps "
+                         "and dump a Chrome-trace JSON loadable in "
+                         "ui.perfetto.dev (DESIGN.md §telemetry)")
+    ap.add_argument("--metrics-interval", type=int, default=0,
+                    metavar="N",
+                    help="emit one structured [metrics] line every N "
+                         "engine steps (0 = off); also enables taps")
     ap.add_argument("--mesh", default=None,
                     help="DATAxSEQ device mesh for the DiT path, e.g. 1x8: "
                          "data-parallel replicas x sequence-parallel shards")

@@ -26,6 +26,7 @@ from repro.core import packing
 from repro.core.guidance import split_model_out
 from repro.diffusion import schedule as sch
 from repro.models import dit as dit_mod
+from repro.telemetry import taps as taps_mod
 
 PACKED_SOLVERS = ("ddim", "ddpm")
 
@@ -103,7 +104,8 @@ def make_packed_step_fn(cfg: ModelConfig, sched: sch.DiffusionSchedule,
                         clip_x0: float = 0.0,
                         k_steps: int = 1,
                         cache_split: Optional[int] = None,
-                        attn_backend: str = "auto") -> Callable:
+                        attn_backend: str = "auto",
+                        taps: bool = False) -> Callable:
     """Build ``step(params, xs, metas, keys)`` for a layout.
 
     Per group ``g`` (one per mode): ``xs[g]`` [n_g, F, H, W, C] latents;
@@ -131,6 +133,18 @@ def make_packed_step_fn(cfg: ModelConfig, sched: sch.DiffusionSchedule,
     K-deep dispatch refreshes exactly where the request's policy says.
     Refresh flags are traced data: one compiled layout serves every
     policy.
+
+    ``taps`` appends on-device telemetry outputs (DESIGN.md §telemetry)
+    as pure extra DATA: the step becomes ``... → (xs'[, deltas'], tap)``
+    where ``tap = {"eps_norm": ([k, n_g], ...), "attn_blocks": [2]}``
+    plus ``"drift": ([k, n_g], ...)`` on the cached family —
+    per-request RMS of the post-guidance eps, the kernel ledger's
+    (active, total) block tiles, and the realized replay drift
+    ``‖h_fresh − h_replay‖`` computed from residuals the step already
+    materializes. Latents and deltas are bit-identical to ``taps=False``
+    (DCE of the tap outputs recovers the untapped jaxpr — asserted in
+    ``analysis/jaxpr_audit.py``), and taps join the runner cache key, so
+    flipping telemetry never retraces a serving executable.
     """
     if solver not in PACKED_SOLVERS:
         raise ValueError(f"packed steps support solvers {PACKED_SOLVERS}, "
@@ -155,6 +169,9 @@ def make_packed_step_fn(cfg: ModelConfig, sched: sch.DiffusionSchedule,
     seg_groups = tuple((m, (2 if guided else 1) * n) for m, n in groups)
 
     cached = cache_split is not None
+    # kernel-ledger block counts are layout-static: resolved on the host
+    # once at build time, emitted as a tap constant (data, not structure)
+    blk_stats = layout.attention_block_stats(cfg) if taps else None
 
     def one_step(params, xs, metas, keys, deltas=None, refreshes=None):
         seg_xs, seg_ts, seg_conds = [], [], []
@@ -195,7 +212,7 @@ def make_packed_step_fn(cfg: ModelConfig, sched: sch.DiffusionSchedule,
                                                 seg_xs, seg_ts, seg_conds,
                                                 row_capacity=cap,
                                                 attn_backend=attn_backend)
-        x_prevs = []
+        x_prevs, eps_taps = [], []
         for g, (mode, n) in enumerate(groups):
             t_g, tp_g = metas[g][0], metas[g][1]
             eps, logvar = split_model_out(outs[g], cfg)
@@ -206,6 +223,8 @@ def make_packed_step_fn(cfg: ModelConfig, sched: sch.DiffusionSchedule,
                                                            axis=0)[0]
             else:
                 eps_g, lv = eps, logvar
+            if taps:
+                eps_taps.append(taps_mod.eps_norm_tap(eps_g))
             if solver == "ddim":
                 x_prev = sch.ddim_step(sched, xs[g], eps_g, t_g,
                                        tp_g, 0.0, None)
@@ -223,17 +242,56 @@ def make_packed_step_fn(cfg: ModelConfig, sched: sch.DiffusionSchedule,
                             sched, x1, e1, t1, k1, lv1, clip_x0)
                     )(xs[g], eps_g, t_g, keys[g], lv)
             x_prevs.append(x_prev)
+        if taps:
+            tap = {"eps_norm": tuple(eps_taps)}
+            if cached:
+                # ‖h_fresh − h_replay‖: the cached forward writes
+                # new_delta = where(refresh, h_deep − h_shallow, old), so
+                # the realized replay error is one subtraction of arrays
+                # the step already materialized — free at refresh steps,
+                # exactly 0 at skip steps
+                tap["drift"] = tuple(
+                    taps_mod.drift_tap(nd, deltas[g])
+                    for g, nd in enumerate(new_deltas))
+                return tuple(x_prevs), tuple(new_deltas), tap
+            return tuple(x_prevs), tap
         if cached:
             return tuple(x_prevs), tuple(new_deltas)
         return tuple(x_prevs)
 
+    def _tap_out(tap):
+        """Attach the layout-static kernel-ledger constant; tap arrays
+        keep a leading k axis either way (scan stacks, k=1 expands)."""
+        tap["attn_blocks"] = jnp.asarray(blk_stats, jnp.int32)
+        return tap
+
     if k_steps == 1:
         if cached:
+            if taps:
+                def step(params, xs, metas, keys, deltas, refreshes):
+                    m1 = tuple(m[0] for m in metas)
+                    k1 = tuple(k[0] for k in keys)
+                    r1 = tuple(r[0] for r in refreshes)
+                    out, dout, tap = one_step(params, xs, m1, k1,
+                                              tuple(deltas), r1)
+                    tap = jax.tree_util.tree_map(lambda a: a[None], tap)
+                    return out, dout, _tap_out(tap)
+                return step
+
             def step(params, xs, metas, keys, deltas, refreshes):
                 m1 = tuple(m[0] for m in metas)
                 k1 = tuple(k[0] for k in keys)
                 r1 = tuple(r[0] for r in refreshes)
                 return one_step(params, xs, m1, k1, tuple(deltas), r1)
+            return step
+
+        if taps:
+            def step(params, xs, metas, keys):
+                m1 = tuple(m[0] for m in metas)
+                k1 = tuple(k[0] for k in keys)
+                out, tap = one_step(params, xs, m1, k1)
+                tap = jax.tree_util.tree_map(lambda a: a[None], tap)
+                return out, _tap_out(tap)
             return step
 
         def step(params, xs, metas, keys):
@@ -243,6 +301,19 @@ def make_packed_step_fn(cfg: ModelConfig, sched: sch.DiffusionSchedule,
         return step
 
     if cached:
+        if taps:
+            def step(params, xs, metas, keys, deltas, refreshes):
+                def body(carry, per_step):
+                    cxs, cdeltas = carry
+                    m, k, r = per_step
+                    nxs, nds, tap = one_step(params, cxs, m, k, cdeltas, r)
+                    return (nxs, nds), tap
+                (out, dout), tap = jax.lax.scan(
+                    body, (tuple(xs), tuple(deltas)),
+                    (tuple(metas), tuple(keys), tuple(refreshes)))
+                return out, dout, _tap_out(tap)
+            return step
+
         def step(params, xs, metas, keys, deltas, refreshes):
             def body(carry, per_step):
                 cxs, cdeltas = carry
@@ -253,6 +324,17 @@ def make_packed_step_fn(cfg: ModelConfig, sched: sch.DiffusionSchedule,
                 body, (tuple(xs), tuple(deltas)),
                 (tuple(metas), tuple(keys), tuple(refreshes)))
             return out, dout
+        return step
+
+    if taps:
+        def step(params, xs, metas, keys):
+            def body(carry, per_step):
+                m, k = per_step
+                nxs, tap = one_step(params, carry, m, k)
+                return nxs, tap
+            out, tap = jax.lax.scan(body, tuple(xs),
+                                    (tuple(metas), tuple(keys)))
+            return out, _tap_out(tap)
         return step
 
     def step(params, xs, metas, keys):

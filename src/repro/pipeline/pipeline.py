@@ -219,11 +219,13 @@ class FlexiPipeline:
         return jax.jit(run)
 
     def _cached_runner(self, plan: SamplingPlan, schedule: FlexiSchedule,
-                       ts: np.ndarray) -> Callable:
+                       ts: np.ndarray, taps: bool = False) -> Callable:
         """Static runner with the cross-step activation cache (DESIGN.md
         §cache): per-phase refresh masks arrive as TRACED inputs, so one
         compiled runner serves every refresh policy at this (schedule,
-        split) signature."""
+        split) signature. ``taps`` (§telemetry) appends per-step
+        eps-norm / replay-drift data outputs; latents are bit-identical
+        either way and the flag joins the runner key."""
         from repro.cache import apply as cache_apply
         from repro.models import dit as dit_mod
         from repro.models.common import dtype_of
@@ -251,7 +253,7 @@ class FlexiPipeline:
                 phases.append((fn, tsub, masks[i], delta0))
             return cache_apply.sample_phased_cached(
                 phases, self.sched, x_T, key, solver=plan.solver,
-                clip_x0=plan.clip_x0)
+                clip_x0=plan.clip_x0, taps=taps)
 
         return jax.jit(run)
 
@@ -259,7 +261,8 @@ class FlexiPipeline:
                     guidance_scale: float = 1.5, clip_x0: float = 0.0,
                     k_steps: int = 1,
                     cache_split: Optional[int] = None,
-                    attn_backend: str = "auto") -> Callable:
+                    attn_backend: str = "auto",
+                    taps: bool = False) -> Callable:
         """Step-granular entry point (DESIGN.md §serving): the compiled
         executable advancing ONE packed engine step (``k_steps``
         micro-steps under lax.scan) at ``layout``. Latents, timesteps,
@@ -269,34 +272,38 @@ class FlexiPipeline:
         so ``cache_stats()`` tracks bucket warmup. ``cache_split``
         selects the activation-cached step family (per-request deltas +
         refresh flags are traced too — refresh policies never join the
-        key)."""
+        key). ``taps`` selects the telemetry step family (DESIGN.md
+        §telemetry): same latents bit-for-bit plus on-device tap
+        outputs; it is a build-time flag, so it joins the key."""
         key = ("packed", layout, solver, guidance_scale, clip_x0, k_steps,
-               cache_split, attn_backend)
+               cache_split, attn_backend, taps)
         return self._lookup(
             self._runners, key,
             lambda: jax.jit(make_packed_step_fn(
                 self.cfg, self.sched, layout, solver=solver,
                 guidance_scale=guidance_scale, clip_x0=clip_x0,
                 k_steps=k_steps, cache_split=cache_split,
-                attn_backend=attn_backend)))
+                attn_backend=attn_backend, taps=taps)))
 
     def packed_step_is_warm(self, layout: PackLayout, *, solver: str = "ddim",
                             guidance_scale: float = 1.5,
                             clip_x0: float = 0.0,
                             k_steps: int = 1,
                             cache_split: Optional[int] = None,
-                            attn_backend: str = "auto") -> bool:
+                            attn_backend: str = "auto",
+                            taps: bool = False) -> bool:
         """Whether :meth:`packed_step` would be a cache hit — the serving
         planner prefers warm executables so steady-state traffic never
         stalls on a compile."""
         return ("packed", layout, solver, guidance_scale, clip_x0,
-                k_steps, cache_split, attn_backend) in self._runners
+                k_steps, cache_split, attn_backend, taps) in self._runners
 
     def warm_packed_layouts(self, *, solver: str = "ddim",
                             guidance_scale: float = 1.5,
                             clip_x0: float = 0.0,
                             cache_split: Optional[int] = None,
-                            attn_backend: str = "auto"
+                            attn_backend: str = "auto",
+                            taps: bool = False
                             ) -> Dict[int, List[PackLayout]]:
         """Compiled packed-step layouts grouped by micro-step depth k, for
         the given step family. A frozen serving engine
@@ -305,7 +312,7 @@ class FlexiPipeline:
         for key in self._runners:
             if key[0] == "packed" and key[2:5] == (solver, guidance_scale,
                                                    clip_x0) \
-                    and key[6:8] == (cache_split, attn_backend):
+                    and key[6:9] == (cache_split, attn_backend, taps):
                 out.setdefault(key[5], []).append(key[1])
         return out
 
@@ -328,13 +335,18 @@ class FlexiPipeline:
                cond: Any = None, x_T: Optional[jax.Array] = None,
                text_mask: Optional[jax.Array] = None,
                null_text_mask: Optional[jax.Array] = None,
-               eps_transform: Optional[EpsTransform] = None) -> SampleResult:
+               eps_transform: Optional[EpsTransform] = None,
+               taps: bool = False) -> SampleResult:
         """Sample ``n`` latents under ``plan``. ``key`` seeds both the prior
         draw and the solver noise (``x_T`` overrides the prior draw).
 
         ``eps_transform`` is keyed by function *identity*: reuse the same
         callable across calls to reuse its compiled runner — a fresh
         closure per call compiles (and retains) a new runner each time.
+
+        ``taps`` (cached plans only; DESIGN.md §telemetry) returns
+        per-step eps-norm and cache replay-drift data outputs in
+        ``result.trace["taps"]`` — same ``x0`` bit-for-bit.
         """
         plan.validate(self.cfg)
         if x_T is None:
@@ -350,6 +362,10 @@ class FlexiPipeline:
         if eps_transform is not None and plan.cache is not None:
             raise ValueError("eps_transform does not compose with the "
                              "activation cache")
+        if taps and plan.cache is None:
+            raise ValueError("taps instrument the cached runner (and the "
+                             "serving engine's packed steps); this plan "
+                             "has no cache")
         if plan.is_adaptive:
             return self._sample_adaptive(plan, x_T, run_key, y, null,
                                          text_mask, null_text_mask)
@@ -402,21 +418,25 @@ class FlexiPipeline:
             runner = self._lookup(
                 self._runners,
                 ("cached",) + sig
-                + (plan.cache.resolve_split(self.cfg.num_layers),),
-                lambda: self._cached_runner(plan, schedule, ts))
-            x0 = runner(param_sets, x_T, y, null, run_key, text_mask,
-                        null_text_mask, masks)
+                + (plan.cache.resolve_split(self.cfg.num_layers), taps),
+                lambda: self._cached_runner(plan, schedule, ts, taps=taps))
+            out = runner(param_sets, x_T, y, null, run_key, text_mask,
+                         null_text_mask, masks)
+            x0, tap_phases = out if taps else (out, None)
             fl, n_refresh, n_steps = cache_ledger.schedule_cached_flops(
                 self.cfg, schedule, ts, plan.cache,
                 cfg_scale_active=plan.guidance_active,
                 lora_unmerged=(variant == "unmerged"))
+            trace = {"schedule": schedule, "timesteps": ts,
+                     "refresh_masks": tuple(np.asarray(m) for m in masks),
+                     "cache_refreshes": n_refresh,
+                     "cache_steps": n_steps}
+            if taps:
+                trace["taps"] = tap_phases
             return SampleResult(
                 x0=x0, flops=n * fl,
                 relative_compute=plan.relative_compute(self.cfg),
-                trace={"schedule": schedule, "timesteps": ts,
-                       "refresh_masks": tuple(np.asarray(m) for m in masks),
-                       "cache_refreshes": n_refresh,
-                       "cache_steps": n_steps})
+                trace=trace)
         else:
             runner = self._lookup(
                 self._runners, ("static",) + sig,

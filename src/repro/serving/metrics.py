@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-import math
 from typing import Dict, Optional
 
 import numpy as np
@@ -148,8 +147,11 @@ class ServingMetrics:
         }
 
     def latency_percentiles(self, qs=(50, 99)) -> Dict[str, float]:
+        """Latency percentiles over the window; empty window → empty
+        dict (absent beats NaN: exporters and log lines just omit the
+        keys instead of printing a poisoned value)."""
         if not self.requests:
-            return {f"p{q}": math.nan for q in qs}
+            return {}
         lat = np.asarray([r.latency for r in self.requests])
         return {f"p{q}": float(np.percentile(lat, q)) for q in qs}
 
@@ -177,8 +179,12 @@ class ServingMetrics:
             out["cache_bytes_resident"] = float(self.cache_bytes_resident)
         if self.attn_blocks_total:
             out["attn_block_skip_rate"] = self.attn_block_skip_rate
-        if wall is not None and wall > 0:
-            out["wall_s"] = wall
-            out["tokens_per_s"] = self.total_tokens / wall
-            out["requests_per_s"] = self.total_served / wall
+        if wall is not None:
+            # wall_s always reports what was passed; rates only when the
+            # denominator is meaningful (a zero-wall snapshot — e.g. a
+            # simulated clock that has not advanced — must not divide)
+            out["wall_s"] = float(wall)
+            if wall > 0:
+                out["tokens_per_s"] = self.total_tokens / wall
+                out["requests_per_s"] = self.total_served / wall
         return out

@@ -48,6 +48,8 @@ from repro.serving.batcher import BucketMenu
 from repro.serving.controller import BudgetController
 from repro.serving.metrics import RequestRecord, ServingMetrics
 from repro.serving.queue import Request, RequestQueue
+from repro.telemetry import TapSample, Telemetry
+from repro.telemetry.trace import REQUEST_PID
 
 ENGINE_POLICIES = ("fifo", "edf", "degrade")
 
@@ -125,13 +127,22 @@ class ServingEngine:
                  menu: Optional[BucketMenu] = None,
                  allow_cold: bool = True,
                  cache: Optional[CacheSpec] = None,
-                 precapture_small: int = 0):
+                 precapture_small: int = 0,
+                 telemetry: Optional[Telemetry] = None):
         if policy not in ENGINE_POLICIES:
             raise ValueError(f"unknown policy {policy!r}; known: "
                              f"{ENGINE_POLICIES}")
         self.pipe = pipe
         self.cfg = pipe.cfg
         self.clock = clock or time.monotonic
+        # telemetry (DESIGN.md §telemetry): spans stamp the engine's own
+        # clock; taps route every dispatch through the tapped step family
+        # (bit-identical latents, extra data outputs — never structure)
+        self.telemetry = telemetry
+        self._taps = telemetry is not None and telemetry.taps_enabled
+        self._rec = telemetry.recorder if telemetry is not None else None
+        if telemetry is not None:
+            telemetry.bind_clock(self.clock)
         self.policy = policy
         self._validate_menu(plans)
         ref = next(iter(plans.values()))
@@ -332,7 +343,7 @@ class ServingEngine:
             layout, solver=self.solver,
             guidance_scale=self.guidance_scale, clip_x0=self.clip_x0,
             k_steps=k, cache_split=self.cache_split,
-            attn_backend=self.attn_backend)
+            attn_backend=self.attn_backend, taps=self._taps)
 
     def _ensure_slot(self, f: InFlight, mode: int) -> bool:
         """Make sure ``f`` owns a live slot in ``mode``'s pool; returns
@@ -412,11 +423,12 @@ class ServingEngine:
         """Run one throwaway dispatch at ``layout`` so the executable is
         compiled AND loaded (a runner that merely exists in the cache
         still stalls its first real step on compilation)."""
+        t0 = self.clock() if self._rec is not None else 0.0
         runner = self.pipe.packed_step(
             layout, solver=self.solver,
             guidance_scale=self.guidance_scale, clip_x0=self.clip_x0,
             k_steps=k, cache_split=self.cache_split,
-            attn_backend=self.attn_backend)
+            attn_backend=self.attn_backend, taps=self._taps)
         xs, metas, keys, deltas, refreshes = [], [], [], [], []
         for mode, cap in layout.groups:
             xs.append(jnp.zeros((cap,) + self.cfg.dit.latent_shape))
@@ -436,6 +448,10 @@ class ServingEngine:
             out = runner(self.pipe.params, tuple(xs), tuple(metas),
                          tuple(keys))
         jax.block_until_ready(out)
+        if self._rec is not None:
+            self._rec.complete("compile", t0, self.clock(),
+                               args={"groups": str(layout.groups), "k": k,
+                                     "precapture": True})
 
     # ------------------------------------------------------------------
     # The engine iteration
@@ -446,7 +462,13 @@ class ServingEngine:
         one dispatch, and retire finished requests. Requests that don't
         fit the chosen bucket simply wait (no drain, no recompile)."""
         now = self.clock()
+        n_before = len(self._inflight)
         self._admit(now)
+        if self._rec is not None and len(self._inflight) > n_before:
+            self._rec.complete("admit", now, self.clock(),
+                               args={"admitted":
+                                     len(self._inflight) - n_before,
+                                     "queued": len(self._queue)})
         if not self._inflight:
             self._last_step_at = now
             return []
@@ -462,6 +484,7 @@ class ServingEngine:
         # (``allow_cold=False``: every compile stall is an SLA violation)
         # restricts to already-compiled layouts, falling back to a cold
         # one only when nothing warm can serve at all.
+        t_plan = self.clock() if self._rec is not None else 0.0
         prio = sorted(self._inflight, key=self._priority)
         top = prio[0]
         k_cap = 1
@@ -482,7 +505,8 @@ class ServingEngine:
                         guidance_scale=self.guidance_scale,
                         clip_x0=self.clip_x0,
                         cache_split=self.cache_split,
-                        attn_backend=self.attn_backend).items()}
+                        attn_backend=self.attn_backend,
+                        taps=self._taps).items()}
             kc = k_cap
             while kc >= 1:
                 eligible = [f for f in prio
@@ -531,6 +555,12 @@ class ServingEngine:
                 sel_by_mode.setdefault(f.mode, []).append(f)
         picked = [sel_by_mode.get(mode, [])[:cap]
                   for mode, cap in layout.groups]
+        if self._rec is not None:
+            self._rec.complete("plan", t_plan, self.clock(),
+                               args={"k": k,
+                                     "groups": str(layout.groups),
+                                     "inflight": len(self._inflight)})
+        t_pack = self.clock() if self._rec is not None else 0.0
 
         xs, metas, keys = [], [], []
         deltas, refreshes, slot_lists, rf_real = [], [], [], []
@@ -603,15 +633,29 @@ class ServingEngine:
                                 attn_backend=self.attn_backend)
                 for (mode, _cap), sel in zip(layout.groups, picked))
 
+        if self._rec is not None:
+            self._rec.complete("pack", t_pack, self.clock(),
+                               args={"real_tokens": real_tokens})
+        was_warm = (self._is_warm(layout, k) if self._rec is not None
+                    else True)
+        t_fetch = self.clock() if self._rec is not None else 0.0
         runner = self.pipe.packed_step(
             layout, solver=self.solver,
             guidance_scale=self.guidance_scale, clip_x0=self.clip_x0,
             k_steps=k, cache_split=self.cache_split,
-            attn_backend=self.attn_backend)
+            attn_backend=self.attn_backend, taps=self._taps)
+        if self._rec is not None and not was_warm:
+            # cold dispatch: the runner fetch traced + lowered a new
+            # executable — the stall every frozen-serving SLA fears
+            self._rec.complete("compile", t_fetch, self.clock(),
+                               args={"groups": str(layout.groups), "k": k})
+        t_disp = self.clock() if self._rec is not None else 0.0
+        tap = None
         if self.cache is not None:
-            outs, new_deltas = runner(self.pipe.params, tuple(xs),
-                                      tuple(metas), tuple(keys),
-                                      tuple(deltas), tuple(refreshes))
+            out = runner(self.pipe.params, tuple(xs),
+                         tuple(metas), tuple(keys),
+                         tuple(deltas), tuple(refreshes))
+            (outs, new_deltas, tap) = out if self._taps else (*out, None)
             for (mode, _cap), slots, nd in zip(layout.groups, slot_lists,
                                                new_deltas):
                 if slots:
@@ -620,8 +664,22 @@ class ServingEngine:
                                       n_cached_steps - n_refresh)
             self.metrics.set_cache_bytes(self.store.bytes_resident)
         else:
-            outs = runner(self.pipe.params, tuple(xs), tuple(metas),
-                          tuple(keys))
+            out = runner(self.pipe.params, tuple(xs), tuple(metas),
+                         tuple(keys))
+            (outs, tap) = out if self._taps else (out, None)
+        if self._rec is not None:
+            self._rec.complete(
+                "dispatch", t_disp, self.clock(),
+                args={"k": k, "groups": str(layout.groups),
+                      "requests": sum(len(s) for s in picked),
+                      "warm": was_warm})
+        if tap is not None:
+            # still device arrays — the aggregator syncs at export time
+            self.telemetry.taps.add(TapSample(
+                time=now, k=k, groups=layout.groups,
+                n_real=tuple(len(s) for s in picked),
+                eps_norm=tap["eps_norm"], drift=tap.get("drift"),
+                attn_blocks=tap.get("attn_blocks")))
         self._flops_since_sync += step_flops
         if any(f.step + k >= len(f.lp.ts) for sel in picked for f in sel):
             # someone completes on this dispatch: a result only counts as
@@ -629,8 +687,12 @@ class ServingEngine:
             # latency derived from it) waits for the device. This is also
             # the only honest capacity sample — between syncs the clock
             # only sees host-side batch assembly, not device compute
+            t_mat = self.clock() if self._rec is not None else 0.0
             jax.block_until_ready(outs)
             now = self.clock()
+            if self._rec is not None:
+                self._rec.complete("materialize", t_mat, now,
+                                   args={"k": k})
             if self.controller is not None and self._last_sync_at is not None \
                     and now > self._last_sync_at:
                 self.controller.observe_service(self._flops_since_sync,
@@ -662,6 +724,9 @@ class ServingEngine:
                 blk = self._layout_blocks[layout] = \
                     layout.attention_block_stats(self.cfg)
             self.metrics.record_attention_blocks(blk[0] * k, blk[1] * k)
+        if self._rec is not None:
+            self._rec.counter("engine", {"inflight": len(self._inflight),
+                                         "queued": len(self._queue)})
         self._last_step_at = now
         return finished
 
@@ -681,6 +746,15 @@ class ServingEngine:
             deadline=f.req.deadline, budget_requested=f.req.budget,
             budget_served=f.lp.level, tokens=tokens, flops=f.lp.flops)
         self.metrics.record_request(rec)
+        if self._rec is not None:
+            # one row per request under the "requests" track (tid = id)
+            self._rec.complete(
+                f"req{f.req.id}", f.admit, now,
+                pid=REQUEST_PID, tid=f.req.id,
+                args={"budget_requested": f.req.budget,
+                      "budget_served": f.lp.level,
+                      "steps": len(f.lp.ts), "flops": f.lp.flops,
+                      "queue_wait": f.admit - f.req.arrival})
         return ServedResult(request=f.req, x0=f.x,
                             budget_served=f.lp.level, record=rec)
 

@@ -1,0 +1,53 @@
+"""End-to-end inference telemetry (DESIGN.md §telemetry).
+
+Three layers, one rule — **observability must be data, not structure**:
+
+* :mod:`repro.telemetry.trace` — host-side span/event recorder (bounded
+  ring buffer, simulated- or wall-clock) with Chrome-trace/Perfetto
+  export; instruments the request lifecycle queue admit → pack decision
+  → dispatch → device step(s) → materialization → finish plus compile
+  events.
+* :mod:`repro.telemetry.taps` — on-device scalar taps threaded as extra
+  **data** outputs through ``make_packed_step_fn`` (per-request eps
+  norm, realized cache replay drift ``‖h_fresh − h_replay‖``, the
+  kernel ledger's attention block counts). No host callbacks, no
+  ``debug.print``, no recompiles: DCE of the tap outputs recovers the
+  untapped jaxpr bit-for-bit (asserted in ``analysis/jaxpr_audit.py``).
+* :mod:`repro.telemetry.export` — Prometheus text-format + JSON
+  snapshot exporters over ``ServingMetrics`` summaries and tap
+  aggregates (duck-typed: this module never imports the engine).
+
+``Telemetry`` bundles a recorder + tap aggregator for the serving
+engine; device values cross to the host only inside
+``TapAggregator.aggregate()`` / trace export — never on the dispatch
+path.
+"""
+from repro.telemetry.taps import TapAggregator, TapSample  # noqa: F401
+from repro.telemetry.trace import SpanRecorder, TraceEvent  # noqa: F401
+
+
+class Telemetry:
+    """One serving session's telemetry bundle.
+
+    ``taps=False`` keeps the engine on the untapped step family (spans
+    only); ``taps=True`` routes dispatches through the tapped runners —
+    same latents bit-for-bit, plus per-dispatch tap samples.
+    """
+
+    def __init__(self, clock=None, taps: bool = False,
+                 max_events: int = 65536, max_samples: int = 4096):
+        self.recorder = SpanRecorder(clock=clock, max_events=max_events)
+        self.taps = TapAggregator(max_samples=max_samples)
+        self.taps_enabled = bool(taps)
+
+    def bind_clock(self, clock) -> None:
+        """Adopt the engine's clock (simulated or wall) if the recorder
+        was built before the engine existed."""
+        self.recorder.clock = clock
+
+    def snapshot(self) -> dict:
+        """JSON-friendly view: tap aggregates + recorder counters."""
+        return {"taps_enabled": self.taps_enabled,
+                "tap_aggregates": self.taps.aggregate(),
+                "events_recorded": self.recorder.events_recorded,
+                "events_dropped": self.recorder.events_dropped}

@@ -1,0 +1,159 @@
+"""On-device scalar taps (DESIGN.md §telemetry).
+
+A *tap* is an extra **data** output of an already-compiled step — never
+a host callback, never ``debug.print``, never structure. The tapped
+step family computes, alongside its latents:
+
+* ``eps_norm`` — per-request RMS of the post-guidance eps prediction
+  (the solver's actual input; spikes mean the request's budget/cache
+  combination is hurting it *now*);
+* ``drift`` — the realized cache replay error. The cached forward
+  already computes ``new_delta = where(refresh, h_deep − h_shallow,
+  old_delta)``, so ``‖new_delta − old_delta‖ = ‖h_fresh − h_replay‖``
+  exactly at refresh steps and exactly 0 at skip steps — the tap is
+  FREE: a subtraction of two arrays the step already materializes
+  (ROADMAP item 3's online refresh-threshold signal);
+* ``attn_blocks`` — the kernel ledger's (active, total) score-tile
+  counts for the dispatch layout (``PackLayout.attention_block_stats``),
+  emitted through the same channel so a tap stream is self-describing.
+
+The helpers below run INSIDE jit — jnp only, reductions to tiny [n]
+vectors so the host transfer at export time is a few floats per
+request-step. :class:`TapAggregator` holds samples as device arrays and
+materializes them ONLY in :meth:`TapAggregator.aggregate` — dispatch
+never blocks on a tap.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+#: keys a tapped step emits per group (drift only on the cached family)
+TAP_NAMES = ("eps_norm", "drift", "attn_blocks")
+
+
+def eps_norm_tap(eps: jnp.ndarray) -> jnp.ndarray:  # repro: traced
+    """Per-request RMS of an eps batch [n, F, H, W, C] → [n]."""
+    return jnp.sqrt(jnp.mean(jnp.square(eps),
+                             axis=tuple(range(1, eps.ndim))))
+
+
+def drift_tap(new_delta: jnp.ndarray,
+              old_delta: jnp.ndarray) -> jnp.ndarray:  # repro: traced
+    """Per-request RMS replay drift ``‖h_fresh − h_replay‖`` from the
+    deep-block residuals [n, mult, N, d] → [n] (0 at skip steps)."""
+    d = new_delta - old_delta
+    return jnp.sqrt(jnp.mean(jnp.square(d), axis=tuple(range(1, d.ndim))))
+
+
+@dataclasses.dataclass
+class TapSample:
+    """One dispatch's tap outputs, still on device.
+
+    ``eps_norm[g]`` is [k, n_g]; ``drift[g]`` is [k, n_g] (cached step
+    family only); ``attn_blocks`` is [2] int32 (active, total) per
+    micro-step. ``n_real[g]`` masks dummy tail slots out of aggregation.
+    """
+    time: float
+    k: int
+    groups: Tuple[Tuple[int, int], ...]      # ((mode, capacity), ...)
+    n_real: Tuple[int, ...]                  # live requests per group
+    eps_norm: Tuple[Any, ...]
+    drift: Optional[Tuple[Any, ...]] = None
+    attn_blocks: Optional[Any] = None
+
+
+class TapAggregator:
+    """Bounded window of :class:`TapSample` + lifetime scalars.
+
+    Device arrays are held as-is until :meth:`aggregate` — the single
+    host-sync point of the tap pipeline (export/summary time, off the
+    dispatch path)."""
+
+    def __init__(self, max_samples: int = 4096):
+        self.samples: collections.deque = collections.deque(
+            maxlen=max_samples)
+        self.samples_recorded = 0
+
+    def add(self, sample: TapSample) -> None:
+        self.samples.append(sample)
+        self.samples_recorded += 1
+
+    def __len__(self) -> int:
+        return len(self.samples)
+
+    def aggregate(self) -> Dict[str, Any]:
+        """Materialize the window into JSON-friendly aggregates — mean /
+        max eps norm and replay drift over live request-steps, per-mode
+        drift means (the online refresh-threshold signal), and the
+        summed attention block ledger."""
+        eps_all, drift_all = [], []
+        per_mode: Dict[int, list] = {}
+        blk_active = blk_total = 0
+        n_request_steps = 0
+        for s in self.samples:
+            for g, (mode, _cap) in enumerate(s.groups):
+                n = s.n_real[g]
+                if not n:
+                    continue
+                e = np.asarray(s.eps_norm[g])[:, :n].ravel()
+                eps_all.append(e)
+                n_request_steps += e.size
+                if s.drift is not None:
+                    d = np.asarray(s.drift[g])[:, :n].ravel()
+                    drift_all.append(d)
+                    per_mode.setdefault(mode, []).append(d)
+            if s.attn_blocks is not None:
+                a, t = (int(v) for v in np.asarray(s.attn_blocks))
+                blk_active += a * s.k
+                blk_total += t * s.k
+        out: Dict[str, Any] = {
+            "samples": len(self.samples),
+            "samples_recorded": self.samples_recorded,
+            "request_steps": n_request_steps,
+        }
+        if eps_all:
+            e = np.concatenate(eps_all)
+            out["eps_norm"] = {"mean": float(e.mean()),
+                               "max": float(e.max())}
+        if drift_all:
+            d = np.concatenate(drift_all)
+            out["drift"] = {"mean": float(d.mean()), "max": float(d.max()),
+                            "p99": float(np.percentile(d, 99))}
+            out["drift_per_mode"] = {
+                str(m): float(np.concatenate(v).mean())
+                for m, v in sorted(per_mode.items())}
+        if blk_total:
+            out["attn_blocks"] = {
+                "active": blk_active, "total": blk_total,
+                "skip_rate": 1.0 - blk_active / blk_total}
+        return out
+
+    def counter_series(self):
+        """Per-sample ``(time, {name: value})`` series for trace counter
+        tracks — drift/eps means per dispatch, so the Perfetto timeline
+        shows WHEN replay error spiked, not just that it did. Same sync
+        discipline as :meth:`aggregate` (export time only)."""
+        series = []
+        for s in self.samples:
+            eps_all, drift_all = [], []
+            for g in range(len(s.groups)):
+                n = s.n_real[g]
+                if not n:
+                    continue
+                eps_all.append(np.asarray(s.eps_norm[g])[:, :n].ravel())
+                if s.drift is not None:
+                    drift_all.append(np.asarray(s.drift[g])[:, :n].ravel())
+            if not eps_all:
+                continue
+            vals = {"eps_norm_mean": float(np.concatenate(eps_all).mean())}
+            if drift_all:
+                d = np.concatenate(drift_all)
+                vals["drift_mean"] = float(d.mean())
+                vals["drift_max"] = float(d.max())
+            series.append((s.time, vals))
+        return series

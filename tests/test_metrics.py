@@ -1,0 +1,137 @@
+"""Direct unit tests for serving/metrics.py (DESIGN.md §serving).
+
+The engine tests exercise metrics end-to-end; these pin the ledger's own
+contract — rolling-window bounds, cache/attention ledgers, and summary
+key stability across the edge cases (no requests, wall=0, a
+single-request window) that exporters and log lines must survive.
+"""
+import pytest
+
+from repro.serving.metrics import RequestRecord, ServingMetrics, StepRecord
+
+
+def _req(i: int, arrival=0.0, admit=0.5, finish=2.0, deadline=10.0,
+         requested=1.0, served=1.0, tokens=100, flops=1e9) -> RequestRecord:
+    return RequestRecord(id=i, arrival=arrival, admit=admit, finish=finish,
+                         deadline=deadline, budget_requested=requested,
+                         budget_served=served, tokens=tokens, flops=flops)
+
+
+class TestRequestRecord:
+    def test_derived_properties(self):
+        r = _req(0, arrival=1.0, finish=3.5, deadline=3.0,
+                 requested=1.0, served=0.6)
+        assert r.latency == 2.5
+        assert not r.met_deadline
+        assert r.degraded
+
+    def test_deadline_boundary_is_met(self):
+        assert _req(0, finish=10.0, deadline=10.0).met_deadline
+
+
+class TestRollingWindow:
+    def test_window_bounds_memory_but_not_totals(self):
+        m = ServingMetrics(window=4)
+        for i in range(10):
+            m.record_request(_req(i, finish=float(i + 1)))
+            m.record_step(float(i), real_tokens=50, packed_tokens=100,
+                          n_requests=1)
+        assert len(m.requests) == 4
+        assert len(m.steps) == 4
+        assert m.total_served == 10
+        assert m.total_steps == 10
+        assert m.total_tokens == 10 * 100
+
+    def test_percentiles_reflect_window_not_lifetime(self):
+        m = ServingMetrics(window=2)
+        m.record_request(_req(0, finish=100.0))       # evicted
+        m.record_request(_req(1, finish=1.0))
+        m.record_request(_req(2, finish=1.0))
+        p = m.latency_percentiles()
+        assert p["p99"] <= 1.0
+
+    def test_unbounded_window(self):
+        m = ServingMetrics(window=None)
+        for i in range(100):
+            m.record_request(_req(i))
+        assert len(m.requests) == 100
+
+
+class TestLedgers:
+    def test_cache_ledger(self):
+        m = ServingMetrics()
+        m.record_cache(refreshes=3, skips=7)
+        m.record_cache(refreshes=2, skips=8)
+        assert m.cache_hit_rate == pytest.approx(15 / 20)
+        m.set_cache_bytes(4096)
+        m.record_refresh_intervals([2, 2, 3])
+        cs = m.cache_summary()
+        assert cs["enabled"]
+        assert cs["refreshes"] == 5 and cs["skips"] == 15
+        assert cs["bytes_resident"] == 4096
+        assert cs["refresh_interval_hist"] == {"2": 2, "3": 1}
+
+    def test_cache_ledger_empty(self):
+        m = ServingMetrics()
+        assert m.cache_hit_rate == 0.0
+        assert not m.cache_summary()["enabled"]
+
+    def test_attention_ledger(self):
+        m = ServingMetrics()
+        m.record_attention_blocks(30, 100)
+        m.record_attention_blocks(20, 100)
+        assert m.attn_block_skip_rate == pytest.approx(0.75)
+
+    def test_attention_ledger_empty(self):
+        assert ServingMetrics().attn_block_skip_rate == 0.0
+
+    def test_packing_efficiency(self):
+        m = ServingMetrics()
+        m.record_step(0.0, real_tokens=60, packed_tokens=100, n_requests=2)
+        m.record_step(1.0, real_tokens=40, packed_tokens=100, n_requests=1)
+        assert m.packing_efficiency == pytest.approx(0.5)
+        assert ServingMetrics().packing_efficiency == 1.0
+
+
+class TestSummaryEdgeCases:
+    BASE_KEYS = {"served", "steps", "tokens", "packing_efficiency",
+                 "degraded"}
+
+    def test_empty_summary_has_no_nan(self):
+        out = ServingMetrics().summary()
+        assert set(out) == self.BASE_KEYS
+        assert all(v == v for v in out.values())      # no NaN anywhere
+
+    def test_empty_percentiles_omitted_not_nan(self):
+        assert ServingMetrics().latency_percentiles() == {}
+
+    def test_wall_zero_reports_wall_but_no_rates(self):
+        out = ServingMetrics().summary(wall=0.0)
+        assert out["wall_s"] == 0.0
+        assert "tokens_per_s" not in out
+        assert "requests_per_s" not in out
+
+    def test_wall_none_omits_wall_keys(self):
+        out = ServingMetrics().summary(wall=None)
+        assert "wall_s" not in out
+
+    def test_single_request_window(self):
+        m = ServingMetrics()
+        m.record_request(_req(0, arrival=0.0, finish=2.0))
+        out = m.summary(wall=4.0)
+        assert out["p50"] == pytest.approx(2.0)
+        assert out["p99"] == pytest.approx(2.0)
+        assert out["deadline_hit_rate"] == 1.0
+        assert out["tokens_per_s"] == pytest.approx(25.0)
+
+    def test_key_stability_full(self):
+        m = ServingMetrics()
+        m.record_request(_req(0))
+        m.record_step(0.0, 50, 100, 1)
+        m.record_cache(1, 1)
+        m.record_attention_blocks(1, 2)
+        out = m.summary(wall=1.0)
+        assert set(out) == self.BASE_KEYS | {
+            "p50", "p99", "deadline_hit_rate", "flops", "cache_hit_rate",
+            "cache_bytes_resident", "attn_block_skip_rate", "wall_s",
+            "tokens_per_s", "requests_per_s"}
