@@ -1,0 +1,202 @@
+"""Compiled-cost profiling gates (DESIGN.md §profiling).
+
+Five claims, all gated via ``baselines.json``:
+
+* **free** — turning profiling on compiles nothing: the same runner
+  cache keys serve both drains, so ``cache_stats()['compiled']`` is
+  flat from the profiling-off warm drain through the profiling-on one.
+* **AOT harvest is invisible** — harvesting ``cost_analysis`` /
+  ``memory_analysis`` from the whole warm set (``registry.harvest``)
+  leaves the jit compile counter untouched, and a full replay drain
+  after the harvest adds zero recompiles.
+* **bit-identity** — latents served with profiling on equal the
+  profiling-off drain bit-for-bit (profiling only measures).
+* **reconciliation** — every executable's XLA flop count lands within
+  a loose band of the analytic *body* cost (the scan body is counted
+  once, trip-count-blind; see profile.py), with zero harvest errors.
+* **measured repricing** — the BudgetController, calibrated with the
+  engine-measured wall-per-analytic-FLOP, demotes below what the
+  analytic solve sustains when the analytic capacity estimate is
+  optimistic (here: a nominal 4x-faster-than-measured device). The
+  conservation deltas of the attribution ledger are exactly zero.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+T = 12
+TRAIN_T = 100
+N_REQ = 12
+MAX_TOKENS = 4096
+
+
+def _bench_cfg():
+    from repro.configs import get_config
+    base = get_config("dit-xl-2").reduced()
+    return dataclasses.replace(
+        base, num_layers=4, d_model=128, d_ff=512,
+        attn=dataclasses.replace(base.attn, num_heads=4, num_kv_heads=4,
+                                 head_dim=32))
+
+
+def bench_profile() -> None:
+    import jax
+    import numpy as np
+
+    from benchmarks import common as C
+    from benchmarks.baseline import check_baseline
+    from repro.diffusion import schedule as sch
+    from repro.models import dit as dit_mod
+    from repro.pipeline import FlexiPipeline, SamplingPlan
+    from repro.serving import BucketMenu, CacheSpec, ServingEngine
+    from repro.serving.controller import BudgetController
+    from repro.telemetry import Telemetry
+
+    cfg = _bench_cfg()
+    params = dit_mod.init_dit(cfg, jax.random.PRNGKey(0))
+    pipe = FlexiPipeline(params, cfg, sch.linear_schedule(TRAIN_T))
+    cache = CacheSpec(policy="interval", interval=2)
+
+    plans = {}
+    for b in (0.4, 0.7, 1.0):
+        plan = SamplingPlan(T=T, budget=b, guidance_scale=1.5,
+                            attn_backend="dense")
+        plan.validate(cfg)
+        plans[b] = plan
+    levels = sorted(plans)
+    rng = np.random.default_rng(0)
+    reqs = [(int(rng.integers(0, cfg.dit.num_classes)),
+             levels[int(rng.integers(0, len(levels)))])
+            for _ in range(N_REQ)]
+    menu = BucketMenu(cfg, (0, 1), MAX_TOKENS, guided=True)
+
+    def drain(telemetry=None, controller=None):
+        # fifo even when a controller rides along: fifo never calls
+        # controller.assign, so calibration observation cannot change
+        # which budget a request is served at (bit-identity holds)
+        engine = ServingEngine(pipe, plans, max_tokens_per_step=MAX_TOKENS,
+                               menu=menu, cache=cache, telemetry=telemetry,
+                               controller=controller)
+        for i, (label, lvl) in enumerate(reqs):
+            engine.submit(cond=label, budget=lvl,
+                          key=jax.random.fold_in(jax.random.PRNGKey(7), i))
+        results = engine.run()
+        jax.block_until_ready(results[-1].x0)
+        return engine, results
+
+    # ------------------------------------------------------------------
+    # Gate 1+2+3: compile-flat profiling, invisible harvest, bit-identity
+
+    _eng, res_off = drain()                        # warm, profiling off
+    c_warm = pipe.cache_stats()["compiled"]
+    tel1 = Telemetry(profile=True)
+    drain(tel1)
+    c_prof = pipe.cache_stats()["compiled"]
+    profile_added = c_prof - c_warm
+
+    hv = tel1.profile.harvest(pipe)
+    c_harv = pipe.cache_stats()["compiled"]
+    harvest_added = c_harv - c_prof
+    rec = tel1.profile.reconcile()
+
+    # replay AFTER the harvest, with a pre-harvested registry, so the
+    # attributed per-request bytes come from real compiled-cost records
+    ctrl_fed = BudgetController(cfg, plans, cache=cache,
+                                num_train_steps=TRAIN_T,
+                                attn_backend="dense")
+    tel2 = Telemetry(profile=True)
+    tel2.profile.harvest(pipe)
+    eng2, res_on = drain(tel2, controller=ctrl_fed)
+    c_replay = pipe.cache_stats()["compiled"]
+    replay_added = c_replay - c_harv
+
+    a = {r.request.id: np.asarray(r.x0) for r in res_off}
+    b = {r.request.id: np.asarray(r.x0) for r in res_on}
+    bit_identical = int(all(np.array_equal(a[i], b[i]) for i in a))
+    assert bit_identical, "profiling changed the served latents"
+
+    cons = tel2.attribution.conservation()
+    conserved = int(all(v == 0 for v in cons.values()))
+    bytes_attributed = sum(c.bytes for c in tel2.attribution
+                           .finalized.values())
+    wall_attr_ns = sum(c.wall_ns for c in tel2.attribution
+                       .finalized.values())
+    flops_attr = sum(c.flops for c in tel2.attribution.finalized.values())
+
+    # ------------------------------------------------------------------
+    # Gate 5: measured calibration reprices the budget solve
+
+    cal = ctrl_fed.calibration
+    assert cal is not None, "fifo drain with a controller must calibrate"
+    wpf = cal["global"]                 # measured wall per analytic FLOP
+
+    demo = BudgetController(cfg, plans, cache=cache,
+                            num_train_steps=TRAIN_T, attn_backend="dense")
+    demo.observe_calibration(None, 1.0, wpf)     # r = wpf exactly
+    cs = {b_: demo.cost_seconds(b_) for b_ in levels}
+    # arrival rate tuned so the seconds budget lands between the menu's
+    # cheapest and priciest measured costs ...
+    mid = 0.5 * (cs[levels[0]] + cs[levels[-1]])
+    gap = mid / demo.target_util
+    demo.observe_arrival(0.0)
+    demo.observe_arrival(gap)
+    # ... while the analytic capacity estimate believes a device 4x
+    # faster than measured — the analytic/wall divergence scenario
+    demo.observe_service(4.0 / wpf, 1.0)
+    b_cal = demo.solve()
+    b_ana = demo.solve_analytic()
+    repriced = int(b_cal < b_ana)
+
+    C.csv_row("profile_compiles", 0.0,
+              f"warm={c_warm};profile_added={profile_added};"
+              f"harvest_added={harvest_added};replay_added={replay_added};"
+              f"bit_identical={bit_identical}")
+    C.csv_row("profile_reconcile", 0.0,
+              f"records={rec['n_records']};errors={rec['n_errors']};"
+              f"flagged={rec['n_flagged']};"
+              f"ratio=[{rec.get('min_xla_over_analytic', 0.0):.2f},"
+              f"{rec.get('max_xla_over_analytic', 0.0):.2f}]")
+    C.csv_row("profile_attribution", 0.0,
+              f"conserved={conserved};wall_ms={wall_attr_ns/1e6:.1f};"
+              f"gflops={flops_attr/1e9:.2f};mbytes={bytes_attributed/1e6:.1f}")
+    C.csv_row("profile_repricing", 0.0,
+              f"wall_per_flop={wpf:.3e};solve_analytic={b_ana};"
+              f"solve_calibrated={b_cal};repriced={repriced}")
+
+    bench = {
+        "name": "profile", "arch": "dit-xl-2:reduced+4L128d",
+        "T": T, "requests": N_REQ, "levels": levels,
+        "compiles": {"warm": c_warm, "profile_added": profile_added,
+                     "harvest_added": harvest_added,
+                     "replay_added": replay_added},
+        "recompiles_after_harvest": harvest_added + replay_added,
+        "bit_identical": bit_identical,
+        "harvest": hv,
+        "reconcile": {
+            "n_records": rec["n_records"], "n_errors": rec["n_errors"],
+            "n_flagged": rec["n_flagged"],
+            "max_xla_over_analytic": rec.get("max_xla_over_analytic", 0.0),
+            "min_xla_over_analytic": rec.get("min_xla_over_analytic", 0.0)},
+        "attribution": {"conserved": conserved,
+                        "wall_ns": wall_attr_ns, "flops": flops_attr,
+                        "bytes_attributed": bytes_attributed,
+                        "n_requests": len(tel2.attribution.finalized),
+                        "n_dispatches": len(tel2.attribution.dispatches)},
+        "calibration": {"wall_per_flop": wpf,
+                        "families": len(cal["per_family"]),
+                        "solve_analytic": b_ana,
+                        "solve_calibrated": b_cal,
+                        "repriced": repriced},
+    }
+    print("BENCH " + json.dumps(bench))
+    check_baseline("profile", bench)
+
+
+if __name__ == "__main__":
+    bench_profile()

@@ -1,88 +1,150 @@
-"""Aggregate dry-run JSONs into the §Roofline table (EXPERIMENTS.md)."""
+"""Roofline table off the compiled-cost registry (DESIGN.md §profiling).
+
+Replaces the stale seed script that aggregated a nonexistent
+``results/dryrun/`` tree. This version measures, not loads: it builds a
+profiling-enabled :class:`FlexiPipeline`, samples each requested budget
+(static + activation-cached plans), harvests XLA ``cost_analysis`` /
+``memory_analysis`` through the compiled-cost registry's AOT path, and
+emits one row per arch×budget reconciling
+
+    analytic GFLOPs | XLA GFLOPs | bytes | wall ms | achieved GFLOP/s
+    | arithmetic intensity (flops/byte)
+
+This exercises the registry's *sample-path* harvest (static/cached
+runner specs recorded by ``enable_cost_profiling``), complementing
+``bench_profile``'s packed-engine path. Note the xla/analytic column
+here compares XLA's trip-count-blind count (each ``lax.scan`` body
+tallied ONCE — see profile.py) against the full-request analytic total,
+so sub-1 ratios on multi-phase sample runners are expected, not drift;
+the gated packed-body reconciliation lives in ``bench_profile``.
+
+  PYTHONPATH=src python -m benchmarks.roofline_table          # table
+"""
 from __future__ import annotations
 
-import json
 import sys
+import time
 from pathlib import Path
+from typing import Dict, List, Optional, Sequence
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
-RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+DEFAULT_BUDGETS = (0.4, 0.7, 1.0)
+T = 10
+TRAIN_T = 100
+N = 2
 
-COLS = ("arch", "shape", "profile", "dominant", "compute_s", "memory_s",
-        "collective_s", "roofline_fraction", "useful_flops_ratio")
+COLS = ("arch", "budget", "cached", "analytic_gflops", "xla_gflops",
+        "ratio", "bytes_mb", "wall_ms", "achieved_gflops_s", "intensity")
 
 
-def load(mesh: str = "pod16x16"):
-    rows = []
-    for f in sorted((RESULTS / mesh).glob("*.json")):
-        r = json.loads(f.read_text())
-        if r.get("status") == "ok":
-            t = r["roofline"]
-            rows.append({
-                "arch": r["arch"], "shape": r["shape"],
-                "profile": r.get("profile", "?"),
-                "dominant": t["dominant"],
-                "compute_s": t["compute_s"], "memory_s": t["memory_s"],
-                "collective_s": t["collective_s"],
-                "roofline_fraction": t["roofline_fraction"],
-                "useful_flops_ratio": t.get("useful_flops_ratio", 0.0),
-                "mem_temp_gb": (r["memory_analysis"].get("temp_size_in_bytes")
-                                or 0) / r.get("n_devices", 1) / 2 ** 30,
-                "args_gb": r.get("sharded_args_bytes_per_device", 0) / 2 ** 30,
-            })
-        elif r.get("status") == "skipped":
-            rows.append({"arch": r["arch"], "shape": r["shape"],
-                         "profile": "-", "dominant": "SKIPPED",
-                         "compute_s": 0, "memory_s": 0, "collective_s": 0,
-                         "roofline_fraction": 0, "useful_flops_ratio": 0,
-                         "mem_temp_gb": 0, "args_gb": 0,
-                         "skip": r.get("skip_reason", "")})
-        else:
-            rows.append({"arch": r["arch"], "shape": r["shape"],
-                         "profile": "-", "dominant": "ERROR",
-                         "compute_s": 0, "memory_s": 0, "collective_s": 0,
-                         "roofline_fraction": 0, "useful_flops_ratio": 0,
-                         "mem_temp_gb": 0, "args_gb": 0})
+def registry_rows(arch: str = "dit-xl-2",
+                  budgets: Sequence[float] = DEFAULT_BUDGETS,
+                  cache_interval: Optional[int] = 2,
+                  attn_backend: str = "dense") -> List[Dict]:
+    """Sample each budget (plain + cached when ``cache_interval``),
+    harvest compiled costs, and reconcile against the analytic ledger."""
+    import jax
+
+    from repro.cache.policy import CacheSpec
+    from repro.configs import get_config
+    from repro.diffusion import schedule as sch
+    from repro.models import dit as dit_mod
+    from repro.pipeline import FlexiPipeline, SamplingPlan
+    from repro.telemetry.profile import CompiledCostRegistry
+
+    cfg = get_config(arch).reduced()
+    params = dit_mod.init_dit(cfg, jax.random.PRNGKey(0))
+    pipe = FlexiPipeline(params, cfg, sch.linear_schedule(TRAIN_T))
+    pipe.enable_cost_profiling()
+    registry = CompiledCostRegistry()
+
+    variants = [(b, None) for b in budgets]
+    if cache_interval is not None:
+        variants += [(b, CacheSpec(policy="interval",
+                                   interval=cache_interval))
+                     for b in budgets]
+    keys_of: Dict[tuple, tuple] = {}
+    for b, cache in variants:
+        plan = SamplingPlan(T=T, budget=b, guidance_scale=1.5,
+                            attn_backend=attn_backend, cache=cache)
+        plan.validate(cfg)
+        before = set(pipe.runners())
+        res = pipe.sample(plan, N, jax.random.PRNGKey(17))
+        jax.block_until_ready(res.x0)
+        # time a warm replay so wall reflects execution, not tracing
+        t0 = time.perf_counter()
+        res = pipe.sample(plan, N, jax.random.PRNGKey(17))
+        jax.block_until_ready(res.x0)
+        wall = time.perf_counter() - t0
+        new = set(pipe.runners()) - before
+        assert len(new) == 1, f"expected one runner per variant, got {new}"
+        rkey = next(iter(new))
+        keys_of[(b, cache is not None)] = rkey
+        registry.observe_wall(rkey, wall)
+    registry.harvest(pipe)
+
+    rows: List[Dict] = []
+    for (b, cached), rkey in sorted(keys_of.items()):
+        rec = registry.records[rkey]
+        w = registry.walls[rkey]
+        row: Dict = {
+            "arch": arch, "budget": b, "cached": cached,
+            "analytic_gflops": rec.analytic_body / 1e9,
+            "xla_gflops": (rec.xla_flops or 0.0) / 1e9,
+            "ratio": rec.xla_over_analytic or 0.0,
+            "bytes_mb": (rec.xla_bytes or 0.0) / 1e6,
+            "wall_ms": w.ewma_s * 1e3,
+            "achieved_gflops_s": (rec.analytic_body / w.ewma_s / 1e9
+                                  if w.ewma_s > 0 else 0.0),
+            "intensity": ((rec.xla_flops or 0.0)
+                          / max(rec.xla_bytes or 0.0, 1.0)),
+            "error": rec.error,
+        }
+        rows.append(row)
     return rows
 
 
-def markdown_table(mesh: str = "pod16x16") -> str:
-    rows = load(mesh)
-    out = ["| arch | shape | prof | dominant | compute s | memory s | "
-           "collective s | roofline frac | useful/HLO | mem GiB/dev |",
+def markdown_table(rows: Sequence[Dict]) -> str:
+    out = ["| arch | budget | cached | analytic G | xla G | xla/analytic "
+           "| bytes MB | wall ms | achieved G/s | flops/byte |",
            "|---|---|---|---|---|---|---|---|---|---|"]
     for r in rows:
-        if r["dominant"] in ("SKIPPED", "ERROR"):
-            out.append(f"| {r['arch']} | {r['shape']} | - | {r['dominant']} "
-                       f"| – | – | – | – | – | – |")
-        else:
-            out.append(
-                f"| {r['arch']} | {r['shape']} | {r['profile']} "
-                f"| **{r['dominant']}** | {r['compute_s']:.3g} "
-                f"| {r['memory_s']:.3g} | {r['collective_s']:.3g} "
-                f"| {r['roofline_fraction']:.3f} "
-                f"| {r['useful_flops_ratio']:.2f} "
-                f"| {r['mem_temp_gb'] + r['args_gb']:.2f} |")
+        if r.get("error"):
+            out.append(f"| {r['arch']} | {r['budget']:.2f} | "
+                       f"{'y' if r['cached'] else 'n'} | ERROR: "
+                       f"{r['error']} | | | | | | |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['budget']:.2f} "
+            f"| {'y' if r['cached'] else 'n'} "
+            f"| {r['analytic_gflops']:.3f} | {r['xla_gflops']:.3f} "
+            f"| {r['ratio']:.2f} | {r['bytes_mb']:.1f} "
+            f"| {r['wall_ms']:.1f} | {r['achieved_gflops_s']:.2f} "
+            f"| {r['intensity']:.2f} |")
     return "\n".join(out)
 
 
 def bench_roofline():
     from benchmarks.common import csv_row
-    for mesh in ("pod16x16", "pod2x16x16"):
-        if not (RESULTS / mesh).exists():
+    rows = registry_rows()
+    for r in rows:
+        if r.get("error"):
+            csv_row(f"roofline_{r['arch']}_b{r['budget']:.2f}"
+                    f"{'_cached' if r['cached'] else ''}", 0.0,
+                    f"ERROR:{r['error']}")
             continue
-        for r in load(mesh):
-            if r["dominant"] in ("SKIPPED", "ERROR"):
-                csv_row(f"roofline_{mesh}_{r['arch']}_{r['shape']}", 0.0,
-                        r["dominant"])
-            else:
-                csv_row(
-                    f"roofline_{mesh}_{r['arch']}_{r['shape']}", 0.0,
-                    f"dominant={r['dominant']};frac={r['roofline_fraction']:.3f};"
-                    f"c={r['compute_s']:.3g};m={r['memory_s']:.3g};"
-                    f"x={r['collective_s']:.3g}")
+        csv_row(
+            f"roofline_{r['arch']}_b{r['budget']:.2f}"
+            f"{'_cached' if r['cached'] else ''}",
+            r["wall_ms"] * 1e3,
+            f"analytic={r['analytic_gflops']:.3f}G;"
+            f"xla={r['xla_gflops']:.3f}G;ratio={r['ratio']:.2f};"
+            f"achieved={r['achieved_gflops_s']:.2f}G/s;"
+            f"intensity={r['intensity']:.2f}")
 
 
 if __name__ == "__main__":
-    print(markdown_table(sys.argv[1] if len(sys.argv) > 1 else "pod16x16"))
+    print(markdown_table(registry_rows(
+        sys.argv[1] if len(sys.argv) > 1 else "dit-xl-2")))

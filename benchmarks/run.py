@@ -9,6 +9,14 @@ not stdout scrollback.
   PYTHONPATH=src python -m benchmarks.run                  # all
   PYTHONPATH=src python -m benchmarks.run fig6 fig12       # substring filter
   PYTHONPATH=src python -m benchmarks.run --suite pipeline # named suite
+  PYTHONPATH=src python -m benchmarks.run --suite profile --strict-analysis
+
+Besides the per-run ``BENCH_<suite>.json`` (gitignored), each run also
+folds its suite's headline numbers into the COMMITTED compact
+``benchmarks/BENCH.json`` — one entry per suite with git sha — so the
+perf trajectory is visible in plain git history. ``--strict-analysis``
+pre-flights ``python -m repro.analysis --strict src/repro`` and refuses
+to run any bench when the static-analysis gate fails.
 """
 from __future__ import annotations
 
@@ -34,7 +42,12 @@ SUITES = {
     "attention": ("attention_kernel",),
     "analysis": ("static_analysis",),
     "telemetry": ("telemetry",),
+    "profile": ("compiled_profile",),
 }
+
+#: the committed perf-trajectory file (unlike BENCH_<suite>.json, this
+#: one is NOT gitignored — regressions show up in plain `git log -p`)
+TRAJECTORY_PATH = ARTIFACT_DIR / "BENCH.json"
 
 
 def _git_sha() -> str:
@@ -89,11 +102,46 @@ def write_artifact(suite: str, summaries: dict, sha: str,
     return out
 
 
+def _headline(node, prefix: str = "", out: dict = None) -> dict:
+    """Flatten one bench summary to dotted-key numeric headlines (the
+    same paths ``baselines.json`` bounds use); strings/lists dropped."""
+    if out is None:
+        out = {}
+    if isinstance(node, dict):
+        for k, v in sorted(node.items()):
+            _headline(v, f"{prefix}.{k}" if prefix else str(k), out)
+    elif isinstance(node, bool):
+        out[prefix] = int(node)
+    elif isinstance(node, (int, float)):
+        out[prefix] = node
+    return out
+
+
+def update_trajectory(suite: str, summaries: dict, sha: str,
+                      path: Path = TRAJECTORY_PATH) -> Path:
+    """Fold one suite run's headline numbers into the committed compact
+    trajectory file: other suites' entries are preserved, this suite's
+    entry is replaced. No timestamp — the file must be byte-stable for a
+    given (sha, results) so re-runs don't dirty the tree."""
+    doc = {"suites": {}}
+    if path.exists():
+        try:
+            doc = json.loads(path.read_text())
+        except json.JSONDecodeError:
+            pass
+    doc.setdefault("suites", {})[suite] = {
+        "git_sha": sha,
+        "benches": {name: _headline(s) for name, s in summaries.items()},
+    }
+    path.write_text(json.dumps(doc, indent=1, sort_keys=True) + "\n")
+    return path
+
+
 def main() -> None:
     from benchmarks import (bench_analysis, bench_attention, bench_cache,
                             bench_core, bench_distributed, bench_extensions,
                             bench_modalities, bench_perf, bench_pipeline,
-                            bench_serving, bench_telemetry)
+                            bench_profile, bench_serving, bench_telemetry)
     from benchmarks.baseline import BaselineRegression
     from benchmarks.roofline_table import bench_roofline
 
@@ -117,9 +165,25 @@ def main() -> None:
         ("attention_kernel", bench_attention.bench_attention),
         ("static_analysis", bench_analysis.bench_analysis),
         ("telemetry", bench_telemetry.bench_telemetry),
+        ("compiled_profile", bench_profile.bench_profile),
         ("roofline", bench_roofline),
     ]
     argv = sys.argv[1:]
+    if "--strict-analysis" in argv:
+        argv.remove("--strict-analysis")
+        root = Path(__file__).resolve().parents[1]
+        import os
+        env = dict(os.environ)
+        env["PYTHONPATH"] = (str(root / "src")
+                             + (os.pathsep + env["PYTHONPATH"]
+                                if env.get("PYTHONPATH") else ""))
+        rc = subprocess.run(
+            [sys.executable, "-m", "repro.analysis", "--strict",
+             "src/repro"], cwd=root, env=env).returncode
+        if rc != 0:
+            raise SystemExit("# strict-analysis pre-flight failed "
+                             f"(exit {rc}); refusing to run benches")
+        print("# strict-analysis pre-flight passed", flush=True)
     suite = None
     if "--suite" in argv:
         i = argv.index("--suite")
@@ -154,9 +218,12 @@ def main() -> None:
     finally:
         sys.stdout = cap._wrapped
     if cap.summaries:
-        out = write_artifact(suite or "all", cap.summaries, _git_sha())
+        sha = _git_sha()
+        out = write_artifact(suite or "all", cap.summaries, sha)
         print(f"# wrote {out} ({len(cap.summaries)} bench summaries)",
               flush=True)
+        traj = update_trajectory(suite or "all", cap.summaries, sha)
+        print(f"# updated trajectory {traj}", flush=True)
     if regressions:
         for name, msg in regressions:
             print(f"# BASELINE REGRESSION in {name}: {msg}",

@@ -80,6 +80,10 @@ RULE_IDS: Dict[str, str] = {
     "telemetry-tap-host-sync": "tap arrays forced to host on the dispatch "
                                "path (np.asarray/.item/float outside the "
                                "aggregate sink)",
+    "telemetry-attribution-device": "telemetry/attribution.py touches "
+                                    "jax/numpy/device values — attribution "
+                                    "runs on the serving hot path and must "
+                                    "stay pure host integer arithmetic",
 }
 
 

@@ -19,8 +19,14 @@ sink. Two rules keep that contract honest as the code grows:
   the tap helpers (traced), ``TapSample`` construction,
   ``TapAggregator.add`` — it would block the dispatch path on the
   device.
+* ``telemetry-attribution-device`` — ``telemetry/attribution.py`` runs
+  per dispatch on the serving hot path and is specified as pure host
+  integer arithmetic (DESIGN.md §profiling): importing jax or numpy, or
+  calling any device-sync primitive there, would let an innocent edit
+  add a hidden per-dispatch host sync. The rule statically rejects the
+  whole category.
 
-Both are scoped to ``src/repro/telemetry/``; the general trace-safety
+All are scoped to ``src/repro/telemetry/``; the general trace-safety
 rule covers the rest of the repo.
 """
 from __future__ import annotations
@@ -62,6 +68,24 @@ class TelemetryRule:
             return []
         findings: List[Finding] = []
         is_taps = path.endswith("taps.py")
+        is_attr = path.endswith("attribution.py")
+        if is_attr:
+            for node in ast.walk(tree):
+                mods = []
+                if isinstance(node, ast.Import):
+                    mods = [a.name for a in node.names]
+                elif isinstance(node, ast.ImportFrom) and node.module:
+                    mods = [node.module]
+                for mod in mods:
+                    root = mod.split(".")[0]
+                    if root in ("jax", "jaxlib", "numpy", "np"):
+                        findings.append(Finding(
+                            "telemetry-attribution-device", "error", path,
+                            node.lineno,
+                            f"attribution.py imports `{mod}` — per-request "
+                            f"attribution is pure host integer arithmetic "
+                            f"on the dispatch hot path; device libraries "
+                            f"are banned here", "<module>"))
         stack: List[str] = []
 
         class V(ast.NodeVisitor):
@@ -85,6 +109,20 @@ class TelemetryRule:
                         f"telemetry code calls `{'.'.join(parts)}` — a "
                         f"host callback would ride into every tapped "
                         f"jaxpr (taps must be data, not structure)", sym))
+                elif is_attr:
+                    is_np = (len(parts) >= 2
+                             and parts[0] in ("np", "numpy", "jnp", "jax"))
+                    is_sync = name in ("device_get", "block_until_ready")
+                    is_item = (isinstance(node.func, ast.Attribute)
+                               and node.func.attr == "item")
+                    if is_np or is_sync or is_item:
+                        findings.append(Finding(
+                            "telemetry-attribution-device", "error", path,
+                            node.lineno,
+                            f"`{'.'.join(parts) or 'item'}` in "
+                            f"attribution.py — attribution must stay pure "
+                            f"host integer arithmetic (no device values, "
+                            f"no syncs) on the dispatch hot path", sym))
                 elif is_taps and not any(f in TAP_SINKS for f in stack):
                     is_np = (len(parts) >= 2
                              and parts[0] in ("np", "numpy")

@@ -150,12 +150,22 @@ def _serve_dit_engine(cfg, args, pipe, plans) -> None:
               f"{cfg.num_layers} blocks")
     trace_path = getattr(args, "trace", None)
     metrics_interval = getattr(args, "metrics_interval", 0) or 0
+    profile = bool(getattr(args, "profile", False))
+    pm_dir = getattr(args, "postmortem_dir", None)
+    slo_p99 = getattr(args, "slo_p99", None)
     telemetry = None
-    if trace_path or metrics_interval:
+    if trace_path or metrics_interval or profile or pm_dir or slo_p99:
         # tracing implies taps: the tapped step family is bit-identical
         # and compile-parallel to the untapped one (DESIGN.md §telemetry)
-        telemetry = Telemetry(taps=True)
+        watchdog = None
+        if pm_dir or slo_p99:
+            from repro.telemetry.watchdog import Watchdog, WatchdogConfig
+            watchdog = Watchdog(WatchdogConfig(p99_slo_s=slo_p99))
+        telemetry = Telemetry(taps=True, profile=profile,
+                              watchdog=watchdog, postmortem_dir=pm_dir)
         print(f"[telemetry] spans+taps on"
+              + (", compiled-cost profiling on" if profile else "")
+              + (f", post-mortems -> {pm_dir}" if pm_dir else "")
               + (f", trace -> {trace_path}" if trace_path else ""))
     engine = ServingEngine(pipe, plans, policy=policy,
                            max_tokens_per_step=max_tokens, cache=cache,
@@ -189,7 +199,9 @@ def _serve_dit_engine(cfg, args, pipe, plans) -> None:
                     engine.metrics.summary(wall=time.time() - t0),
                     taps=(telemetry.taps.aggregate()
                           if telemetry is not None else None),
-                    compile_stats=engine.cache_stats()))
+                    compile_stats=engine.cache_stats(),
+                    spans=(telemetry.recorder.counters()
+                           if telemetry is not None else None)))
         return out
 
     # warmup wave compiles the bucket layouts this workload visits ...
@@ -239,7 +251,46 @@ def _serve_dit_engine(cfg, args, pipe, plans) -> None:
             print(f"[taps] eps_norm_mean={agg['eps_norm']['mean']:.4g} "
                   f"over {agg['request_steps']} request-steps")
         print(tel_export.metrics_line(m, taps=agg, compile_stats=stats,
+                                      spans=telemetry.recorder.counters(),
                                       tag="metrics-final"))
+        if profile:
+            # harvest AOT compiled costs for the whole warm set and
+            # reconcile: analytic ledger vs XLA vs measured wall
+            hv = telemetry.profile.harvest(pipe)
+            hstats = engine.cache_stats()
+            assert hstats["compiled"] == stats["compiled"], \
+                "AOT cost harvest must not touch the jit compile cache"
+            print(f"[profile] harvest: {hv}")
+            for line in telemetry.profile.report_lines():
+                print(line)
+            cons = telemetry.attribution.conservation()
+            print(f"[attrib] conservation deltas {cons} over "
+                  f"{len(telemetry.attribution.finalized)} finalized "
+                  f"requests (all must be 0)")
+            for r in results[:4]:
+                if r.cost is not None:
+                    c = r.cost
+                    print(f"[attrib] req={c.request_id} "
+                          f"flops={c.flops / 1e9:.2f}G "
+                          f"bytes={c.bytes / 1e6:.1f}MB "
+                          f"wall={c.wall_ms:.1f}ms "
+                          f"dispatches={c.dispatches} "
+                          f"queue_wait={c.queue_wait_s:.3f}s")
+            calib = (engine.controller.calibration
+                     if engine.controller is not None else None)
+            if calib:
+                fams = {m: f"{v:.3e}"
+                        for m, v in calib["per_family"].items()}
+                print(f"[calib] wall_per_analytic_flop "
+                      f"global={calib['global']:.3e} per_family={fams}")
+        if telemetry.watchdog is not None and telemetry.watchdog.alerts:
+            for a in telemetry.watchdog.alerts:
+                print(f"[alert] {a.kind} step={a.step} value={a.value:.4g} "
+                      f"limit={a.limit:.4g} {a.detail}")
+            if telemetry.watchdog.dumps_written:
+                print(f"[postmortem] "
+                      f"{len(telemetry.watchdog.dumps_written)} bundle(s) "
+                      f"-> {telemetry.watchdog.dumps_written}")
         if trace_path:
             # drift/eps counter tracks: the timeline shows WHEN replay
             # error spiked, aligned with the dispatch spans
@@ -414,6 +465,20 @@ def main():
                     metavar="N",
                     help="emit one structured [metrics] line every N "
                          "engine steps (0 = off); also enables taps")
+    ap.add_argument("--profile", action="store_true",
+                    help="compiled-cost profiling (DESIGN.md §profiling): "
+                         "harvest XLA cost/memory analysis for every "
+                         "compiled runner, measure per-dispatch wall, "
+                         "attribute served cost per request, and print "
+                         "the analytic/XLA/wall reconciliation report")
+    ap.add_argument("--postmortem-dir", default=None, metavar="DIR",
+                    help="enable the SLO watchdog + flight recorder: "
+                         "alerts and uncaught engine exceptions dump a "
+                         "post-mortem bundle (spans, engine/cache/queue "
+                         "snapshot, attribution, compiled costs) here")
+    ap.add_argument("--slo-p99", type=float, default=None, metavar="SEC",
+                    help="p99 latency SLO for the watchdog's rolling "
+                         "breach detector (default: off)")
     ap.add_argument("--mesh", default=None,
                     help="DATAxSEQ device mesh for the DiT path, e.g. 1x8: "
                          "data-parallel replicas x sequence-parallel shards")

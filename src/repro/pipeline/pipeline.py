@@ -79,6 +79,10 @@ class FlexiPipeline:
         self._merged: Dict[int, Params] = {}
         self._hits = 0
         self._misses = 0
+        # (runner key) -> (arg ShapeDtypeStruct tree, analytic FLOPs per
+        # call) for sample()-path runners, recorded only when
+        # enable_cost_profiling() was called (DESIGN.md §profiling)
+        self.profile_specs: Optional[Dict[Tuple, Tuple[Any, float]]] = None
 
     def set_mesh(self, mesh: Optional[Mesh]) -> None:
         """Attach / swap the device mesh. Compiled runners are keyed by the
@@ -119,6 +123,31 @@ class FlexiPipeline:
             self._misses += 1
             cache[key] = build()
         return cache[key]
+
+    def runners(self) -> Dict[Tuple, Callable]:
+        """Read-only view of the compiled-runner cache. The compiled-cost
+        registry (telemetry/profile.py) harvests AOT cost/memory analysis
+        from these; the keys are the zero-recompile cache keys."""
+        return dict(self._runners)
+
+    def enable_cost_profiling(self) -> None:
+        """Start recording ``(arg spec, analytic FLOPs)`` for
+        sample()-path runners so ``CompiledCostRegistry.harvest`` can
+        AOT-lower them. Packed runners need no recording — their specs
+        derive from the cache key alone. Idempotent; recording is a
+        host-side dict insert per ``sample`` call (no device work, no
+        effect on jaxprs or latents)."""
+        if self.profile_specs is None:
+            self.profile_specs = {}
+
+    def _record_spec(self, runner_key: Tuple, args: Tuple,
+                     analytic_flops: float) -> None:
+        if self.profile_specs is None:
+            return
+        specs = jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(jnp.shape(a),
+                                           jnp.asarray(a).dtype), args)
+        self.profile_specs[runner_key] = (specs, float(analytic_flops))
 
     # ------------------------------------------------------------------
     # Conditioning
@@ -407,6 +436,8 @@ class FlexiPipeline:
                 self._runners, ("flow",) + sig,
                 lambda: self._flow_runner(plan, schedule, engine))
             x0 = runner(param_sets, x_T, y)
+            self._record_spec(("flow",) + sig, (param_sets, x_T, y),
+                              plan.flops(self.cfg, batch=n))
         elif plan.cache is not None:
             from repro.cache import ledger as cache_ledger
             from repro.cache import policy as cache_policy
@@ -427,6 +458,11 @@ class FlexiPipeline:
                 self.cfg, schedule, ts, plan.cache,
                 cfg_scale_active=plan.guidance_active,
                 lora_unmerged=(variant == "unmerged"))
+            self._record_spec(
+                ("cached",) + sig
+                + (plan.cache.resolve_split(self.cfg.num_layers), taps),
+                (param_sets, x_T, y, null, run_key, text_mask,
+                 null_text_mask, masks), n * fl)
             trace = {"schedule": schedule, "timesteps": ts,
                      "refresh_masks": tuple(np.asarray(m) for m in masks),
                      "cache_refreshes": n_refresh,
@@ -444,6 +480,10 @@ class FlexiPipeline:
                                             engine))
             x0 = runner(param_sets, x_T, y, null, run_key, text_mask,
                         null_text_mask)
+            self._record_spec(("static",) + sig,
+                              (param_sets, x_T, y, null, run_key,
+                               text_mask, null_text_mask),
+                              plan.flops(self.cfg, batch=n))
         return SampleResult(
             x0=x0, flops=plan.flops(self.cfg, batch=n),
             relative_compute=plan.relative_compute(self.cfg),

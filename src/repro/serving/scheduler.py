@@ -49,6 +49,7 @@ from repro.serving.controller import BudgetController
 from repro.serving.metrics import RequestRecord, ServingMetrics
 from repro.serving.queue import Request, RequestQueue
 from repro.telemetry import TapSample, Telemetry
+from repro.telemetry.profile import packed_key as profile_packed_key
 from repro.telemetry.trace import REQUEST_PID
 
 ENGINE_POLICIES = ("fifo", "edf", "degrade")
@@ -105,6 +106,9 @@ class ServedResult:
     x0: jax.Array
     budget_served: float
     record: RequestRecord
+    # measured per-request served cost (telemetry.attribution.ServedCost)
+    # when the engine runs with profiling telemetry; None otherwise
+    cost: Optional[Any] = None
 
 
 class ServingEngine:
@@ -141,6 +145,16 @@ class ServingEngine:
         self.telemetry = telemetry
         self._taps = telemetry is not None and telemetry.taps_enabled
         self._rec = telemetry.recorder if telemetry is not None else None
+        # profiling (DESIGN.md §profiling): compiled-cost registry +
+        # per-request attribution + SLO watchdog. Profiling only adds a
+        # per-dispatch block_until_ready for honest wall measurement —
+        # same runners, same keys, same latents bit-for-bit
+        self._profile = telemetry.profile if telemetry is not None else None
+        self._attr = telemetry.attribution if telemetry is not None else None
+        self._watchdog = telemetry.watchdog if telemetry is not None else None
+        self._wd_ticks = 0
+        if self._profile is not None:
+            pipe.enable_cost_profiling()
         if telemetry is not None:
             telemetry.bind_clock(self.clock)
         self.policy = policy
@@ -649,7 +663,9 @@ class ServingEngine:
             # executable — the stall every frozen-serving SLA fears
             self._rec.complete("compile", t_fetch, self.clock(),
                                args={"groups": str(layout.groups), "k": k})
-        t_disp = self.clock() if self._rec is not None else 0.0
+        t_disp = (self.clock()
+                  if self._rec is not None or self._profile is not None
+                  else 0.0)
         tap = None
         if self.cache is not None:
             out = runner(self.pipe.params, tuple(xs),
@@ -667,6 +683,54 @@ class ServingEngine:
             out = runner(self.pipe.params, tuple(xs), tuple(metas),
                          tuple(keys))
             (outs, tap) = out if self._taps else (out, None)
+        if self._profile is not None:
+            # profiling waits on the device once per dispatch: wall is
+            # meaningless without it. Measurement overhead only — the
+            # executables and their outputs are untouched
+            jax.block_until_ready(outs)
+            wall_s = self.clock() - t_disp
+            pkey = profile_packed_key(
+                layout, solver=self.solver,
+                guidance_scale=self.guidance_scale, clip_x0=self.clip_x0,
+                k_steps=k, cache_split=self.cache_split,
+                attn_backend=self.attn_backend, taps=self._taps)
+            self._profile.observe_wall(pkey, wall_s)
+            if self._attr is not None:
+                rids: List[int] = []
+                weights: List[float] = []
+                for gi, ((mode, _cap), sel) in enumerate(
+                        zip(layout.groups, picked)):
+                    full = dit_nfe_flops(self.cfg, mode,
+                                         attn_backend=self.attn_backend)
+                    deep = (cache_ledger.deep_block_flops(
+                        self.cfg, mode, self.cache_split,
+                        attn_backend=self.attn_backend)
+                        if self.cache is not None else 0.0)
+                    for i, f in enumerate(sel):
+                        rids.append(f.req.id)
+                        if self.cache is not None:
+                            # refresh-aware ledger share: skip steps pay
+                            # shallow blocks only
+                            w = mult * sum(
+                                full if r else full - deep
+                                for r in rf_real[gi][:, i])
+                        else:
+                            w = mult * k * full
+                        weights.append(float(w))
+                if rids:
+                    self._attr.attribute_dispatch(
+                        time=now,
+                        label=f"k={k} groups={layout.groups}",
+                        request_ids=rids, weights=weights,
+                        wall_ns=int(wall_s * 1e9),
+                        flops=int(step_flops),
+                        bytes_=self._profile.xla_bytes(pkey))
+            if self.controller is not None:
+                fams = {mode for (mode, _c), sel
+                        in zip(layout.groups, picked) if sel}
+                self.controller.observe_calibration(
+                    fams.pop() if len(fams) == 1 else None,
+                    step_flops, wall_s)
         if self._rec is not None:
             self._rec.complete(
                 "dispatch", t_disp, self.clock(),
@@ -727,6 +791,26 @@ class ServingEngine:
         if self._rec is not None:
             self._rec.counter("engine", {"inflight": len(self._inflight),
                                          "queued": len(self._queue)})
+        if self._watchdog is not None:
+            self._wd_ticks += 1
+            drift = None
+            if self._taps and (self._wd_ticks
+                               % self._watchdog.config.taps_every == 0):
+                # the one deliberate host sync: tap aggregation, at the
+                # watchdog's configured cadence, never per dispatch
+                sub = self.telemetry.taps.aggregate().get("drift")
+                if sub:
+                    drift = float(sub.get("max", 0.0))
+            self._watchdog.observe_step(
+                now=now, queued=len(self._queue),
+                inflight=len(self._inflight),
+                compiled=self.pipe.cache_stats()["compiled"],
+                latencies=[r.latency for r in self.metrics.requests],
+                drift_max=drift)
+            if self._watchdog.should_dump():
+                self._watchdog.dump(
+                    reason="alert", engine_snapshot=self.snapshot_state(),
+                    attribution=self._attr, registry=self._profile)
         self._last_step_at = now
         return finished
 
@@ -746,6 +830,11 @@ class ServingEngine:
             deadline=f.req.deadline, budget_requested=f.req.budget,
             budget_served=f.lp.level, tokens=tokens, flops=f.lp.flops)
         self.metrics.record_request(rec)
+        cost = None
+        if self._attr is not None:
+            cost = self._attr.finalize(
+                f.req.id, queue_wait_s=f.admit - f.req.arrival,
+                budget=str(f.lp.level))
         if self._rec is not None:
             # one row per request under the "requests" track (tid = id)
             self._rec.complete(
@@ -756,18 +845,49 @@ class ServingEngine:
                       "steps": len(f.lp.ts), "flops": f.lp.flops,
                       "queue_wait": f.admit - f.req.arrival})
         return ServedResult(request=f.req, x0=f.x,
-                            budget_served=f.lp.level, record=rec)
+                            budget_served=f.lp.level, record=rec,
+                            cost=cost)
 
     # ------------------------------------------------------------------
 
     def run(self, max_steps: int = 100_000) -> List[ServedResult]:
-        """Drain: step until queue and in-flight are empty."""
+        """Drain: step until queue and in-flight are empty. An uncaught
+        exception first dumps a post-mortem bundle (when a watchdog with
+        a postmortem dir is attached), then propagates unchanged."""
         out: List[ServedResult] = []
         steps = 0
-        while (self._queue or self._inflight) and steps < max_steps:
-            out.extend(self.step())
-            steps += 1
+        try:
+            while (self._queue or self._inflight) and steps < max_steps:
+                out.extend(self.step())
+                steps += 1
+        except Exception:
+            if self._watchdog is not None:
+                self._watchdog.dump(
+                    reason="engine-exception",
+                    engine_snapshot=self.snapshot_state(),
+                    attribution=self._attr, registry=self._profile)
+            raise
         return out
+
+    def snapshot_state(self) -> Dict[str, Any]:
+        """Flight-recorder view of engine state: queue, in-flight
+        request positions, compile-cache counters, cache residency. All
+        host-side — safe to call from the crash path."""
+        snap: Dict[str, Any] = {
+            "queued": [{"id": r.id, "budget": r.budget,
+                        "deadline": r.deadline, "arrival": r.arrival}
+                       for r in self._queue._pending],
+            "inflight": [{"id": f.req.id, "level": f.lp.level,
+                          "step": f.step, "of": len(f.lp.ts),
+                          "mode": f.mode, "admit": f.admit,
+                          "cache_slot": f.cache_slot}
+                         for f in self._inflight],
+            "compile": self.pipe.cache_stats(),
+            "policy": self.policy,
+        }
+        if self.store is not None:
+            snap["cache_bytes"] = self.store.bytes_resident
+        return snap
 
     @property
     def idle(self) -> bool:

@@ -52,11 +52,13 @@ def flatten_metrics(snapshot: Mapping[str, Any],
 def build_snapshot(summary: Optional[Mapping[str, Any]] = None,
                    cache: Optional[Mapping[str, Any]] = None,
                    compile_stats: Optional[Mapping[str, Any]] = None,
-                   taps: Optional[Mapping[str, Any]] = None
+                   taps: Optional[Mapping[str, Any]] = None,
+                   spans: Optional[Mapping[str, Any]] = None
                    ) -> Dict[str, Any]:
     """Assemble the canonical snapshot from the engine's pieces
     (``metrics.summary(wall)``, ``metrics.cache_summary()``,
-    ``pipe.cache_stats()``, ``telemetry.taps.aggregate()``)."""
+    ``pipe.cache_stats()``, ``telemetry.taps.aggregate()``,
+    ``recorder.counters()``)."""
     snap: Dict[str, Any] = {}
     if summary:
         snap["serving"] = dict(summary)
@@ -66,14 +68,18 @@ def build_snapshot(summary: Optional[Mapping[str, Any]] = None,
         snap["compile"] = dict(compile_stats)
     if taps:
         snap["taps"] = dict(taps)
+    if spans:
+        snap["spans"] = dict(spans)
     return snap
 
 
 def json_snapshot(summary: Optional[Mapping[str, Any]] = None,
                   cache: Optional[Mapping[str, Any]] = None,
                   compile_stats: Optional[Mapping[str, Any]] = None,
-                  taps: Optional[Mapping[str, Any]] = None) -> str:
-    return json.dumps(build_snapshot(summary, cache, compile_stats, taps),
+                  taps: Optional[Mapping[str, Any]] = None,
+                  spans: Optional[Mapping[str, Any]] = None) -> str:
+    return json.dumps(build_snapshot(summary, cache, compile_stats, taps,
+                                     spans),
                       sort_keys=True)
 
 
@@ -81,10 +87,11 @@ def prometheus_text(summary: Optional[Mapping[str, Any]] = None,
                     cache: Optional[Mapping[str, Any]] = None,
                     compile_stats: Optional[Mapping[str, Any]] = None,
                     taps: Optional[Mapping[str, Any]] = None,
+                    spans: Optional[Mapping[str, Any]] = None,
                     prefix: str = "repro") -> str:
     """Prometheus exposition text (type: gauge) for the snapshot."""
     flat = flatten_metrics(build_snapshot(summary, cache, compile_stats,
-                                          taps), prefix)
+                                          taps, spans), prefix)
     lines = []
     for name in sorted(flat):
         lines.append(f"# TYPE {name} gauge")
@@ -97,12 +104,14 @@ def prometheus_text(summary: Optional[Mapping[str, Any]] = None,
 _LINE_ORDER = ("served", "p50", "p99", "deadline_hit_rate", "tokens_per_s",
                "packing_efficiency", "cache_hit_rate",
                "attn_block_skip_rate", "drift_mean", "drift_max",
-               "eps_norm_mean", "compiled")
+               "eps_norm_mean", "compiled", "span_dropped",
+               "span_occupancy")
 
 
 def metrics_line(summary: Mapping[str, Any],
                  taps: Optional[Mapping[str, Any]] = None,
                  compile_stats: Optional[Mapping[str, Any]] = None,
+                 spans: Optional[Mapping[str, Any]] = None,
                  tag: str = "metrics") -> str:
     """The periodic structured log line: ``[metrics] served=12 ...``."""
     flat: Dict[str, float] = {}
@@ -116,6 +125,11 @@ def metrics_line(summary: Mapping[str, Any],
                         flat[f"{k}_{stat}"] = float(sub[stat])
     if compile_stats and "compiled" in compile_stats:
         flat["compiled"] = float(compile_stats["compiled"])
+    if spans:
+        if "events_dropped" in spans:
+            flat["span_dropped"] = float(spans["events_dropped"])
+        if "occupancy" in spans:
+            flat["span_occupancy"] = float(spans["occupancy"])
     keys = [k for k in _LINE_ORDER if k in flat]
     keys += sorted(k for k in flat if k not in _LINE_ORDER)
     body = " ".join(f"{k}={flat[k]:.4g}" for k in keys)

@@ -1,0 +1,357 @@
+"""Compiled-cost registry (DESIGN.md §profiling).
+
+The analytic FLOPs ledger (``core.scheduler`` / ``core.packing`` /
+``cache.ledger``) prices every budget decision the serving stack makes —
+but nothing in PR 1–7 verified that what XLA *compiles* agrees with the
+arithmetic. This module closes the loop: it harvests
+``Compiled.cost_analysis()`` / ``memory_analysis()`` from every
+executable in :class:`~repro.pipeline.pipeline.FlexiPipeline`'s runner
+caches — via the jax AOT path (``jitted.lower(*specs).compile()``),
+which never touches the jit dispatch cache, so harvesting provably adds
+**zero recompiles** (``cache_stats()['compiled']`` is flat across a
+harvest) — and reconciles three numbers per step family:
+
+* **analytic** — the ledger's count of useful work (block-sparse
+  attention priced at the tiles the kernel visits, cache-skip steps at
+  shallow blocks only);
+* **XLA** — what the compiled HLO claims it computes. Caveats the
+  report carries explicitly: on CPU the HLO cost model counts a
+  ``while``/``scan`` body ONCE (trip-count-blind — a ``k_steps=8``
+  runner reports one micro-step of flops) and a ``lax.cond`` at roughly
+  one branch, so the registry reconciles XLA against the analytic
+  **body** cost (one micro-step, refresh-upper bound for the cached
+  family), never the per-dispatch total;
+* **wall** — measured dispatch wall-clock (EWMA + min), fed by the
+  serving engine when profiling is on. Wall is the only number that
+  sees trip count, fusion, and memory traffic for real; the
+  per-dispatch analytic total over wall is the achieved-FLOPs/s the
+  roofline table reports.
+
+Packed-runner argument specs are **derived from the cache key alone**
+(`packed_arg_specs`) — the same ``("packed", layout, solver, ...)``
+tuples the zero-recompile invariant keys on — so the engine's whole
+warm set is harvestable without ever having seen a real argument.
+Non-packed runners (static / cached / flow sample paths) record their
+spec + per-call analytic cost at first dispatch when
+``FlexiPipeline.enable_cost_profiling()`` is on.
+
+``packed_key(...)`` mirrors ``FlexiPipeline.packed_step``'s key tuple;
+``tests/test_profile.py`` asserts the mirror matches the runner cache
+for every layout the engine actually dispatched, so drift between the
+two fails loudly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.cache import ledger as cache_ledger
+from repro.configs.base import ModelConfig
+from repro.core.scheduler import dit_block_flops
+from repro.models import dit as dit_mod
+from repro.models.common import dtype_of
+
+#: reconciliation flag ids (the drift report's vocabulary)
+FLAG_COMPILED_DENSE = "compiled-dense"
+FLAG_NO_XLA_FLOPS = "xla-flops-missing"
+FLAG_XLA_DRIFT = "xla-analytic-drift"
+
+#: |log(xla/analytic)| beyond this raises the drift flag (XLA counts
+#: softmax/normalization transcendentals the ledger rounds away, so the
+#: bound is loose by design)
+DRIFT_LOG_RATIO = 2.3                     # ~10x either way
+
+
+def packed_key(layout: Any, *, solver: str = "ddim",
+               guidance_scale: float = 1.5, clip_x0: float = 0.0,
+               k_steps: int = 1, cache_split: Optional[int] = None,
+               attn_backend: str = "auto", taps: bool = False) -> Tuple:
+    """Mirror of ``FlexiPipeline.packed_step``'s cache-key tuple. The
+    registry and the engine's wall observations key on this; the mirror
+    is pinned against the real cache by ``tests/test_profile.py``."""
+    return ("packed", layout, solver, guidance_scale, clip_x0, k_steps,
+            cache_split, attn_backend, taps)
+
+
+def packed_arg_specs(cfg: ModelConfig, key: Tuple,
+                     params: Any) -> Tuple:
+    """ShapeDtypeStruct argument tree of the packed runner at ``key``,
+    derived purely from the key + config — the same construction
+    ``ServingEngine`` uses for real dispatches (and its dummy warmup
+    dispatches), so ``runner.lower(*specs)`` reproduces the exact
+    compiled signature."""
+    (_tag, layout, _solver, _gs, _clip, k, split, _backend, _taps) = key
+    sds = jax.ShapeDtypeStruct
+    param_specs = jax.tree_util.tree_map(
+        lambda a: sds(jnp.shape(a), a.dtype), params)
+    mult = 2 if layout.guided else 1
+    delta_dtype = dtype_of(cfg.compute_dtype)
+    xs, metas, keys, deltas, refreshes = [], [], [], [], []
+    for mode, cap in layout.groups:
+        xs.append(sds((cap,) + cfg.dit.latent_shape, jnp.float32))
+        metas.append(sds((k, 3, cap), jnp.int32))
+        keys.append(sds((k, cap, 2), jnp.uint32))
+        if split is not None:
+            deltas.append(sds((cap, mult, dit_mod.tokens_for_mode(cfg, mode),
+                               cfg.d_model), delta_dtype))
+            refreshes.append(sds((k, cap), jnp.bool_))
+    args: Tuple = (param_specs, tuple(xs), tuple(metas), tuple(keys))
+    if split is not None:
+        args += (tuple(deltas), tuple(refreshes))
+    return args
+
+
+def packed_analytic(cfg: ModelConfig, key: Tuple) -> Dict[str, float]:
+    """Analytic ledger numbers for the packed executable at ``key``:
+    ``body`` (one micro-step of the whole padded pack, dummy slots
+    included — what the hardware computes), ``dense_body`` (same work
+    priced at the dense-attention convention, the compiled-dense
+    sentinel), ``deep_body`` (the deep-block share a cached all-skip
+    micro-step avoids), and the per-dispatch totals."""
+    layout, k, split, backend = key[1], key[5], key[6], key[7]
+    body = layout.cost(cfg, attn_backend=backend).flops
+    dense = layout.cost(cfg, attn_backend="dense").flops
+    deep = 0.0
+    if split is not None:
+        rows = layout.cost(cfg, attn_backend=backend).rows
+        C = layout.resolve_capacity(cfg)
+        deep = (rows * dit_block_flops(cfg, C, attn_backend=backend)
+                * (cfg.num_layers - split) / cfg.num_layers)
+    return {"body": float(body), "dense_body": float(dense),
+            "deep_body": float(deep), "dispatch": float(k * body),
+            "dispatch_skip": float(k * (body - deep))}
+
+
+@dataclasses.dataclass
+class CompiledCost:
+    """One executable's reconciled record."""
+    key: Tuple
+    family: str                      # packed | packed-cached | static | ...
+    label: str
+    analytic_body: float             # one body invocation (upper bound)
+    analytic_body_skip: float        # cached all-skip lower bound
+    analytic_dense_body: float       # dense-attention convention
+    analytic_dispatch: float         # per runner call (x k micro-steps)
+    xla_flops: Optional[float] = None
+    xla_bytes: Optional[float] = None
+    xla_transcendentals: Optional[float] = None
+    arg_bytes: Optional[int] = None
+    out_bytes: Optional[int] = None
+    temp_bytes: Optional[int] = None
+    code_bytes: Optional[int] = None
+    error: Optional[str] = None
+
+    @property
+    def xla_over_analytic(self) -> Optional[float]:
+        if not self.xla_flops or self.analytic_body <= 0:
+            return None
+        return self.xla_flops / self.analytic_body
+
+
+@dataclasses.dataclass
+class WallStats:
+    ewma_s: float
+    min_s: float
+    n: int
+    total_s: float
+
+
+class CompiledCostRegistry:
+    """Harvests, stores, and reconciles compiled-cost records, keyed by
+    the SAME tuples ``FlexiPipeline``'s runner cache uses."""
+
+    def __init__(self, alpha: float = 0.3):
+        self.alpha = alpha
+        self.records: Dict[Tuple, CompiledCost] = {}
+        self.walls: Dict[Tuple, WallStats] = {}
+
+    # -- wall observations (fed per dispatch by the engine) -------------
+
+    def observe_wall(self, key: Tuple, wall_s: float) -> None:
+        if wall_s <= 0:
+            return
+        w = self.walls.get(key)
+        if w is None:
+            self.walls[key] = WallStats(wall_s, wall_s, 1, wall_s)
+        else:
+            w.ewma_s = (1 - self.alpha) * w.ewma_s + self.alpha * wall_s
+            w.min_s = min(w.min_s, wall_s)
+            w.n += 1
+            w.total_s += wall_s
+
+    # -- harvest --------------------------------------------------------
+
+    def harvest(self, pipe: Any) -> Dict[str, int]:
+        """AOT-compile-and-inspect every runner in ``pipe``'s cache.
+        Never touches the jit dispatch cache (``cache_stats()`` stays
+        flat); failures degrade to per-record ``error`` strings — XLA
+        backends differ in what ``cost_analysis`` exposes."""
+        harvested = errors = skipped = 0
+        recorded = getattr(pipe, "profile_specs", None) or {}
+        for key, fn in pipe.runners().items():
+            if key in self.records and self.records[key].error is None:
+                continue
+            if key[0] == "packed":
+                specs = packed_arg_specs(pipe.cfg, key, pipe.params)
+                an = packed_analytic(pipe.cfg, key)
+                rec = CompiledCost(
+                    key=key,
+                    family="packed-cached" if key[6] is not None
+                    else "packed",
+                    label=(f"packed{'+cache' if key[6] is not None else ''}"
+                           f" k={key[5]} groups={key[1].groups}"
+                           f" attn={key[7]} taps={key[8]}"),
+                    analytic_body=an["body"],
+                    analytic_body_skip=an["body"] - an["deep_body"],
+                    analytic_dense_body=an["dense_body"],
+                    analytic_dispatch=an["dispatch"])
+            elif key in recorded:
+                specs, analytic = recorded[key]
+                rec = CompiledCost(
+                    key=key, family=str(key[0]),
+                    label=f"{key[0]} sample runner",
+                    analytic_body=float(analytic),
+                    analytic_body_skip=float(analytic),
+                    analytic_dense_body=float(analytic),
+                    analytic_dispatch=float(analytic))
+            else:
+                skipped += 1          # sample-path runner dispatched
+                continue              # before profiling was enabled
+            try:
+                compiled = fn.lower(*specs).compile()
+                ca = compiled.cost_analysis()
+                if isinstance(ca, (list, tuple)):
+                    ca = ca[0] if ca else {}
+                if ca:
+                    rec.xla_flops = float(ca.get("flops", 0.0)) or None
+                    rec.xla_bytes = (float(ca.get("bytes accessed", 0.0))
+                                     or None)
+                    rec.xla_transcendentals = float(
+                        ca.get("transcendentals", 0.0)) or None
+                ma = compiled.memory_analysis()
+                if ma is not None:
+                    rec.arg_bytes = getattr(ma, "argument_size_in_bytes",
+                                            None)
+                    rec.out_bytes = getattr(ma, "output_size_in_bytes",
+                                            None)
+                    rec.temp_bytes = getattr(ma, "temp_size_in_bytes", None)
+                    rec.code_bytes = getattr(ma,
+                                             "generated_code_size_in_bytes",
+                                             None)
+                harvested += 1
+            except Exception as e:                # noqa: BLE001
+                rec.error = f"{type(e).__name__}: {e}"
+                errors += 1
+            self.records[key] = rec
+        return {"harvested": harvested, "errors": errors,
+                "skipped": skipped, "total": len(self.records)}
+
+    def xla_bytes(self, key: Tuple) -> int:
+        """Compiled bytes-accessed of one runner call (0 until the key
+        is harvested) — the per-dispatch bytes total attribution splits."""
+        rec = self.records.get(key)
+        if rec is None or not rec.xla_bytes:
+            return 0
+        return int(rec.xla_bytes)
+
+    # -- the drift report ----------------------------------------------
+
+    def _flags(self, rec: CompiledCost) -> List[str]:
+        import math
+        flags: List[str] = []
+        if rec.error is not None:
+            return flags
+        if rec.xla_flops is None:
+            flags.append(FLAG_NO_XLA_FLOPS)
+            return flags
+        # a "block-sparse" layout whose compiled flop count lands at the
+        # dense convention never skipped its cross-segment tiles
+        backend = rec.key[7] if rec.key[0] == "packed" else None
+        sparse_claimed = (backend in ("pallas", "auto")
+                          and rec.analytic_body
+                          < 0.97 * rec.analytic_dense_body)
+        if sparse_claimed and rec.xla_flops >= 0.9 * rec.analytic_dense_body:
+            flags.append(FLAG_COMPILED_DENSE)
+        lo = min(rec.analytic_body_skip, rec.analytic_body)
+        hi = max(rec.analytic_body, rec.analytic_dense_body)
+        if rec.xla_flops > 0 and lo > 0:
+            drift = max(math.log(rec.xla_flops / hi),
+                        math.log(lo / rec.xla_flops), 0.0)
+            if drift > DRIFT_LOG_RATIO:
+                flags.append(FLAG_XLA_DRIFT)
+        return flags
+
+    def reconcile(self) -> Dict[str, Any]:
+        """Per-step-family drift report: analytic vs XLA vs measured
+        wall, plus summary ratios the profile bench gates."""
+        rows: List[Dict[str, Any]] = []
+        ratios: List[float] = []
+        n_flagged = 0
+        for key, rec in sorted(self.records.items(), key=lambda kv: repr(kv[0])):
+            flags = self._flags(rec)
+            n_flagged += bool(flags)
+            row: Dict[str, Any] = {
+                "label": rec.label, "family": rec.family,
+                "analytic_body_gflops": rec.analytic_body / 1e9,
+                "analytic_dispatch_gflops": rec.analytic_dispatch / 1e9,
+                "flags": flags,
+            }
+            if rec.error is not None:
+                row["error"] = rec.error
+            if rec.xla_flops is not None:
+                row["xla_gflops"] = rec.xla_flops / 1e9
+                if rec.xla_over_analytic is not None:
+                    row["xla_over_analytic"] = rec.xla_over_analytic
+                    ratios.append(rec.xla_over_analytic)
+            if rec.xla_bytes is not None:
+                row["xla_mbytes"] = rec.xla_bytes / 1e6
+            if rec.temp_bytes is not None:
+                row["temp_mbytes"] = rec.temp_bytes / 1e6
+            w = self.walls.get(key)
+            if w is not None:
+                row["wall_ms_ewma"] = w.ewma_s * 1e3
+                row["wall_ms_min"] = w.min_s * 1e3
+                row["dispatches"] = w.n
+                if w.ewma_s > 0:
+                    row["achieved_gflops_per_s"] = \
+                        rec.analytic_dispatch / w.ewma_s / 1e9
+                    row["wall_per_analytic_flop"] = \
+                        w.ewma_s / max(rec.analytic_dispatch, 1.0)
+            rows.append(row)
+        out: Dict[str, Any] = {
+            "rows": rows,
+            "n_records": len(self.records),
+            "n_errors": sum(1 for r in self.records.values()
+                            if r.error is not None),
+            "n_flagged": n_flagged,
+        }
+        if ratios:
+            out["max_xla_over_analytic"] = max(ratios)
+            out["min_xla_over_analytic"] = min(ratios)
+        return out
+
+    def report_lines(self) -> List[str]:
+        """Human-readable drift report (the ``--profile`` serve print)."""
+        rep = self.reconcile()
+        lines = [f"[profile] {rep['n_records']} executables harvested, "
+                 f"{rep['n_errors']} errors, {rep['n_flagged']} flagged"]
+        for row in rep["rows"]:
+            bits = [f"  {row['family']:>13} "
+                    f"analytic={row['analytic_body_gflops']:.3f}G"]
+            if "xla_gflops" in row:
+                bits.append(f"xla={row['xla_gflops']:.3f}G "
+                            f"(x{row.get('xla_over_analytic', 0.0):.2f})")
+            if "wall_ms_ewma" in row:
+                bits.append(f"wall={row['wall_ms_ewma']:.1f}ms "
+                            f"({row.get('achieved_gflops_per_s', 0.0):.2f}"
+                            f" GFLOP/s)")
+            if row["flags"]:
+                bits.append("FLAGS=" + ",".join(row["flags"]))
+            if "error" in row:
+                bits.append(f"ERROR={row['error']}")
+            bits.append("| " + row["label"])
+            lines.append(" ".join(bits))
+        return lines

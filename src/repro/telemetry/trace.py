@@ -108,6 +108,23 @@ class SpanRecorder:
                               self.clock() if ts is None else ts,
                               args=dict(values)))
 
+    @property
+    def occupancy(self) -> float:
+        """Ring-buffer fill fraction in [0, 1] — 1.0 means the next
+        event evicts the oldest (drops are already being counted)."""
+        cap = self.events.maxlen or 1
+        return len(self.events) / cap
+
+    def counters(self) -> Dict[str, float]:
+        """Exporter-facing health counters (satellite: silent span loss
+        must be observable in Prometheus/metrics_line)."""
+        return {
+            "events_recorded": float(self.events_recorded),
+            "events_dropped": float(self.events_dropped),
+            "occupancy": self.occupancy,
+            "capacity": float(self.events.maxlen or 0),
+        }
+
     # -- export --------------------------------------------------------
 
     def to_chrome_trace(self) -> Dict[str, Any]:
