@@ -1,0 +1,215 @@
+"""Fleet router vs a single engine (DESIGN.md §fleet).
+
+A saturated mixed-budget Poisson drain runs through N=4 in-process
+replica engines behind the router, in *virtual time*: every replica owns
+a clock advanced by its modeled dispatch cost (packed tokens x
+seconds-per-token), so a one-accelerator container reports the
+aggregate-throughput arithmetic honestly (fleet makespan = max replica
+clock; see DESIGN.md §fleet for what transfers to real multi-host).
+
+Phases:
+
+* **scale** — the identical workload drains through 1 replica and
+  through 4; aggregate useful tokens/s must be >= 3.0x the single
+  engine (the loss to 4.0x is placement imbalance + tail cohorts).
+* **kill** (affinity router) — the same Poisson drain, but replica 0 is
+  killed mid-drain after its first dispatch. Zero accepted requests may
+  be lost; every re-admitted request restarts from step 0 elsewhere with
+  a forced cache refresh and must reproduce the uninterrupted
+  single-engine sample (<=1e-4); the dispatch-level cache-affinity hit
+  rate must stay >= 0.95; re-admission latency is reported.
+* **compile-once** — the kill drain replays after a rehearsal pass;
+  zero recompiles across every replica (shared pipeline = one XLA
+  process; the bucket warmup covers mid-drain re-admission cohorts).
+
+All gates are asserted against ``baselines.json`` (``fleet_router``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+T = 12
+TRAIN_T = 100
+N_REQ = 48
+N_REPLICAS = 4
+SPT = 1e-4                     # modeled seconds per packed token
+MAX_TOKENS = 1024              # per-replica step budget (4 full CFG reqs)
+STEPS_PER_DISPATCH = 2         # finer dispatches -> honest affinity stats
+LOAD_RATE = 40.0               # virtual arrivals/s (saturates 4 replicas)
+
+
+class _Clock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        self.t += dt
+        return self.t
+
+
+def _bench_cfg():
+    from repro.configs import get_config
+    base = get_config("dit-xl-2").reduced()
+    return dataclasses.replace(
+        base, num_layers=2, d_model=64, d_ff=256,
+        attn=dataclasses.replace(base.attn, num_heads=4, num_kv_heads=4,
+                                 head_dim=16))
+
+
+def bench_fleet() -> None:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from benchmarks import common as C
+    from benchmarks.baseline import check_baseline
+    from repro.core.scheduler import FlexiSchedule
+    from repro.diffusion import schedule as sch
+    from repro.fleet import Fleet
+    from repro.models import dit as dit_mod
+    from repro.pipeline import FlexiPipeline, SamplingPlan
+
+    cfg = _bench_cfg()
+    params = dit_mod.init_dit(cfg, jax.random.PRNGKey(0))
+    pipe = FlexiPipeline(params, cfg, sch.linear_schedule(TRAIN_T))
+    plans = {}
+    for level, budget in ((0.5, FlexiSchedule.weak_first(T, 8)),
+                          (0.75, FlexiSchedule.weak_first(T, 4)),
+                          (1.0, 1.0)):
+        plan = SamplingPlan(T=T, budget=budget, guidance_scale=1.5,
+                            attn_backend="dense")
+        plan.validate(cfg)
+        plans[level] = plan
+    levels = sorted(plans)
+    rng = np.random.default_rng(0)
+    reqs = [(int(rng.integers(0, cfg.dit.num_classes)),
+             levels[int(rng.integers(0, len(levels)))])
+            for _ in range(N_REQ)]
+    arrivals = np.cumsum(rng.exponential(1.0 / LOAD_RATE, size=N_REQ))
+    engine_kwargs = {"max_tokens_per_step": MAX_TOKENS,
+                     "steps_per_dispatch": STEPS_PER_DISPATCH}
+
+    def poisson_drain(n_replicas, router, kill_after_submit=False):
+        """One full drain in virtual time; arrivals land mid-serving.
+        ``kill_after_submit``: one extra tick after the last arrival,
+        then replica 0 dies mid-drain."""
+        clk = _Clock()
+        fleet = Fleet(pipe, plans, n_replicas, router=router, clock=clk,
+                      seconds_per_token=SPT, engine_kwargs=engine_kwargs)
+        rids = []
+        for (label, lvl), at in zip(reqs, arrivals):
+            if at > clk():
+                clk.advance(at - clk())
+            rids.append(fleet.submit(cond=label, budget=lvl))
+            fleet.tick()
+        orphans = 0
+        if kill_after_submit:
+            fleet.tick()
+            orphans = fleet.kill_replica(0)
+        fleet.run()
+        return fleet, rids, orphans
+
+    # ------------------------------------------------------------------
+    # Warmup: compile every bucket the three drain shapes visit (the
+    # rehearsal kill run covers mid-drain re-admission cohorts too)
+    poisson_drain(1, "cheapest")
+    poisson_drain(N_REPLICAS, "cheapest")
+    poisson_drain(N_REPLICAS, "affinity", kill_after_submit=True)
+    warm = pipe.cache_stats()
+
+    # ------------------------------------------------------------------
+    # Scale phase: aggregate useful tokens/s, 4 replicas vs 1
+    solo, rids, _ = poisson_drain(1, "cheapest")
+    assert sorted(solo.results) == rids
+    s1 = solo.summary()
+    fleet, rids, _ = poisson_drain(N_REPLICAS, "cheapest")
+    assert sorted(fleet.results) == rids
+    s4 = fleet.summary()
+    assert s4["tokens"] == s1["tokens"], "same workload, same useful tokens"
+    speedup = s4["tokens_per_s"] / s1["tokens_per_s"]
+    C.csv_row("fleet_scale", s4["makespan_s"] * 1e6,
+              f"tokens_per_s={s4['tokens_per_s']:.0f};"
+              f"single_tps={s1['tokens_per_s']:.0f};"
+              f"speedup={speedup:.2f};replicas={N_REPLICAS};"
+              f"affinity={s4['affinity_hit_rate']:.3f}")
+
+    # ------------------------------------------------------------------
+    # Kill phase: replica 0 dies mid-drain (measured replay of the
+    # rehearsed trajectory — so this phase also proves compile-once)
+    kfleet, rids, orphans = poisson_drain(N_REPLICAS, "affinity",
+                                          kill_after_submit=True)
+    recompiles = pipe.cache_stats()["compiled"] - warm["compiled"]
+    lost = len(set(rids) - set(kfleet.results))
+    sk = kfleet.summary()
+    assert orphans > 0, "the kill must orphan accepted requests"
+    assert kfleet.membership.state(0) == "dead"
+
+    # every re-admitted/handed-back request reproduces the sample an
+    # uninterrupted single engine would have served (same PRNG key,
+    # restart from step 0, forced cache refresh on the new owner)
+    moved = [r for r in kfleet.router.requests.values()
+             if r.readmits or r.handbacks]
+    max_err = 0.0
+    for req in moved:
+        res = kfleet.results[req.rid]
+        ref = pipe.sample(plans[res.budget_served], 1, req.key,
+                          cond=jnp.asarray([req.cond], jnp.int32)).x0[0]
+        max_err = max(max_err, float(jnp.abs(res.x0 - ref).max()))
+    C.csv_row("fleet_kill", sk["makespan_s"] * 1e6,
+              f"orphans={orphans};moved={len(moved)};lost={lost};"
+              f"max_readmit_err={max_err:.2e};"
+              f"affinity={sk['affinity_hit_rate']:.3f};"
+              f"readmit_mean_s={sk['readmit']['mean_s']:.4f};"
+              f"recompiles={recompiles}")
+
+    bench = {
+        "name": "fleet_router", "arch": "dit-xl-2:reduced+2L64d",
+        "T": T, "requests": N_REQ, "replicas": N_REPLICAS,
+        "levels": levels, "seconds_per_token": SPT,
+        "poisson_rate_per_s": LOAD_RATE,
+        "virtual_time": True,
+        "fleet": {"tokens_per_s": s4["tokens_per_s"],
+                  "makespan_s": s4["makespan_s"],
+                  "affinity_hit_rate": s4["affinity_hit_rate"],
+                  "request_dispatches": s4["request_dispatches"]},
+        "single": {"tokens_per_s": s1["tokens_per_s"],
+                   "makespan_s": s1["makespan_s"]},
+        "speedup_vs_single": speedup,
+        "kill": {"orphans": orphans, "moved": len(moved), "lost": lost,
+                 "max_readmit_err": max_err,
+                 "affinity_hit_rate": sk["affinity_hit_rate"],
+                 "readmit_count": sk["readmit"]["count"],
+                 "readmit_mean_s": sk["readmit"]["mean_s"],
+                 "readmit_max_s": sk["readmit"]["max_s"],
+                 "makespan_s": sk["makespan_s"],
+                 "makespan_penalty":
+                     sk["makespan_s"] / s4["makespan_s"]},
+        "recompiles_after_warmup": recompiles,
+        "compile": kfleet.compile_stats(),
+    }
+    print("BENCH " + json.dumps(bench))
+    check_baseline("fleet_router", bench)
+    assert speedup >= 3.0, \
+        f"4-replica fleet only {speedup:.2f}x a single engine at " \
+        f"saturation (need >=3.0x)"
+    assert lost == 0, f"{lost} accepted request(s) lost across the kill"
+    assert max_err <= 1e-4, \
+        f"re-admitted output diverged from the uninterrupted reference " \
+        f"({max_err:.2e} > 1e-4)"
+    assert sk["affinity_hit_rate"] >= 0.95, \
+        f"cache-affinity hit rate {sk['affinity_hit_rate']:.3f} < 0.95"
+    assert recompiles == 0, \
+        f"{recompiles} recompile(s) after warmup across the fleet"
+
+
+if __name__ == "__main__":
+    bench_fleet()

@@ -38,6 +38,7 @@ SUITES = {
                  "adaptive_scheduler", "flow_matching"),
     "distributed": ("distributed_seqpar",),
     "serving": ("serving_engine",),
+    "fleet": ("fleet_router",),
     "cache": ("activation_cache",),
     "attention": ("attention_kernel",),
     "analysis": ("static_analysis",),
@@ -140,8 +141,9 @@ def update_trajectory(suite: str, summaries: dict, sha: str,
 def main() -> None:
     from benchmarks import (bench_analysis, bench_attention, bench_cache,
                             bench_core, bench_distributed, bench_extensions,
-                            bench_modalities, bench_perf, bench_pipeline,
-                            bench_profile, bench_serving, bench_telemetry)
+                            bench_fleet, bench_modalities, bench_perf,
+                            bench_pipeline, bench_profile, bench_serving,
+                            bench_telemetry)
     from benchmarks.baseline import BaselineRegression
     from benchmarks.roofline_table import bench_roofline
 
@@ -161,6 +163,7 @@ def main() -> None:
         ("pipeline_cache", bench_pipeline.bench_pipeline_cache),
         ("distributed_seqpar", bench_distributed.bench_distributed),
         ("serving_engine", bench_serving.bench_serving),
+        ("fleet_router", bench_fleet.bench_fleet),
         ("activation_cache", bench_cache.bench_cache),
         ("attention_kernel", bench_attention.bench_attention),
         ("static_analysis", bench_analysis.bench_analysis),

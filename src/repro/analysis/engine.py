@@ -84,6 +84,9 @@ RULE_IDS: Dict[str, str] = {
                                     "jax/numpy/device values — attribution "
                                     "runs on the serving hot path and must "
                                     "stay pure host integer arithmetic",
+    "fleet-host-pure": "a fleet control module (router/membership/health) "
+                       "imports jax/numpy or syncs a device value — "
+                       "placement must stay pure host bookkeeping",
 }
 
 
@@ -197,10 +200,11 @@ def iter_py_files(paths: Iterable[Path]) -> List[Path]:
 
 def _load_rules():
     # local import: rule modules import Finding from here
-    from repro.analysis import (rules_cachekey, rules_mask, rules_telemetry,
-                                rules_trace)
+    from repro.analysis import (rules_cachekey, rules_fleet, rules_mask,
+                                rules_telemetry, rules_trace)
     source_rules = [rules_trace.TraceSafetyRule(),
-                    rules_telemetry.TelemetryRule()]
+                    rules_telemetry.TelemetryRule(),
+                    rules_fleet.FleetHostPureRule()]
     repo_rules = [rules_mask.MaskParityRule(),
                   rules_cachekey.CacheKeyRule()]
     return source_rules, repo_rules

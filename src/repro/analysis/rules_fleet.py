@@ -1,0 +1,99 @@
+"""Fleet control-plane host-purity lint (DESIGN.md §fleet, §analysis).
+
+The fleet's routing decision runs once per scheduling round on the
+serving hot path, and its three control modules — ``fleet/router.py``,
+``fleet/membership.py``, ``fleet/health.py`` — are specified as pure
+host bookkeeping: PRNG keys pass through as opaque objects, wall times
+arrive as plain floats, and any numpy/EWMA arithmetic is delegated to
+``runtime.straggler``. The ``fleet-host-pure`` rule statically rejects
+the whole category of regressions (same shape as PR 8's
+``telemetry-attribution-device`` rule):
+
+* importing ``jax``/``jaxlib``/``numpy`` in a control module — the day
+  someone "just inspects" a request key or batches scores through
+  numpy, placement acquires a device dependency and, worse, a possible
+  per-round host sync;
+* calling ``jax.*``/``np.*``, ``device_get``/``block_until_ready``, or
+  ``.item()`` there — the sync itself.
+
+The data-plane modules (``replica.py``, ``fleet.py``, ``warmup.py``)
+legitimately touch jax and are covered by the general trace-safety
+rule instead.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.engine import Finding
+
+#: the control-plane modules under the host-purity contract
+HOST_PURE_FILES = ("fleet/router.py", "fleet/membership.py",
+                   "fleet/health.py")
+
+BANNED_IMPORT_ROOTS = ("jax", "jaxlib", "numpy", "np")
+
+
+def _dotted(func: ast.AST) -> List[str]:
+    parts: List[str] = []
+    while isinstance(func, ast.Attribute):
+        parts.append(func.attr)
+        func = func.value
+    if isinstance(func, ast.Name):
+        parts.append(func.id)
+    return parts[::-1]
+
+
+class FleetHostPureRule:
+    """Per-file source rule over the fleet control plane."""
+
+    def check(self, path: str, tree: ast.AST, text: str) -> List[Finding]:
+        posix = path.replace("\\", "/")
+        if not any(posix.endswith(f) for f in HOST_PURE_FILES):
+            return []
+        findings: List[Finding] = []
+        for node in ast.walk(tree):
+            mods = []
+            if isinstance(node, ast.Import):
+                mods = [a.name for a in node.names]
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                mods = [node.module]
+            for mod in mods:
+                if mod.split(".")[0] in BANNED_IMPORT_ROOTS:
+                    findings.append(Finding(
+                        "fleet-host-pure", "error", path, node.lineno,
+                        f"fleet control plane imports `{mod}` — "
+                        f"routing/membership/health are pure host "
+                        f"bookkeeping on the per-round hot path; device "
+                        f"libraries are banned here", "<module>"))
+        stack: List[str] = []
+
+        class V(ast.NodeVisitor):
+            def visit_FunctionDef(self, node):
+                stack.append(node.name)
+                self.generic_visit(node)
+                stack.pop()
+
+            visit_AsyncFunctionDef = visit_FunctionDef
+
+            def visit_Call(self, node):
+                parts = _dotted(node.func)
+                name = parts[-1] if parts else ""
+                sym = stack[-1] if stack else "<module>"
+                is_dev = (len(parts) >= 2
+                          and parts[0] in ("np", "numpy", "jnp", "jax"))
+                is_sync = name in ("device_get", "block_until_ready")
+                is_item = (isinstance(node.func, ast.Attribute)
+                           and node.func.attr == "item")
+                if is_dev or is_sync or is_item:
+                    findings.append(Finding(
+                        "fleet-host-pure", "error", path, node.lineno,
+                        f"`{'.'.join(parts) or 'item'}` in a fleet "
+                        f"control module — placement must stay pure "
+                        f"host bookkeeping (no device values, no "
+                        f"syncs); delegate array math to "
+                        f"runtime.straggler", sym))
+                self.generic_visit(node)
+
+        V().visit(tree)
+        return findings

@@ -1,0 +1,24 @@
+"""Fleet serving: a replica router in front of per-replica engines
+(DESIGN.md §fleet).
+
+Control plane (host-pure, linted): ``router`` (placement + affinity
+ledger), ``membership`` (heartbeat drain/join/death), ``health``
+(straggler weights + hedging). Data plane: ``replica`` (engine + clock
++ price), ``fleet`` (the front door), ``warmup`` (background warm-set
+compilation).
+"""
+from repro.fleet.fleet import Fleet, FleetResult
+from repro.fleet.health import FleetHealth
+from repro.fleet.membership import (FleetMembership, ProcessGroup,
+                                    init_process_group, partition_devices)
+from repro.fleet.replica import FixedSlotEngine, Replica, ReplicaClock
+from repro.fleet.router import (ROUTER_POLICIES, FleetRequest,
+                                ReplicaView, Router)
+from repro.fleet.warmup import BackgroundCompiler
+
+__all__ = [
+    "Fleet", "FleetResult", "FleetHealth", "FleetMembership",
+    "ProcessGroup", "init_process_group", "partition_devices",
+    "FixedSlotEngine", "Replica", "ReplicaClock", "ROUTER_POLICIES",
+    "FleetRequest", "ReplicaView", "Router", "BackgroundCompiler",
+]

@@ -1,0 +1,533 @@
+"""The fleet front door (DESIGN.md §fleet).
+
+``Fleet`` runs one serving engine per data-parallel replica behind a
+single submit/tick surface and glues the three control modules
+together: :class:`~repro.fleet.router.Router` decides placement,
+:class:`~repro.fleet.membership.FleetMembership` tracks
+drain/join/death over heartbeats, and
+:class:`~repro.fleet.health.FleetHealth` down-weights stragglers and
+picks hedge candidates. The driver loop is ``tick()``:
+
+1. **place** every routable pending request (scored by priced backlog +
+   per-level calibrated price x straggler weight; see router.py);
+2. **pump** each live replica one engine iteration — a pump is also the
+   replica's heartbeat, so a hung replica stops beating and the monitor
+   declares it dead after the timeout;
+3. **retire** finished drains (in-flight cohort emptied);
+4. **detect** deaths and re-admit the dead replica's
+   accepted-but-unfinished requests elsewhere (same PRNG key → restart
+   from step 0 reproduces the uninterrupted sample; fresh slot
+   allocation on the new replica forces the cache refresh);
+5. **hedge** deadline-critical requests predicted late on a slow
+   replica (first completion wins, the twin is cancelled if still
+   queued, dropped at completion otherwise).
+
+Time: with the default wall clock every engine shares
+``time.monotonic``. With an injected simulated clock the fleet runs in
+*virtual time* — each replica's clock advances by modeled dispatch cost
+(replica.py) — which is how a one-accelerator container demonstrates
+N-replica aggregate throughput honestly; see DESIGN.md §fleet for what
+transfers to real multi-host.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+
+from repro.fleet.health import FleetHealth
+from repro.fleet.membership import FleetMembership, init_process_group
+from repro.fleet.replica import (DEFAULT_SECONDS_PER_TOKEN, Replica,
+                                 ReplicaClock)
+from repro.fleet.router import FleetRequest, ReplicaView, Router
+from repro.fleet.warmup import BackgroundCompiler
+from repro.pipeline.pipeline import FlexiPipeline
+from repro.pipeline.plan import SamplingPlan
+from repro.serving.metrics import RequestRecord
+from repro.serving.scheduler import ServedResult
+from repro.telemetry import Telemetry
+
+
+@dataclasses.dataclass
+class FleetResult:
+    """One served request, fleet view."""
+    rid: int
+    cond: int
+    x0: jax.Array
+    budget_served: float
+    replica: int
+    record: RequestRecord
+    arrival: float
+    done_at: float
+
+    @property
+    def latency(self) -> float:
+        return self.done_at - self.arrival
+
+
+class Fleet:
+    """N replica engines behind one router.
+
+    >>> fleet = Fleet(pipe, plans, n_replicas=4, clock=FakeClock())
+    >>> fleet.submit(cond=3, budget=0.6)
+    >>> results = fleet.run()
+    """
+
+    def __init__(self, pipe: FlexiPipeline,
+                 plans: Dict[float, SamplingPlan],
+                 n_replicas: int, *,
+                 router: str = "cheapest",
+                 clock: Optional[Callable[[], float]] = None,
+                 virtual: Optional[bool] = None,
+                 seconds_per_token: float = DEFAULT_SECONDS_PER_TOKEN,
+                 speed_factors: Optional[Dict[int, float]] = None,
+                 heartbeat_timeout_s: float = 10.0,
+                 telemetry: Optional[Telemetry] = None,
+                 base_key: Optional[jax.Array] = None,
+                 engine_kind: str = "packed",
+                 batch_size: int = 4,
+                 pipes: Optional[Sequence[FlexiPipeline]] = None,
+                 device_ids: Optional[Sequence[int]] = None,
+                 seq_parallel: int = 1,
+                 process_group=None,
+                 warm_background: bool = False,
+                 engine_kwargs: Optional[Dict[str, Any]] = None):
+        if n_replicas < 1:
+            raise ValueError("a fleet needs at least one replica")
+        self._clock = clock or time.monotonic
+        # a caller-injected clock means simulated time (tests, benches)
+        # unless explicitly overridden; wall serving passes no clock
+        self.virtual = virtual if virtual is not None else clock is not None
+        self.plans = plans
+        self.group = (process_group if process_group is not None
+                      else init_process_group())
+        if device_ids is None:
+            device_ids = list(range(n_replicas * seq_parallel))
+        self.membership = FleetMembership(
+            n_replicas, device_ids, seq_parallel=seq_parallel,
+            timeout_s=heartbeat_timeout_s, clock=self._clock)
+        self.health = FleetHealth(n_replicas)
+        self.router = Router(router)
+        self.telemetry = telemetry
+        self._rec = telemetry.recorder if telemetry is not None else None
+        if telemetry is not None:
+            telemetry.bind_clock(self._clock)
+        self._base_key = (base_key if base_key is not None
+                          else jax.random.PRNGKey(0xf1ee))
+        self._spt = seconds_per_token
+        self._engine_kind = engine_kind
+        self._batch_size = batch_size
+        self._engine_kwargs = dict(engine_kwargs or {})
+        speed_factors = speed_factors or {}
+        if pipes is not None and len(pipes) != n_replicas:
+            raise ValueError(f"pipes: got {len(pipes)} for "
+                             f"{n_replicas} replicas")
+        self._default_pipe = pipe
+        self.replicas: Dict[int, Replica] = {}
+        for i in range(n_replicas):
+            self.replicas[i] = self._build_replica(
+                i, pipes[i] if pipes is not None else pipe,
+                speed_factors.get(i, 1.0))
+        # (replica id, engine-local request id) -> fleet request id
+        self._emap: Dict[Tuple[int, int], int] = {}
+        self.results: Dict[int, FleetResult] = {}
+        self._hung: set = set()           # fault injection: stop pumping
+        self._death_pending: Dict[int, float] = {}
+        self.readmit_latencies: List[float] = []
+        self._hedge_losses = 0
+        self._t0 = self._clock()
+        self.warmers: Dict[int, BackgroundCompiler] = {}
+        if warm_background:
+            for i, rep in self.replicas.items():
+                if self._engine_kind == "packed":
+                    self.warmers[i] = BackgroundCompiler(
+                        rep.engine, name=f"fleet-warm-r{i}").start()
+
+    def _build_replica(self, rid: int, pipe: FlexiPipeline,
+                       speed_factor: float) -> Replica:
+        return Replica(rid, pipe, self.plans,
+                       engine_kind=self._engine_kind,
+                       virtual=self.virtual,
+                       seconds_per_token=self._spt,
+                       speed_factor=speed_factor,
+                       clock=self._clock,
+                       batch_size=self._batch_size,
+                       engine_kwargs=self._engine_kwargs)
+
+    # ------------------------------------------------------------------
+    # Submission
+
+    @property
+    def now(self) -> float:
+        return self._clock()
+
+    def submit(self, cond: int, budget: float,
+               deadline: float = math.inf,
+               key: Optional[jax.Array] = None) -> int:
+        """Accept one request into the fleet; returns its fleet id. The
+        key (derived from the fleet id when absent) pins the sample: any
+        replica — including a post-kill re-admission target — produces
+        the identical latents."""
+        rid = self.router._next_id
+        if key is None:
+            key = jax.random.fold_in(self._base_key, rid)
+        req = self.router.register(cond, budget, deadline, key, self.now)
+        return req.rid
+
+    # ------------------------------------------------------------------
+    # Placement
+
+    def _views(self) -> List[ReplicaView]:
+        weights = self.health.weights()
+        views = []
+        for rid, rep in self.replicas.items():
+            views.append(ReplicaView(
+                rid=rid,
+                admitting=(self.membership.admitting(rid)
+                           and rid not in self._hung),
+                backlog_seconds=rep.backlog_seconds(),
+                prices=rep.prices(),
+                weight=weights.get(rid, 1.0)))
+        return views
+
+    def _place_pending(self, now: float) -> int:
+        pending = self.router.pending()
+        if not pending:
+            return 0
+        views = self._views()
+        if not any(v.admitting for v in views):
+            return 0                  # wait for a join/rejoin
+        t0 = now
+        placed = 0
+        for req in pending:
+            level = self._quantize(req.budget)
+            target = self.router.place(req, views, level)
+            rep = self.replicas[target]
+            if self.virtual:
+                rep.rclock.catch_up(now)
+            eid = rep.submit(req.cond, req.budget, req.deadline, req.key)
+            self.router.bind(req, eid)
+            self._emap[(target, eid)] = req.rid
+            placed += 1
+            if req.rid in self._death_pending:
+                self.readmit_latencies.append(
+                    now - self._death_pending.pop(req.rid))
+        if self._rec is not None and placed:
+            self._rec.complete("route", t0, self.now,
+                               args={"placed": placed,
+                                     "policy": self.router.policy})
+        return placed
+
+    def _quantize(self, budget: float) -> float:
+        return next(iter(self.replicas.values())).engine.quantize(budget)
+
+    # ------------------------------------------------------------------
+    # The driver loop
+
+    def tick(self) -> List[FleetResult]:
+        """One scheduling round; returns requests finished this round."""
+        now = self.now
+        out: List[FleetResult] = []
+        self._place_pending(now)
+        for rid, rep in sorted(self.replicas.items()):
+            if not self.membership.pumpable(rid) or rid in self._hung:
+                continue
+            if rep.has_work:
+                results, dt = rep.pump(now)
+                if dt > 0:
+                    self.health.record_dispatch(rid, dt * 1e3)
+                for f in getattr(rep.engine, "_inflight", ()):
+                    frid = self._emap.get((rid, f.req.id))
+                    if frid is not None:
+                        self.router.requests[frid].dispatched = True
+                for sr in results:
+                    r = self._finish(rid, sr)
+                    if r is not None:
+                        out.append(r)
+            # pumping (even an idle pass) is the in-process heartbeat
+            self.membership.beat(rid)
+        for rid in list(self.replicas):
+            if self.membership.state(rid) == "draining" \
+                    and self.replicas[rid].engine.idle:
+                self.membership.finish_drain(rid)
+        for rid in self.membership.check():
+            self._on_death(rid)
+        self._maybe_hedge(self.now)
+        if self._rec is not None:
+            self._rec.counter("fleet", {
+                "pending": self.router.n_pending,
+                **{f"r{rid}_inflight": self.replicas[rid].engine.n_inflight
+                   for rid in sorted(self.replicas)},
+                **{f"r{rid}_queued": self.replicas[rid].engine.n_queued
+                   for rid in sorted(self.replicas)}})
+        return out
+
+    def run(self, max_ticks: int = 100_000) -> List[FleetResult]:
+        """Drain: tick until every accepted request is served."""
+        out: List[FleetResult] = []
+        ticks = 0
+        while self.router.unfinished() and ticks < max_ticks:
+            out.extend(self.tick())
+            ticks += 1
+            if self.router.unfinished() and self.membership.alive_count == 0:
+                raise RuntimeError("fleet has no live replicas but "
+                                   f"{len(self.router.unfinished())} "
+                                   "unfinished requests")
+        return out
+
+    def _finish(self, rid: int, sr: ServedResult) -> Optional[FleetResult]:
+        frid = self._emap.pop((rid, sr.request.id), None)
+        if frid is None:
+            return None               # stale (pre-death incarnation)
+        req = self.router.requests[frid]
+        now = (self.replicas[rid].rclock() if self.virtual else self.now)
+        if not self.router.mark_done(req, now, rid):
+            self._hedge_losses += 1   # the twin won earlier
+            return None
+        req.dispatched = True
+        if req.hedged:
+            if rid == req.hedge_owner:
+                self.router.hedge_wins += 1
+            self._cancel_copy(req, winner=rid)
+        res = FleetResult(rid=frid, cond=req.cond, x0=sr.x0,
+                          budget_served=sr.budget_served, replica=rid,
+                          record=sr.record, arrival=req.arrival,
+                          done_at=now)
+        self.results[frid] = res
+        return res
+
+    # ------------------------------------------------------------------
+    # Drain / join / death
+
+    def drain_replica(self, rid: int) -> int:
+        """Stop admissions on ``rid``, hand its queued requests back to
+        the router (they re-place immediately), let the in-flight cohort
+        finish on subsequent ticks. Returns how many were handed back."""
+        self.membership.start_drain(rid)
+        eng = self.replicas[rid].engine
+        eng.stop_admissions()
+        handed = 0
+        for r in eng.extract_queued():
+            frid = self._emap.pop((rid, r.id), None)
+            if frid is None:
+                continue
+            self.router.handback(self.router.requests[frid],
+                                 lost_state=False)
+            handed += 1
+        if self._rec is not None:
+            self._rec.complete("drain", self.now, self.now,
+                               args={"replica": rid, "handed_back": handed})
+        self._place_pending(self.now)
+        return handed
+
+    def kill_replica(self, rid: int) -> int:
+        """Crash ``rid`` now (observed failure): everything it accepted
+        and hadn't finished is re-admitted elsewhere. Returns the count
+        of re-admitted requests."""
+        self.membership.mark_dead(rid)
+        return self._on_death(rid)
+
+    def inject_hang(self, rid: int) -> None:
+        """Fault injection: the replica stops being pumped (so stops
+        heartbeating); membership declares it dead after the timeout."""
+        self._hung.add(rid)
+
+    def rejoin_replica(self, rid: int, *,
+                       speed_factor: float = 1.0) -> int:
+        """Bring a dead/drained replica id back with a FRESH engine (the
+        old incarnation's state is untrusted); returns the incarnation."""
+        inc = self.membership.rejoin(rid)
+        self._hung.discard(rid)
+        self.replicas[rid] = self._build_replica(
+            rid, self._default_pipe, speed_factor)
+        if self.virtual:
+            self.replicas[rid].rclock.catch_up(self.now)
+        return inc
+
+    def join_replica(self, *, device_ids: Optional[Sequence[int]] = None,
+                     speed_factor: float = 1.0,
+                     warm_background: bool = False) -> int:
+        """Grow the fleet by one replica; optionally warm its ladder on
+        a background thread while it already takes traffic."""
+        if device_ids is None:
+            hi = max((max(i.device_ids) for i in
+                      self.membership.replicas.values()), default=-1)
+            device_ids = list(range(hi + 1,
+                                    hi + 1 + self.membership.seq_parallel))
+        rid = self.membership.join(device_ids)
+        self.health.grow(rid + 1)
+        self.replicas[rid] = self._build_replica(
+            rid, self._default_pipe, speed_factor)
+        if self.virtual:
+            self.replicas[rid].rclock.catch_up(self.now)
+        if warm_background and self._engine_kind == "packed":
+            self.warmers[rid] = BackgroundCompiler(
+                self.replicas[rid].engine,
+                name=f"fleet-warm-r{rid}").start()
+        return rid
+
+    def _on_death(self, rid: int) -> int:
+        now = self.now
+        orphans = [r for r in self.router.requests.values()
+                   if r.state == "placed" and r.owner == rid]
+        for req in orphans:
+            self._emap.pop((rid, req.engine_id), None)
+            self.router.handback(req, lost_state=req.dispatched)
+            self._death_pending[req.rid] = now
+        # a dead replica's hedge COPIES die with it; the originals live
+        for req in self.router.requests.values():
+            if req.hedged and req.hedge_owner == rid:
+                self._emap.pop((rid, req.hedge_engine_id), None)
+                req.hedged = False
+                req.hedge_owner = req.hedge_engine_id = -1
+        if self._rec is not None:
+            self._rec.complete("readmit", now, self.now,
+                               args={"replica": rid,
+                                     "orphans": len(orphans)})
+        self._place_pending(self.now)
+        return len(orphans)
+
+    # ------------------------------------------------------------------
+    # Hedging
+
+    def _maybe_hedge(self, now: float) -> None:
+        cands: List[FleetRequest] = []
+        lateness: List[float] = []
+        weights = self.health.weights()
+        for req in self.router.requests.values():
+            if (req.state != "placed" or req.hedged
+                    or not math.isfinite(req.deadline)):
+                continue
+            if weights.get(req.owner, 1.0) <= 1.5:
+                continue              # owner is healthy; don't double-spend
+            est = self.replicas[req.owner].estimated_finish(
+                req.engine_id, now)
+            if est is None:
+                continue
+            cands.append(req)
+            lateness.append((est - req.deadline) * 1e3)
+        if not cands:
+            return
+        picked = self.health.hedge_candidates(
+            [r.rid for r in cands], lateness)
+        if not picked:
+            return
+        by_rid = {r.rid: r for r in cands}
+        views = [v for v in self._views() if v.admitting]
+        for rid in picked:
+            req = by_rid[rid]
+            targets = [v for v in views if v.rid != req.owner]
+            if not targets:
+                continue
+            best = min(targets, key=lambda v: (v.weight, v.score(
+                self._quantize(req.budget)), v.rid))
+            rep = self.replicas[best.rid]
+            if self.virtual:
+                rep.rclock.catch_up(now)
+            eid = rep.submit(req.cond, req.budget, req.deadline, req.key)
+            self._emap[(best.rid, eid)] = req.rid
+            self.router.mark_hedged(req, best.rid, eid)
+            if self._rec is not None:
+                self._rec.complete("hedge", now, self.now,
+                                   args={"rid": req.rid,
+                                         "from": req.owner,
+                                         "to": best.rid})
+
+    def _cancel_copy(self, req: FleetRequest, winner: int) -> None:
+        """Drop the losing copy of a hedged request if it is still only
+        queued (in-flight copies run to completion and are dropped at
+        finish by first-wins)."""
+        loser, eid = ((req.hedge_owner, req.hedge_engine_id)
+                      if winner != req.hedge_owner
+                      else (req.owner, req.engine_id))
+        if loser < 0 or loser not in self.replicas:
+            return
+        eng = self.replicas[loser].engine
+        for r in list(eng._queue._pending):
+            if r.id == eid:
+                eng._queue._pending.remove(r)
+                self._emap.pop((loser, eid), None)
+                break
+
+    # ------------------------------------------------------------------
+    # Warm-set
+
+    def precapture(self, max_per_mode: int = 2) -> int:
+        """Synchronous warm-set capture on every packed replica (shared
+        pipelines make replicas after the first free)."""
+        n = 0
+        for rep in self.replicas.values():
+            if self._engine_kind == "packed":
+                n += rep.engine.precapture_warm_set(max_per_mode)
+        return n
+
+    def wait_warm(self, timeout: Optional[float] = None) -> None:
+        """Join every background compiler and prove the ladders warm."""
+        for w in self.warmers.values():
+            if not w.wait(timeout):
+                raise TimeoutError("background warm-set capture still "
+                                   "running")
+            w.assert_warm()
+
+    # ------------------------------------------------------------------
+    # Introspection
+
+    def compile_stats(self) -> Dict[str, int]:
+        """Aggregated compile counters over the DISTINCT pipelines the
+        replicas use (shared pipelines count once — one XLA process)."""
+        seen: Dict[int, Dict[str, int]] = {}
+        for rep in self.replicas.values():
+            p = rep.engine.pipe
+            seen[id(p)] = p.cache_stats()
+        agg = {"pipes": len(seen), "runners": 0, "hits": 0, "misses": 0,
+               "compiled": 0}
+        for st in seen.values():
+            for k in ("runners", "hits", "misses", "compiled"):
+                agg[k] += st[k]
+        return agg
+
+    def makespan(self) -> float:
+        if self.virtual:
+            clocks = [rep.rclock() for rep in self.replicas.values()
+                      if isinstance(rep.rclock, ReplicaClock)]
+            return (max(clocks) if clocks else self.now) - self._t0
+        return self.now - self._t0
+
+    def summary(self) -> Dict[str, Any]:
+        tokens = sum(r.record.tokens for r in self.results.values())
+        makespan = self.makespan()
+        dispatches = sum(
+            rep.engine.metrics.total_request_steps
+            for rep in self.replicas.values())
+        rep_report = self.health.report()
+        out: Dict[str, Any] = {
+            "replicas": len(self.replicas),
+            "served": len(self.results),
+            "tokens": float(tokens),
+            "makespan_s": makespan,
+            "tokens_per_s": tokens / makespan if makespan > 0 else 0.0,
+            "request_dispatches": float(dispatches),
+            "affinity_hit_rate":
+                self.router.affinity_hit_rate(dispatches),
+            "router": self.router.summary(),
+            "membership": self.membership.summary(),
+            "straggler": {"stragglers": list(rep_report.stragglers),
+                          "median_ms": rep_report.median_ms,
+                          "worst_ms": rep_report.worst_ms},
+            "readmit": {
+                "count": float(len(self.readmit_latencies)),
+                "mean_s": (sum(self.readmit_latencies)
+                           / len(self.readmit_latencies)
+                           if self.readmit_latencies else 0.0),
+                "max_s": (max(self.readmit_latencies)
+                          if self.readmit_latencies else 0.0)},
+            "hedge_losses": float(self._hedge_losses),
+            "compile": self.compile_stats(),
+            "per_replica": {
+                str(rid): rep.engine.metrics.summary()
+                for rid, rep in sorted(self.replicas.items())},
+        }
+        return out

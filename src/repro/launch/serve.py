@@ -13,9 +13,17 @@ contribute fewer tokens) into compile-once bucket layouts under
 ``--max-tokens-per-step``. ``--policy`` picks admission/step ordering:
 ``fifo``, ``edf`` (earliest deadline first), or ``degrade`` (SLA-aware:
 queued requests are demoted to the highest budget level the measured
-arrival rate sustains). With ``--mesh DATAxSEQ`` the legacy fixed-slot
-driver runs instead: the packed engine is single-host, while the mesh
-path shards each batch over devices (DESIGN.md §distributed).
+arrival rate sustains).
+
+``--replicas N`` serves through the fleet router (``repro.fleet``,
+DESIGN.md §fleet): N in-process replica engines behind one front door,
+placement picked by ``--router`` (cheapest priced backlog, cache
+affinity, or round-robin), with heartbeat fault tolerance and elastic
+drain/join. ``--mesh DATAxSEQ --replicas N`` composes the two layers:
+N == DATA sequence-parallel replicas, each a fixed-slot engine over its
+own SEQ-wide device mesh, routed by the same fleet policies. A bare
+``--mesh`` without ``--replicas`` keeps the legacy single-driver
+fixed-slot path (DESIGN.md §distributed).
 
 Telemetry (DESIGN.md §telemetry): ``--trace out.json`` records the
 request lifecycle (admit → plan → pack → dispatch → materialize →
@@ -29,6 +37,9 @@ family — bit-identical latents, zero extra compiles.
   python -m repro.launch.serve --arch dit-xl-2 --budget 0.6 --smoke
   python -m repro.launch.serve --arch dit-xl-2 --smoke --policy degrade
   python -m repro.launch.serve --arch dit-xl-2 --mesh 1x8 --budget 0.6 --smoke
+  python -m repro.launch.serve --arch dit-xl-2 --smoke --replicas 4 \
+      --router affinity
+  python -m repro.launch.serve --arch dit-xl-2 --smoke --mesh 2x4 --replicas 2
   python -m repro.launch.serve --arch dit-xl-2 --smoke --attn-backend dense \
       --cache-policy interval --trace trace.json --metrics-interval 25
 """
@@ -102,11 +113,16 @@ def build_plan_menu(cfg, args, parallel=None) -> Dict[float, "object"]:
 
 def serve_dit(cfg, args) -> None:
     """Serve DiT sampling requests: continuous-batching engine by default,
-    the fixed-slot mesh driver under ``--mesh``."""
+    the fleet router under ``--replicas``, the legacy fixed-slot mesh
+    driver under a bare ``--mesh``."""
     from repro.diffusion import schedule as sch
     from repro.launch.mesh import make_inference_mesh, parse_mesh_arg
     from repro.models import dit as dit_mod
     from repro.pipeline import FlexiPipeline, ParallelSpec
+
+    if getattr(args, "replicas", 1) > 1:
+        _serve_dit_fleet(cfg, args)
+        return
 
     mesh = None
     parallel = None
@@ -308,6 +324,95 @@ def _serve_dit_engine(cfg, args, pipe, plans) -> None:
             "steady-state serving must not recompile after bucket warmup"
 
 
+def _serve_dit_fleet(cfg, args) -> None:
+    """The fleet path (DESIGN.md §fleet): ``--replicas N`` in-process
+    replica engines behind the router. Without ``--mesh`` every replica
+    is a packed continuous-batching engine sharing one pipeline; with
+    ``--mesh DATAxSEQ`` (DATA == N) each replica is a fixed-slot engine
+    over its own contiguous SEQ-wide device slice, so sequence-parallel
+    sharding composes with fleet routing."""
+    from repro.diffusion import schedule as sch
+    from repro.fleet import Fleet, partition_devices
+    from repro.launch.mesh import parse_mesh_arg
+    from repro.models import dit as dit_mod
+    from repro.pipeline import FlexiPipeline, ParallelSpec
+
+    n = args.replicas
+    key = jax.random.PRNGKey(0)
+    params = dit_mod.init_dit(cfg, key)          # smoke: untrained weights
+    sched = sch.linear_schedule(args.train_T)
+    s_sz = 1
+    parallel = None
+    pipes = None
+    engine_kind = "packed"
+    engine_kwargs = None
+    if getattr(args, "mesh", None):
+        d_sz, s_sz = parse_mesh_arg(args.mesh)
+        if d_sz != n:
+            raise SystemExit(f"--mesh {args.mesh}: DATA={d_sz} must equal "
+                             f"--replicas {n} on the fleet path (one "
+                             f"replica per data-parallel slice)")
+        if s_sz > 1:
+            # packed engines are single-replica; seq-parallel replicas run
+            # fixed-slot engines over per-replica meshes
+            parallel = ParallelSpec()
+            engine_kind = "fixed"
+        devs = jax.devices()
+        slices = partition_devices(range(n * s_sz), n, s_sz)
+        pipes = []
+        for sl in slices:
+            mesh = jax.make_mesh((1, s_sz), ("data", "seq"),
+                                 devices=[devs[i] for i in sl])
+            pipes.append(FlexiPipeline(params, cfg, sched, mesh=mesh))
+        print(f"[mesh] {n} replica(s) x seq={s_sz}: slices "
+              f"{[list(s) for s in slices]}")
+    plans = build_plan_menu(cfg, args, parallel)
+    if engine_kind == "packed":
+        engine_kwargs = {"policy": getattr(args, "policy", None) or "fifo",
+                         "max_tokens_per_step":
+                             getattr(args, "max_tokens_per_step", None)}
+    pipe = pipes[0] if pipes else FlexiPipeline(params, cfg, sched)
+    fleet = Fleet(pipe, plans, n, router=args.router,
+                  pipes=pipes, engine_kind=engine_kind,
+                  seq_parallel=s_sz, batch_size=args.batch_slots,
+                  engine_kwargs=engine_kwargs)
+    if engine_kind == "packed":
+        # warm the small-cohort ladder off the serving path: replicas
+        # share one pipeline, so one background walk warms them all
+        from repro.fleet import BackgroundCompiler
+        fleet.warmers[0] = BackgroundCompiler(
+            fleet.replicas[0].engine, name="serve-warm").start()
+
+    levels = sorted(plans)
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for i in range(args.requests):
+        deadline = fleet.now + float(rng.uniform(0.5, 5.0))
+        fleet.submit(cond=int(rng.integers(0, cfg.dit.num_classes)),
+                     budget=levels[i % len(levels)], deadline=deadline)
+    results = fleet.run()
+    if engine_kind == "packed":
+        fleet.wait_warm(timeout=600.0)
+    dt = time.time() - t0
+    s = fleet.summary()
+    for r in results[:4]:
+        print(f"[served] req={r.rid} replica={r.replica} "
+              f"budget={r.budget_served:.2f} latency={r.latency:.2f}s "
+              f"x0_std={float(jnp.std(r.x0)):.3f}", flush=True)  # repro: ignore[hot-host-sync] — 4-sample debug print after drain
+    print(f"[fleet] served {int(s['served'])} requests over "
+          f"{s['replicas']} replicas in {dt:.1f}s "
+          f"({len(results) / max(dt, 1e-9):.2f} img/s) "
+          f"router={args.router}")
+    print(f"[fleet] affinity_hit_rate={s['affinity_hit_rate']:.3f} "
+          f"placements={int(s['router']['placements'])} "
+          f"handbacks={int(s['router']['handbacks'])} "
+          f"hedges={int(s['router']['hedges'])}")
+    c = s["compile"]
+    print(f"[cache] pipes={c['pipes']} runners={c['runners']} "
+          f"compiled={c['compiled']} hits={c['hits']} "
+          f"misses={c['misses']}")
+
+
 def _serve_dit_fixed_slots(cfg, args, pipe, plans, s_sz, parallel, key
                            ) -> None:
     """Legacy fixed-batch-slot driver, kept for ``--mesh`` runs (the
@@ -480,8 +585,22 @@ def main():
                     help="p99 latency SLO for the watchdog's rolling "
                          "breach detector (default: off)")
     ap.add_argument("--mesh", default=None,
-                    help="DATAxSEQ device mesh for the DiT path, e.g. 1x8: "
-                         "data-parallel replicas x sequence-parallel shards")
+                    help="DATAxSEQ device mesh for the DiT path, e.g. 2x4. "
+                         "With --replicas N (N == DATA) each replica owns "
+                         "one contiguous SEQ-wide device slice and the "
+                         "fleet router places requests across them; "
+                         "without --replicas the legacy single-driver "
+                         "fixed-slot path shards each batch over the "
+                         "whole mesh")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve through the fleet router with N replica "
+                         "engines (repro.fleet, DESIGN.md §fleet); 1 = "
+                         "single engine, no router")
+    ap.add_argument("--router", default="cheapest",
+                    choices=["cheapest", "affinity", "rr"],
+                    help="fleet placement policy: cheapest priced "
+                         "backlog, cache affinity (sticky home replica + "
+                         "class sharding), or round-robin")
     ap.add_argument("--T", type=int, default=20,
                     help="DiT denoising steps per request")
     ap.add_argument("--train-T", type=int, default=1000,

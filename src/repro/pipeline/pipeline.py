@@ -26,6 +26,7 @@ compile-free while mesh swaps compile fresh runners.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -79,6 +80,11 @@ class FlexiPipeline:
         self._merged: Dict[int, Params] = {}
         self._hits = 0
         self._misses = 0
+        # serializes cache miss/insert so a background warm thread
+        # (fleet.warmup) racing the serving thread on the same key can't
+        # both build: the loser would keep a runner the cache forgot and
+        # the next lookup would compile a twin (a phantom recompile)
+        self._cache_lock = threading.Lock()
         # (runner key) -> (arg ShapeDtypeStruct tree, analytic FLOPs per
         # call) for sample()-path runners, recorded only when
         # enable_cost_profiling() was called (DESIGN.md §profiling)
@@ -94,11 +100,13 @@ class FlexiPipeline:
     # Cache plumbing
 
     def cache_stats(self) -> Dict[str, int]:
-        compiled = sum(f._cache_size() for f in self._runners.values())
-        compiled += sum(f._cache_size() for f in self._nfes.values())
-        return {"runners": len(self._runners), "nfe_fns": len(self._nfes),
-                "hits": self._hits, "misses": self._misses,
-                "compiled": compiled}
+        with self._cache_lock:
+            compiled = sum(f._cache_size() for f in self._runners.values())
+            compiled += sum(f._cache_size() for f in self._nfes.values())
+            return {"runners": len(self._runners),
+                    "nfe_fns": len(self._nfes),
+                    "hits": self._hits, "misses": self._misses,
+                    "compiled": compiled}
 
     def update_params(self, params: Params) -> None:
         """Swap weights without dropping compiled executables (params are
@@ -117,12 +125,16 @@ class FlexiPipeline:
         return self._merged[mode]
 
     def _lookup(self, cache: Dict, key: Tuple, build: Callable) -> Callable:
-        if key in cache:
-            self._hits += 1
-        else:
-            self._misses += 1
-            cache[key] = build()
-        return cache[key]
+        # build() under the lock is cheap (jit wrapping, no compile —
+        # XLA compilation happens at first call and jax serializes that
+        # internally); what must be atomic is miss-check + insert
+        with self._cache_lock:
+            if key in cache:
+                self._hits += 1
+            else:
+                self._misses += 1
+                cache[key] = build()
+            return cache[key]
 
     def runners(self) -> Dict[Tuple, Callable]:
         """Read-only view of the compiled-runner cache. The compiled-cost

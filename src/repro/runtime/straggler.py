@@ -66,8 +66,9 @@ def rebalance_shards(n_shards: int, worker_times_ms: np.ndarray
     return base.tolist()
 
 
-def backup_request_schedule(pending_ms: np.ndarray, deadline_ms: float
-                            ) -> List[int]:
+def backup_request_schedule(pending_ms, deadline_ms: float) -> List[int]:
     """Hedged-request policy: workers predicted to miss the step deadline
-    get a backup fetch scheduled on the fastest idle worker."""
-    return [int(i) for i in np.nonzero(pending_ms > deadline_ms)[0]]
+    get a backup fetch scheduled on the fastest idle worker. Accepts any
+    array-like (the fleet health layer passes plain host lists)."""
+    pending = np.asarray(pending_ms, float)
+    return [int(i) for i in np.nonzero(pending > deadline_ms)[0]]

@@ -59,6 +59,7 @@ class ServingMetrics:
         self.steps: collections.deque = collections.deque(maxlen=window)
         self.total_served = 0
         self.total_steps = 0
+        self.total_request_steps = 0   # request-dispatches (Σ cohort sizes)
         self.total_tokens = 0
         self.total_flops = 0.0
         self.total_degraded = 0
@@ -82,6 +83,7 @@ class ServingMetrics:
         self.steps.append(StepRecord(now, real_tokens, packed_tokens,
                                      n_requests))
         self.total_steps += 1
+        self.total_request_steps += n_requests
 
     def record_request(self, rec: RequestRecord) -> None:
         self.requests.append(rec)

@@ -234,6 +234,7 @@ class ServingEngine:
         self._zero_blocks: Dict[int, jax.Array] = {}
         self._queue = RequestQueue()
         self._inflight: List[InFlight] = []
+        self._admitting = True
         self._next_id = 0
         self._seq = 0
         self._base_key = (base_key if base_key is not None
@@ -329,7 +330,28 @@ class ServingEngine:
             i += 1
         return np.asarray(jnp.concatenate(parts))
 
+    def stop_admissions(self) -> None:
+        """Drain mode (DESIGN.md §fleet): keep stepping the in-flight
+        cohort to completion, but stop promoting queued requests. The
+        queue itself still accepts ``submit`` — the fleet router is
+        responsible for not placing onto a draining replica."""
+        self._admitting = False
+
+    def resume_admissions(self) -> None:
+        self._admitting = True
+
+    def extract_queued(self) -> List[Request]:
+        """Remove and return every not-yet-admitted request (submission
+        order). Queued requests hold no device or cache state, so a
+        draining replica hands them back to the router loss-free; the
+        in-flight cohort is NOT touched — it finishes here."""
+        out = sorted(self._queue._pending, key=lambda r: r._seq)
+        self._queue._pending.clear()
+        return out
+
     def _admit(self, now: float) -> None:
+        if not self._admitting:
+            return
         policy = "edf" if self.policy == "edf" else "fifo"
         while self._queue and len(self._inflight) < self.max_inflight:
             req = self._queue.pop(policy)
@@ -417,27 +439,46 @@ class ServingEngine:
         the fine small layouts at startup keeps the frozen planner's
         warm set shaped for them; returns how many executables were
         actually cold (newly compiled)."""
+        n_cold = 0
+        for layout, k in self.warm_set_ladder(max_per_mode, k_depths):
+            n_cold += 1
+            self._dummy_dispatch(layout, k)
+        return n_cold
+
+    def warm_set_ladder(self, max_per_mode: int = 2,
+                        k_depths: Optional[Sequence[int]] = None
+                        ) -> List[Tuple[PackLayout, int]]:
+        """The still-COLD rungs of the small-cohort bucket ladder, in
+        capture order — ``precapture_warm_set``'s work list, exposed so
+        a background compile thread (``fleet.warmup``) can walk it one
+        ``_dummy_dispatch`` at a time while the engine serves. Already-
+        warm rungs are skipped, so the list shrinks to empty as the
+        ladder is captured (by either party)."""
         if k_depths is None:
             k_depths, kd = [], 1
             while kd <= self.steps_per_dispatch:
                 k_depths.append(kd)
                 kd *= 2
-        n_cold = 0
+        out: List[Tuple[PackLayout, int]] = []
         for layout in self.menu.layouts:
             if any(c > max_per_mode for _m, c in layout.groups):
                 continue
             for k in k_depths:
-                if self._is_warm(layout, k):
-                    continue
-                n_cold += 1
-                self._dummy_dispatch(layout, k)
-        return n_cold
+                if not self._is_warm(layout, k):
+                    out.append((layout, k))
+        return out
 
-    def _dummy_dispatch(self, layout: PackLayout, k: int) -> None:
+    def _dummy_dispatch(self, layout: PackLayout, k: int,
+                        record: bool = True) -> None:
         """Run one throwaway dispatch at ``layout`` so the executable is
         compiled AND loaded (a runner that merely exists in the cache
-        still stalls its first real step on compilation)."""
-        t0 = self.clock() if self._rec is not None else 0.0
+        still stalls its first real step on compilation).
+
+        ``record=False`` skips the span (the background compile thread
+        must not interleave writes into the serving thread's
+        SpanRecorder ring or stamp a foreign clock)."""
+        record = record and self._rec is not None
+        t0 = self.clock() if record else 0.0
         runner = self.pipe.packed_step(
             layout, solver=self.solver,
             guidance_scale=self.guidance_scale, clip_x0=self.clip_x0,
@@ -462,7 +503,7 @@ class ServingEngine:
             out = runner(self.pipe.params, tuple(xs), tuple(metas),
                          tuple(keys))
         jax.block_until_ready(out)
-        if self._rec is not None:
+        if record:
             self._rec.complete("compile", t0, self.clock(),
                                args={"groups": str(layout.groups), "k": k,
                                      "precapture": True})

@@ -1,0 +1,577 @@
+"""Fleet serving tests (DESIGN.md §fleet): router placement + affinity,
+membership drain/join/death over heartbeats, straggler down-weighting
+and hedged re-dispatch, background warm-set compilation, and the
+end-to-end guarantees — a drain loses zero accepted requests, a
+kill-mid-flight re-admission reproduces the uninterrupted single-engine
+sample (≤1e-4), and warm traffic replays with zero recompiles.
+
+Everything runs on a simulated clock (virtual time: each replica's
+clock advances by modeled dispatch cost), so all counters and latencies
+are deterministic.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.scheduler import FlexiSchedule
+from repro.diffusion import schedule as sch
+from repro.fleet import (BackgroundCompiler, Fleet, FixedSlotEngine,
+                         FleetHealth, FleetMembership, ReplicaView, Router,
+                         init_process_group, partition_devices)
+from repro.pipeline import FlexiPipeline, SamplingPlan
+
+pytestmark = pytest.mark.tier1
+
+T = 6
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        self.t += dt
+        return self.t
+
+
+@pytest.fixture(scope="module")
+def flexi(tiny_dit_cfg, trained_like_dit):
+    from repro.core import flexify
+    fparams, fcfg = flexify(trained_like_dit, tiny_dit_cfg, [(1, 4, 4)])
+    sched = sch.linear_schedule(100)
+    return fparams, fcfg, sched
+
+
+@pytest.fixture(scope="module")
+def pipe(flexi):
+    fparams, fcfg, sched = flexi
+    return FlexiPipeline(fparams, fcfg, sched)
+
+
+def make_plans():
+    return {0.6: SamplingPlan(T=T, budget=FlexiSchedule.weak_first(T, 3),
+                              solver="ddim", guidance_scale=1.5),
+            1.0: SamplingPlan(T=T, budget=1.0, solver="ddim",
+                              guidance_scale=1.5)}
+
+
+def _reference(pipe, plans, level, label, key):
+    return np.asarray(pipe.sample(plans[level], 1, key,
+                                  cond=jnp.asarray([label], jnp.int32)).x0[0])
+
+
+def _check_all_results(fleet, pipe, plans):
+    """Every fleet result reproduces its standalone single-request
+    sample — the re-admission/affinity machinery must never change
+    what a request's key samples."""
+    assert fleet.results, "nothing served"
+    for rid, r in fleet.results.items():
+        req = fleet.router.requests[rid]
+        ref = _reference(pipe, plans, r.budget_served, req.cond, req.key)
+        np.testing.assert_allclose(np.asarray(r.x0), ref,
+                                   atol=1e-4, rtol=1e-4)
+
+
+def _mixed_submit(fleet, n, deadline=math.inf):
+    return [fleet.submit(cond=i % 10, budget=[0.6, 1.0][i % 2],
+                         deadline=deadline) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Router (host-pure unit tests)
+
+
+def _views(*specs):
+    """specs: (rid, backlog, price) with a flat one-level price menu."""
+    return [ReplicaView(rid=rid, admitting=True, backlog_seconds=b,
+                       prices={1.0: p}) for rid, b, p in specs]
+
+
+def test_router_rejects_unknown_policy():
+    with pytest.raises(ValueError, match="policy"):
+        Router("sjf")
+
+
+def test_cheapest_scores_priced_backlog_and_charges_placement():
+    r = Router("cheapest")
+    req1 = r.register(cond=0, budget=1.0, deadline=math.inf, key=None,
+                      now=0.0)
+    req2 = r.register(cond=0, budget=1.0, deadline=math.inf, key=None,
+                      now=0.0)
+    views = _views((0, 5.0, 1.0), (1, 0.0, 1.0))
+    assert r.place(req1, views, 1.0) == 1
+    # the placement charged replica 1's backlog: 0.0 + 1.0 price
+    assert views[1].backlog_seconds == pytest.approx(1.0)
+    # straggler weight prices replica 1 out for the second placement
+    views[1].weight = 8.0
+    assert r.place(req2, views, 1.0) == 0
+    assert r.n_pending == 0
+
+
+def test_rr_rotates_over_admitting_replicas():
+    r = Router("rr")
+    views = _views((0, 0.0, 1.0), (1, 99.0, 1.0), (2, 0.0, 1.0))
+    views[1].admitting = False
+    got = []
+    for _ in range(4):
+        req = r.register(0, 1.0, math.inf, None, 0.0)
+        got.append(r.place(req, views, 1.0))
+    assert got == [0, 2, 0, 2]
+
+
+def test_affinity_sticks_to_home_and_shards_fresh_requests():
+    r = Router("affinity")
+    # fresh request shards by class label across the live set
+    req = r.register(cond=1, budget=1.0, deadline=math.inf, key=None,
+                     now=0.0)
+    views = _views((0, 0.0, 1.0), (1, 0.2, 1.0))
+    assert r.place(req, views, 1.0) == 1       # cond 1 % 2 replicas
+    assert req.home == 1
+    # dispatched on its home, then handed back in a drain: the cache
+    # slots pin it to replica 1 even though replica 0 is now cheaper
+    req.dispatched = True
+    r.handback(req, lost_state=False)
+    views = _views((0, 0.0, 1.0), (1, 50.0, 1.0))
+    assert r.place(req, views, 1.0) == 1
+    assert r.state_readmits == 0
+    # a badly-behind shard loses a FRESH request to the cheapest replica
+    req2 = r.register(cond=1, budget=1.0, deadline=math.inf, key=None,
+                      now=0.0)
+    views = _views((0, 0.0, 1.0), (1, 50.0, 1.0))
+    assert r.place(req2, views, 1.0) == 0
+
+
+def test_state_losing_move_counts_against_affinity():
+    r = Router("cheapest")
+    req = r.register(0, 1.0, math.inf, None, 0.0)
+    views = _views((0, 0.0, 1.0), (1, 5.0, 1.0))
+    assert r.place(req, views, 1.0) == 0
+    req.dispatched = True                      # slots allocated on 0
+    r.handback(req, lost_state=True)           # replica 0 died
+    assert req.readmits == 1
+    views = _views((0, 0.0, 1.0), (1, 0.0, 1.0))
+    views[0].admitting = False
+    assert r.place(req, views, 1.0) == 1
+    assert r.state_readmits == 1
+    # 1 forced refresh out of 10 dispatches
+    assert r.affinity_hit_rate(10) == pytest.approx(0.9)
+    assert r.affinity_hit_rate(0) == 1.0
+
+
+def test_mark_done_first_completion_wins():
+    r = Router("cheapest")
+    req = r.register(0, 1.0, math.inf, None, 0.0)
+    r.place(req, _views((0, 0.0, 1.0)), 1.0)
+    assert r.mark_done(req, 3.0, served_by=0)
+    assert not r.mark_done(req, 4.0, served_by=1)   # hedged twin loses
+    assert req.served_by == 0 and req.done_at == 3.0
+    assert r.unfinished() == []
+
+
+# ---------------------------------------------------------------------------
+# Membership (host-pure unit tests)
+
+
+def test_partition_devices_plans_through_elastic():
+    assert partition_devices(range(8), 4, 2) == \
+        [(0, 1), (2, 3), (4, 5), (6, 7)]
+    with pytest.raises(ValueError, match="does not divide"):
+        partition_devices(range(7), 2, 2)
+    with pytest.raises(ValueError, match="replicas"):
+        partition_devices(range(4), 3, 2)
+
+
+def test_membership_drain_state_machine():
+    clk = FakeClock()
+    m = FleetMembership(2, range(2), timeout_s=5.0, clock=clk)
+    assert m.admitting(0) and m.pumpable(0)
+    m.start_drain(0)
+    assert not m.admitting(0) and m.pumpable(0)    # finishes in-flight
+    with pytest.raises(RuntimeError, match="draining"):
+        m.start_drain(0)
+    m.finish_drain(0)
+    assert m.state(0) == "drained"
+    assert not m.pumpable(0)
+    with pytest.raises(RuntimeError, match="drained"):
+        m.finish_drain(0)
+    assert m.alive_count == 1
+
+
+def test_membership_death_by_missed_beats_and_rejoin_incarnation():
+    clk = FakeClock()
+    m = FleetMembership(2, range(2), timeout_s=5.0, clock=clk)
+    clk.advance(4.0)
+    m.beat(1)
+    clk.advance(2.0)                   # replica 0 at 6s > timeout
+    assert m.check() == [0]
+    assert m.state(0) == "dead" and not m.admitting(0)
+    assert m.incarnation(0) == 0
+    assert m.rejoin(0) == 1            # comeback bumps the incarnation
+    assert m.admitting(0)
+    # beats on a dead replica are ignored (stale incarnation must not
+    # resurrect silently)
+    m.mark_dead(1)
+    m.beat(1)
+    assert m.state(1) == "dead"
+    assert m.check() == []             # explicit kill already marked it
+
+
+def test_membership_join_grows_monitor():
+    clk = FakeClock()
+    m = FleetMembership(1, range(2), seq_parallel=2, timeout_s=5.0,
+                        clock=clk)
+    rid = m.join((2, 3))
+    assert rid == 1
+    assert m.admitting(rid) and m.incarnation(rid) == 0
+    assert m.summary()["alive"] == 2
+    with pytest.raises(ValueError):
+        m.join((4,) * 3)               # 2 does not divide 3
+
+
+def test_process_group_seam():
+    calls = []
+    g = init_process_group("grpc://head:1234", 4, 2,
+                           initialize_fn=lambda **kw: calls.append(kw))
+    assert not g.simulated and g.num_processes == 4
+    assert calls == [{"coordinator_address": "grpc://head:1234",
+                      "num_processes": 4, "process_id": 2}]
+    assert init_process_group().simulated
+
+
+# ---------------------------------------------------------------------------
+# Health (host-pure unit tests)
+
+
+def test_health_weights_clamp_and_grow():
+    # 3 workers so the median tracks the fast pair (with 2 workers the
+    # median is the mean and the ratio saturates at 2.0 by construction)
+    h = FleetHealth(3, max_weight=4.0)
+    assert h.weights() == {0: 1.0, 1: 1.0, 2: 1.0}   # unseen → neutral
+    for _ in range(8):
+        h.record_dispatch(0, 16.0)
+        h.record_dispatch(1, 10.0)
+        h.record_dispatch(2, 10.0)
+    w = h.weights()
+    assert w[0] > 1.4                          # slow: routed away from
+    assert w[1] == 1.0 and w[2] == 1.0         # fast is never boosted
+    h.record_dispatch(0, 1e6)
+    assert h.weights()[0] == 4.0               # clamped at max_weight
+    h.grow(4)
+    assert h.weights()[3] == 1.0
+    assert h.ewma_ms(3) == 0.0 and h.ewma_ms(1) > 0.0
+
+
+def test_health_hedge_candidates_maps_seed_policy():
+    h = FleetHealth(2)
+    # positive lateness = predicted to miss its deadline
+    assert h.hedge_candidates([7, 9, 11], [-5.0, 3.0, 0.0]) == [9]
+    assert h.hedge_candidates([], []) == []
+
+
+# ---------------------------------------------------------------------------
+# The fleet, end to end (virtual time)
+
+
+def test_fleet_throughput_and_reference_match(pipe):
+    """Mixed-budget traffic over 3 replicas: every sample matches its
+    standalone reference, placements spread, and virtual makespan beats
+    a single replica's serial time."""
+    plans = make_plans()
+    clk = FakeClock()
+    fleet = Fleet(pipe, plans, 3, router="cheapest", clock=clk,
+                  seconds_per_token=1e-4)
+    rids = _mixed_submit(fleet, 9)
+    results = fleet.run()
+    assert sorted(r.rid for r in results) == rids
+    _check_all_results(fleet, pipe, plans)
+    s = fleet.summary()
+    assert s["served"] == 9
+    assert s["affinity_hit_rate"] == 1.0
+    assert s["tokens_per_s"] > 0
+    served_by = [fleet.results[r].replica for r in rids]
+    assert len(set(served_by)) == 3            # all replicas took work
+    # serial lower bound: one replica doing all the work needs the sum
+    # of every dispatch's modeled time; 3 replicas finish sooner
+    clk1 = FakeClock()
+    solo = Fleet(pipe, plans, 1, clock=clk1, seconds_per_token=1e-4)
+    _mixed_submit(solo, 9)
+    solo.run()
+    assert fleet.makespan() < solo.makespan()
+
+
+def test_drain_loses_zero_accepted_requests(pipe):
+    plans = make_plans()
+    clk = FakeClock()
+    fleet = Fleet(pipe, plans, 2, router="cheapest", clock=clk,
+                  seconds_per_token=1e-4,
+                  engine_kwargs={"max_tokens_per_step": 128,
+                                 "max_inflight": 2})
+    rids = _mixed_submit(fleet, 8)
+    fleet.tick()                       # some in-flight, some queued
+    handed = fleet.drain_replica(0)
+    assert handed > 0                  # its queue went back to the router
+    assert fleet.membership.state(0) == "draining"
+    results = fleet.run()
+    assert sorted(fleet.results) == rids               # zero lost
+    assert fleet.membership.state(0) == "drained"
+    _check_all_results(fleet, pipe, plans)
+    # the drained replica finished its in-flight cohort, took nothing new
+    assert fleet.replicas[0].engine.metrics.total_served > 0
+    assert fleet.router.handbacks >= handed
+    # drain handbacks of never-dispatched requests are not affinity misses
+    for r in results:
+        if fleet.results[r.rid].replica == 1:
+            continue
+    assert fleet.summary()["served"] == 8
+
+
+def test_kill_midflight_readmits_and_matches_reference(pipe):
+    """The acceptance gate: a replica killed mid-drain loses zero
+    accepted requests; every re-admitted request restarts from step 0
+    on the survivor (forced cache refresh, same key) and reproduces the
+    uninterrupted single-engine sample ≤1e-4."""
+    plans = make_plans()
+    clk = FakeClock()
+    fleet = Fleet(pipe, plans, 2, router="affinity", clock=clk,
+                  seconds_per_token=1e-4)
+    rids = _mixed_submit(fleet, 8)
+    fleet.tick()                       # dispatch once: state on devices
+    killed_inflight = fleet.replicas[0].engine.n_inflight
+    n_re = fleet.kill_replica(0)
+    assert n_re > 0
+    assert fleet.membership.state(0) == "dead"
+    fleet.run()
+    assert sorted(fleet.results) == rids               # zero lost
+    assert all(r.replica == 1 for r in fleet.results.values())
+    _check_all_results(fleet, pipe, plans)
+    s = fleet.summary()
+    assert s["readmit"]["count"] == n_re
+    # only the dispatched orphans were state-losing moves
+    assert fleet.router.state_readmits == killed_inflight
+    assert s["affinity_hit_rate"] == pytest.approx(
+        1.0 - killed_inflight / s["request_dispatches"])
+
+
+def test_affinity_keeps_requests_home_across_migrations(pipe):
+    """With the affinity policy and no faults every request's dispatches
+    all run on its home replica even as cohorts migrate between packed
+    buckets — hit rate exactly 1.0."""
+    plans = make_plans()
+    clk = FakeClock()
+    fleet = Fleet(pipe, plans, 2, router="affinity", clock=clk,
+                  seconds_per_token=1e-4,
+                  engine_kwargs={"max_tokens_per_step": 256})
+    _mixed_submit(fleet, 8)
+    fleet.run()
+    assert fleet.router.state_readmits == 0
+    s = fleet.summary()
+    assert s["affinity_hit_rate"] == 1.0
+    # sticky homes: each request was placed exactly once
+    assert all(r.placements == 1
+               for r in fleet.router.requests.values())
+    # class sharding: equal cond classes landed on the same replica
+    by_cond = {}
+    for rid, res in fleet.results.items():
+        req = fleet.router.requests[rid]
+        by_cond.setdefault(req.cond, set()).add(res.replica)
+    assert all(len(v) == 1 for v in by_cond.values())
+
+
+def test_warm_traffic_replays_with_zero_recompiles(pipe):
+    """Compile-once across fleet restarts: the pipeline's runner cache
+    is the durable artifact, so a fresh fleet over the same (shared)
+    pipe replays an identical workload with zero recompiles."""
+    plans = make_plans()
+    fleet = Fleet(pipe, plans, 2, router="cheapest", clock=FakeClock(),
+                  seconds_per_token=1e-4)
+    _mixed_submit(fleet, 6)
+    fleet.run()
+    warm = fleet.compile_stats()
+    assert warm["pipes"] == 1          # shared pipeline: one XLA process
+    replay = Fleet(pipe, plans, 2, router="cheapest", clock=FakeClock(),
+                   seconds_per_token=1e-4)
+    _mixed_submit(replay, 6)           # same workload, fresh fleet state
+    replay.run()
+    after = replay.compile_stats()
+    assert after["compiled"] == warm["compiled"]
+    assert after["misses"] == warm["misses"]
+
+
+def test_background_compiler_warms_while_serving(pipe):
+    plans = make_plans()
+    clk = FakeClock()
+    fleet = Fleet(pipe, plans, 1, clock=clk, seconds_per_token=1e-4)
+    eng = fleet.replicas[0].engine
+    warm = BackgroundCompiler(eng, max_per_mode=1, k_depths=(1, 2)).start()
+    _mixed_submit(fleet, 4)            # serve WHILE the ladder compiles
+    fleet.run()
+    assert warm.wait(timeout=600.0)
+    n = warm.assert_warm()             # every rung provably captured
+    assert n > 0
+    assert fleet.summary()["served"] == 4
+    # the ladder is idempotent: a second walk has nothing left to do
+    again = BackgroundCompiler(eng, max_per_mode=1, k_depths=(1, 2))
+    c0 = eng.cache_stats()["compiled"]
+    again.start()
+    assert again.wait(timeout=60.0)
+    assert again.captured == 0
+    assert eng.cache_stats()["compiled"] == c0
+
+
+def test_hung_replica_dies_by_heartbeat_timeout(pipe):
+    plans = make_plans()
+    clk = FakeClock()
+    fleet = Fleet(pipe, plans, 2, router="rr", clock=clk,
+                  seconds_per_token=1e-4, heartbeat_timeout_s=5.0)
+    rids = _mixed_submit(fleet, 6)
+    fleet.tick()                       # both replicas beat at t=0
+    fleet.inject_hang(0)
+    clk.advance(6.0)                   # past the timeout without a beat
+    fleet.tick()                       # survivor beats; monitor fires
+    assert fleet.membership.state(0) == "dead"
+    fleet.run()
+    assert sorted(fleet.results) == rids
+    assert all(r.replica == 1 for r in fleet.results.values())
+    _check_all_results(fleet, pipe, plans)
+    # rejoin: fresh engine, bumped incarnation, takes traffic again
+    assert fleet.rejoin_replica(0) == 1
+    more = _mixed_submit(fleet, 2)
+    fleet.run()
+    assert set(more) <= set(fleet.results)
+
+
+def test_straggler_downweights_slow_replica(pipe):
+    plans = make_plans()
+    clk = FakeClock()
+    fleet = Fleet(pipe, plans, 2, router="cheapest", clock=clk,
+                  seconds_per_token=1e-4, speed_factors={0: 4.0})
+    _mixed_submit(fleet, 10)
+    fleet.run()
+    w = fleet.health.weights()
+    # with 2 replicas the median is the mean, and cheapest routing packs
+    # the slow replica's dispatches lighter — the ratio lands well below
+    # the raw 4x speed factor, but the down-weight direction must hold
+    assert w[0] > 1.15 and w[1] == 1.0
+    served = {rid: sum(1 for r in fleet.results.values()
+                       if r.replica == rid) for rid in (0, 1)}
+    assert served[1] > served[0]       # fast replica took most work
+    assert fleet.summary()["straggler"]["stragglers"] in ([0], [])
+
+
+def test_hedged_request_served_once_and_matches_reference(pipe):
+    plans = make_plans()
+    clk = FakeClock()
+    fleet = Fleet(pipe, plans, 2, router="rr", clock=clk,
+                  seconds_per_token=1e-4, speed_factors={0: 4.0},
+                  engine_kwargs={"steps_per_dispatch": 1})
+    # prime the detector: one request on each replica via rr
+    _mixed_submit(fleet, 2)
+    fleet.run()
+    assert fleet.health.weights()[0] > 1.5
+    # rr puts the next request on the slow replica; its tight deadline
+    # makes it hedge-eligible once predicted late
+    rid = fleet.submit(cond=3, budget=1.0, deadline=fleet.now + 1e-3)
+    fleet.tick()
+    req = fleet.router.requests[rid]
+    assert req.owner == 0
+    fleet.run()
+    assert req.hedged
+    assert fleet.router.hedges == 1
+    # first completion won; the twin was cancelled or dropped — exactly
+    # one result, and it is the reference sample regardless of winner
+    assert sorted(fleet.results) == [0, 1, rid]
+    _check_all_results(fleet, pipe, plans)
+    assert (fleet.router.hedge_wins + fleet._hedge_losses <= 1)
+
+
+def test_join_replica_takes_new_traffic(pipe):
+    plans = make_plans()
+    clk = FakeClock()
+    fleet = Fleet(pipe, plans, 1, router="cheapest", clock=clk,
+                  seconds_per_token=1e-4)
+    _mixed_submit(fleet, 4)
+    fleet.tick()
+    rid = fleet.join_replica()
+    assert rid == 1
+    assert fleet.membership.admitting(rid)
+    _mixed_submit(fleet, 4)
+    fleet.run()
+    assert len(fleet.results) == 8
+    assert any(r.replica == rid for r in fleet.results.values())
+    _check_all_results(fleet, pipe, plans)
+
+
+def test_fixed_slot_engine_matches_reference(pipe):
+    """The seq-parallel-compatible engine kind: per-request x_T stacking
+    makes a fixed-slot ddim batch reproduce standalone samples."""
+    plans = make_plans()
+    clk = FakeClock()
+    eng = FixedSlotEngine(pipe, plans, batch_size=4, clock=clk)
+    keys = {i: jax.random.PRNGKey(70 + i) for i in range(3)}
+    for i in range(3):
+        eng.submit(cond=i, budget=1.0, key=keys[i])
+    out = eng.run()
+    assert len(out) == 3 and eng.idle
+    for r in out:
+        ref = _reference(pipe, plans, 1.0, r.request.cond,
+                         keys[r.request.id])
+        np.testing.assert_allclose(np.asarray(r.x0), ref,
+                                   atol=1e-4, rtol=1e-4)
+    # the fleet surface: drain extracts the queue in arrival order
+    eng.submit(cond=5, budget=0.6)
+    eng.submit(cond=6, budget=1.0)
+    eng.stop_admissions()
+    assert [r.cond for r in eng.extract_queued()] == [5, 6]
+    assert eng.idle
+
+
+def test_fleet_with_fixed_slot_replicas(pipe):
+    plans = make_plans()
+    clk = FakeClock()
+    fleet = Fleet(pipe, plans, 2, router="rr", clock=clk,
+                  engine_kind="fixed", seconds_per_token=1e-4)
+    rids = _mixed_submit(fleet, 4)
+    fleet.run()
+    assert sorted(fleet.results) == rids
+    _check_all_results(fleet, pipe, plans)
+
+
+def test_fleet_constructor_validation(pipe):
+    with pytest.raises(ValueError, match="at least one"):
+        Fleet(pipe, make_plans(), 0)
+    with pytest.raises(ValueError, match="policy"):
+        Fleet(pipe, make_plans(), 1, router="fastest")
+
+
+# ---------------------------------------------------------------------------
+# The fleet-host-pure lint rule
+
+
+def test_fleet_host_pure_rule_flags_device_imports(tmp_path):
+    from repro.analysis.engine import lint_paths
+    bad = tmp_path / "fleet" / "router.py"
+    bad.parent.mkdir()
+    bad.write_text(
+        "import numpy as np\n"
+        "def score(xs):\n"
+        "    return float(np.mean(xs).item())\n")
+    findings = lint_paths([bad])
+    rules = {f.rule for f in findings}
+    assert rules == {"fleet-host-pure"}
+    assert len(findings) >= 2          # the import and the np call
+    assert all(f.severity == "error" for f in findings)
+
+
+def test_fleet_control_modules_pass_host_pure_lint():
+    from pathlib import Path
+    from repro.analysis.engine import lint_paths
+    fleet_dir = Path(__file__).resolve().parents[1] / "src/repro/fleet"
+    findings = [f for f in lint_paths([fleet_dir])
+                if f.rule == "fleet-host-pure"]
+    assert findings == []

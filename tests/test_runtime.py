@@ -1,0 +1,168 @@
+"""Direct unit tests for the seed runtime control modules the fleet
+wires in (DESIGN.md §fleet): elastic mesh replanning, heartbeat fault
+detection with an injectable clock, and straggler detection/hedging.
+
+These are host-only (no device work) — the control logic is the part
+that transfers to a real cluster, so it gets first-class coverage
+instead of riding along inside integration tests.
+"""
+import numpy as np
+import pytest
+
+from repro.runtime.elastic import plan_mesh_shape
+from repro.runtime.fault_tolerance import HeartbeatMonitor
+from repro.runtime.straggler import (StragglerDetector,
+                                     backup_request_schedule,
+                                     rebalance_shards)
+
+pytestmark = pytest.mark.tier1
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        self.t += dt
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# elastic.plan_mesh_shape
+
+class TestPlanMeshShape:
+    def test_exact_divisor_kept(self):
+        assert plan_mesh_shape(8, 4) == (2, 4)
+        assert plan_mesh_shape(8, 8) == (1, 8)
+        assert plan_mesh_shape(12, 4) == (3, 4)
+
+    def test_nondivisor_halves_to_power_of_two(self):
+        # 8 does not divide 12; largest halving that does is 4
+        assert plan_mesh_shape(12, 8) == (3, 4)
+        # 4 does not divide 6; halves to 2
+        assert plan_mesh_shape(6, 4) == (3, 2)
+
+    def test_coprime_collapses_to_data_parallel(self):
+        assert plan_mesh_shape(7, 4) == (7, 1)
+        assert plan_mesh_shape(5, 8) == (5, 1)
+
+    def test_zero_or_negative_model_parallel_means_one(self):
+        assert plan_mesh_shape(5, 0) == (5, 1)
+        assert plan_mesh_shape(5, -3) == (5, 1)
+
+    def test_single_device(self):
+        assert plan_mesh_shape(1, 4) == (1, 1)
+
+    def test_product_always_covers_devices(self):
+        for n in range(1, 33):
+            for mp in range(0, 9):
+                data, model = plan_mesh_shape(n, mp)
+                assert data * model == n
+                assert data >= 1 and model >= 1
+
+
+# ---------------------------------------------------------------------------
+# fault_tolerance.HeartbeatMonitor
+
+class TestHeartbeatMonitor:
+    def test_alive_until_timeout(self):
+        clk = FakeClock()
+        mon = HeartbeatMonitor(3, timeout_s=10.0, clock=clk)
+        clk.advance(10.0)          # exactly the timeout: not yet dead
+        assert mon.check() == []
+        assert mon.alive_count == 3
+        clk.advance(0.5)
+        assert sorted(mon.check()) == [0, 1, 2]
+        assert mon.alive_count == 0
+
+    def test_heartbeat_defers_death(self):
+        clk = FakeClock()
+        mon = HeartbeatMonitor(2, timeout_s=10.0, clock=clk)
+        clk.advance(8.0)
+        mon.heartbeat(0)
+        clk.advance(4.0)           # worker 0 at 4s, worker 1 at 12s
+        assert mon.check() == [1]
+        assert mon.alive_count == 1
+
+    def test_check_reports_each_death_once(self):
+        clk = FakeClock()
+        mon = HeartbeatMonitor(1, timeout_s=1.0, clock=clk)
+        clk.advance(2.0)
+        assert mon.check() == [0]
+        clk.advance(2.0)
+        assert mon.check() == []   # already dead, not "newly" dead
+
+    def test_restart_bumps_incarnation(self):
+        clk = FakeClock()
+        mon = HeartbeatMonitor(2, timeout_s=1.0, clock=clk)
+        assert mon.workers[0].incarnation == 0
+        clk.advance(2.0)
+        assert mon.check() == [0, 1]
+        mon.heartbeat(0)           # restarted worker comes back
+        assert mon.workers[0].alive
+        assert mon.workers[0].incarnation == 1
+        assert mon.alive_count == 1
+        # a live worker's heartbeat never bumps the incarnation
+        mon.heartbeat(0)
+        assert mon.workers[0].incarnation == 1
+        # die and come back again: monotone incarnations
+        clk.advance(2.0)
+        assert mon.check() == [0]
+        mon.heartbeat(0)
+        assert mon.workers[0].incarnation == 2
+
+
+# ---------------------------------------------------------------------------
+# straggler.StragglerDetector + schedules
+
+class TestStragglerDetector:
+    def test_first_sample_sets_ewma_seed(self):
+        det = StragglerDetector(2, ewma=0.7)
+        det.record(0, 100.0)
+        assert det.times[0] == pytest.approx(100.0)
+        det.record(0, 200.0)       # 0.7*100 + 0.3*200
+        assert det.times[0] == pytest.approx(130.0)
+        assert not det.seen[1]
+
+    def test_report_flags_beyond_threshold_times_median(self):
+        det = StragglerDetector(4, threshold=2.0)
+        for i, ms in enumerate([10.0, 10.0, 11.0, 25.0]):
+            det.record(i, ms)
+        rep = det.report(step=7)
+        assert rep.step == 7
+        assert rep.stragglers == [3]
+        assert rep.median_ms == pytest.approx(10.5)
+        assert rep.worst_ms == pytest.approx(25.0)
+
+    def test_report_ignores_unseen_workers(self):
+        det = StragglerDetector(3)
+        rep = det.report(0)
+        assert rep.stragglers == [] and rep.median_ms == 0.0
+        det.record(0, 10.0)        # a single worker is never a straggler
+        assert det.report(1).stragglers == []
+
+
+class TestRebalanceShards:
+    def test_conserves_shards_and_floors_at_one(self):
+        out = rebalance_shards(8, np.array([10.0, 10.0, 1000.0]))
+        assert sum(out) == 8
+        assert min(out) >= 1
+        assert out[2] == min(out)  # slowest worker gets the fewest
+
+    def test_uniform_times_split_evenly(self):
+        assert rebalance_shards(8, np.array([5.0, 5.0, 5.0, 5.0])) \
+            == [2, 2, 2, 2]
+
+
+class TestBackupRequestSchedule:
+    def test_flags_predicted_late_workers(self):
+        assert backup_request_schedule([5.0, 15.0, 9.0, 30.0], 10.0) \
+            == [1, 3]
+
+    def test_accepts_plain_host_lists(self):
+        # the fleet health layer is host-pure and passes python lists
+        assert backup_request_schedule([], 10.0) == []
+        assert backup_request_schedule([1.0, 2.0], 0.0) == [0, 1]
