@@ -1,0 +1,183 @@
+"""Chaos resilience suite (DESIGN.md §resilience).
+
+A 4-replica fleet drains a mixed-budget workload while the standard
+scripted :func:`~repro.resilience.chaos.default_fault_plan` fires every
+fault kind at least once — replica crash, transient hang, delayed and
+partitioned heartbeats, dispatch slowdown, NaN poisoning, cache-slot
+corruption, transient allocation failure. Three phases:
+
+* **chaos** — the scripted drain. Gates: zero admitted requests lost,
+  zero non-finite latents served, every scripted fault applied, the
+  crash + partition produce real deaths, and at least one poisoned
+  request escalated (weak→powerful quarantine recovery).
+* **verify** — every escalated request's served latents are compared
+  bitwise against a clean powerful-path run of the same key (a fresh
+  fault-free fleet); every death-re-admitted request against the
+  uninterrupted single-request pipeline sample (<=1e-4).
+* **replay** — fleet A journals admits/dispatches/finishes and is
+  abandoned mid-drain (router crash); fleet B replays the journal's
+  unfinished set exactly-once (no misses, no duplicates) with replayed
+  samples <=1e-4 of their uninterrupted references.
+
+The whole scenario replays after a rehearsal pass with **zero new XLA
+compiles**: faults change data and placement, never compiled structure.
+Gates are asserted against ``baselines.json`` (``chaos_resilience``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import sys
+import tempfile
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+T = 12
+TRAIN_T = 100
+N_REQ = 32
+N_REPLICAS = 4
+SPT = 1e-4                     # modeled seconds per packed token
+MAX_TOKENS = 1024              # per-replica step budget (4 full CFG reqs)
+STEPS_PER_DISPATCH = 2
+
+
+def _bench_cfg():
+    from repro.configs import get_config
+    base = get_config("dit-xl-2").reduced()
+    return dataclasses.replace(
+        base, num_layers=2, d_model=64, d_ff=256,
+        attn=dataclasses.replace(base.attn, num_heads=4, num_kv_heads=4,
+                                 head_dim=16))
+
+
+def bench_chaos() -> None:
+    import jax
+
+    from benchmarks import common as C
+    from benchmarks.baseline import check_baseline
+    from repro.cache.policy import CacheSpec
+    from repro.core.scheduler import FlexiSchedule
+    from repro.diffusion import schedule as sch
+    from repro.models import dit as dit_mod
+    from repro.pipeline import FlexiPipeline, SamplingPlan
+    from repro.resilience import chaos as chaos_mod
+    from repro.resilience.journal import RequestJournal
+
+    cfg = _bench_cfg()
+    params = dit_mod.init_dit(cfg, jax.random.PRNGKey(0))
+    pipe = FlexiPipeline(params, cfg, sch.linear_schedule(TRAIN_T))
+    plans = {}
+    for level, budget in ((0.5, FlexiSchedule.weak_first(T, 8)),
+                          (0.75, FlexiSchedule.weak_first(T, 4)),
+                          (1.0, 1.0)):
+        plan = SamplingPlan(T=T, budget=budget, guidance_scale=1.5,
+                            attn_backend="dense")
+        plan.validate(cfg)
+        plans[level] = plan
+    engine_kwargs = {
+        "max_tokens_per_step": MAX_TOKENS,
+        "steps_per_dispatch": STEPS_PER_DISPATCH,
+        # interval=1 keeps outputs bit-identical to the uncached path
+        # (references stay exact) while the CacheStore slots, checksums,
+        # and allocation seams are all fully exercised
+        "cache": CacheSpec(policy="interval", interval=1, split=1),
+    }
+    tmp = Path(tempfile.mkdtemp(prefix="chaos_journal_"))
+
+    def scenario(tag: str):
+        journal = RequestJournal(str(tmp / f"chaos_{tag}.jsonl"))
+        chaos = chaos_mod.run_chaos(
+            pipe, plans, n_replicas=N_REPLICAS, n_requests=N_REQ,
+            journal=journal, seconds_per_token=SPT,
+            engine_kwargs=engine_kwargs, seed=0)
+        journal.close()
+        verify = chaos_mod.verify_escalations(
+            pipe, plans, chaos, seconds_per_token=SPT,
+            engine_kwargs=engine_kwargs)
+        # enough requests that the router crash strands real work: with
+        # cohorts of 4 per dispatch, 24 requests over 2 replicas finish
+        # in waves, and the crash lands between waves
+        replay = chaos_mod.run_replay(
+            pipe, plans, str(tmp / f"replay_{tag}.jsonl"),
+            n_requests=24, crash_after_finished=4,
+            seconds_per_token=SPT, engine_kwargs=engine_kwargs)
+        return chaos, verify, replay
+
+    # ------------------------------------------------------------------
+    # Rehearsal: compile every bucket the chaos scenario, the powerful
+    # references, and the replay fleets visit
+    scenario("rehearsal")
+    warm = pipe.cache_stats()
+
+    # ------------------------------------------------------------------
+    # Measured replay of the rehearsed scenario (identical script)
+    chaos, verify, replay = scenario("measured")
+    recompiles = pipe.cache_stats()["compiled"] - warm["compiled"]
+
+    C.csv_row("chaos_drain", chaos["ticks"] * 1e3,
+              f"lost={chaos['requests_lost']};"
+              f"nonfinite={chaos['nonfinite_outputs']};"
+              f"deaths={chaos['deaths']};"
+              f"escalated={len(chaos['escalated_rids'])};"
+              f"moved={len(chaos['moved_rids'])};"
+              f"faults_applied={chaos['faults'].get('applied', 0)};"
+              f"recompiles={recompiles}")
+    C.csv_row("chaos_verify", verify["escalated_max_err"] * 1e6,
+              f"escalated_bitwise={verify['escalated_bitwise']};"
+              f"moved_max_err={verify['moved_max_err']:.2e}")
+    C.csv_row("chaos_replay", replay["max_readmit_err"] * 1e6,
+              f"replayed={replay['replayed']};missing={replay['missing']};"
+              f"duplicates={replay['duplicates']}")
+
+    bench = {
+        "name": "chaos_resilience", "arch": "dit-xl-2:reduced+2L64d",
+        "T": T, "requests": N_REQ, "replicas": N_REPLICAS,
+        "seconds_per_token": SPT, "virtual_time": True,
+        "chaos": {
+            "ticks": chaos["ticks"],
+            "requests_lost": chaos["requests_lost"],
+            "nonfinite_outputs": chaos["nonfinite_outputs"],
+            "deaths": chaos["deaths"],
+            "escalated": len(chaos["escalated_rids"]),
+            "moved": len(chaos["moved_rids"]),
+            "expirations": chaos["expirations"],
+            "quarantined": chaos["quarantined"],
+            "integrity_refreshes": chaos["integrity_refreshes"],
+            "alloc_failures": chaos["alloc_failures"],
+            "faults_applied": chaos["faults"].get("applied", 0),
+            "faults_exhausted": int(chaos["faults_exhausted"]),
+        },
+        "recovery": chaos["recovery"],
+        "verify": verify,
+        "replay": {k: v for k, v in replay.items() if k != "journal"},
+        "recompiles_after_warmup": recompiles,
+    }
+    print("BENCH " + json.dumps(bench))
+    check_baseline("chaos_resilience", bench)
+    assert chaos["requests_lost"] == 0, \
+        f"{chaos['requests_lost']} admitted request(s) lost under chaos"
+    assert chaos["nonfinite_outputs"] == 0, \
+        f"{chaos['nonfinite_outputs']} non-finite latent(s) served"
+    assert chaos["faults_exhausted"], \
+        f"scripted faults never applied: {chaos['faults']}"
+    assert chaos["deaths"] >= 2, \
+        f"crash + partition should kill 2 replicas, got {chaos['deaths']}"
+    assert verify["escalated"] >= 1 and verify["escalated_bitwise"] == 1, \
+        f"escalated samples not bitwise-identical to the clean " \
+        f"powerful path: {verify}"
+    assert verify["moved_max_err"] <= 1e-4, \
+        f"re-admitted output diverged ({verify['moved_max_err']:.2e})"
+    assert replay["replayed"] >= 1, \
+        f"router crash stranded no work — replay proved nothing: {replay}"
+    assert replay["missing"] == 0 and replay["duplicates"] == 0, \
+        f"journal replay not exactly-once: {replay}"
+    assert replay["max_readmit_err"] <= 1e-4, \
+        f"replayed output diverged ({replay['max_readmit_err']:.2e})"
+    assert recompiles == 0, \
+        f"{recompiles} recompile(s) after the chaos rehearsal"
+
+
+if __name__ == "__main__":
+    bench_chaos()

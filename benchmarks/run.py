@@ -39,6 +39,7 @@ SUITES = {
     "distributed": ("distributed_seqpar",),
     "serving": ("serving_engine",),
     "fleet": ("fleet_router",),
+    "chaos": ("chaos_resilience",),
     "cache": ("activation_cache",),
     "attention": ("attention_kernel",),
     "analysis": ("static_analysis",),
@@ -140,7 +141,8 @@ def update_trajectory(suite: str, summaries: dict, sha: str,
 
 def main() -> None:
     from benchmarks import (bench_analysis, bench_attention, bench_cache,
-                            bench_core, bench_distributed, bench_extensions,
+                            bench_chaos, bench_core, bench_distributed,
+                            bench_extensions,
                             bench_fleet, bench_modalities, bench_perf,
                             bench_pipeline, bench_profile, bench_serving,
                             bench_telemetry)
@@ -164,6 +166,7 @@ def main() -> None:
         ("distributed_seqpar", bench_distributed.bench_distributed),
         ("serving_engine", bench_serving.bench_serving),
         ("fleet_router", bench_fleet.bench_fleet),
+        ("chaos_resilience", bench_chaos.bench_chaos),
         ("activation_cache", bench_cache.bench_cache),
         ("attention_kernel", bench_attention.bench_attention),
         ("static_analysis", bench_analysis.bench_analysis),

@@ -87,6 +87,16 @@ RULE_IDS: Dict[str, str] = {
     "fleet-host-pure": "a fleet control module (router/membership/health) "
                        "imports jax/numpy or syncs a device value — "
                        "placement must stay pure host bookkeeping",
+    "resilience-host-pure": "resilience/faults.py or journal.py imports "
+                            "jax/numpy or syncs a device value — fault "
+                            "scheduling and journaling run inside the "
+                            "fleet tick and must stay pure host "
+                            "bookkeeping",
+    "resilience-armed-guard": "a fault-injection seam call "
+                              "(self._faults/_injector/faults) outside "
+                              "an `is not None` guard — seams are "
+                              "Optional on the hot path; unguarded calls "
+                              "break disarmed runs",
 }
 
 
@@ -201,10 +211,13 @@ def iter_py_files(paths: Iterable[Path]) -> List[Path]:
 def _load_rules():
     # local import: rule modules import Finding from here
     from repro.analysis import (rules_cachekey, rules_fleet, rules_mask,
-                                rules_telemetry, rules_trace)
+                                rules_resilience, rules_telemetry,
+                                rules_trace)
     source_rules = [rules_trace.TraceSafetyRule(),
                     rules_telemetry.TelemetryRule(),
-                    rules_fleet.FleetHostPureRule()]
+                    rules_fleet.FleetHostPureRule(),
+                    rules_resilience.ResilienceHostPureRule(),
+                    rules_resilience.ResilienceArmedGuardRule()]
     repo_rules = [rules_mask.MaskParityRule(),
                   rules_cachekey.CacheKeyRule()]
     return source_rules, repo_rules

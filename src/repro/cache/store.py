@@ -18,7 +18,8 @@ accounting (resident vs total) feeds the serving metrics ledger.
 from __future__ import annotations
 
 import itertools
-from typing import Dict, List, Optional, Sequence
+import zlib
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +28,14 @@ import numpy as np
 from repro.cache import ledger
 from repro.configs.base import ModelConfig
 from repro.models import dit as dit_mod
+
+
+class TransientAllocationError(RuntimeError):
+    """A slot allocation failed transiently; retry on a later dispatch.
+
+    The engine treats the request as slotless for the current dispatch
+    (deep blocks recomputed exactly, no cache writes) and re-allocates
+    next time — correctness never depends on the slot existing."""
 
 
 class CacheStore:
@@ -39,7 +48,8 @@ class CacheStore:
 
     def __init__(self, cfg: ModelConfig, modes: Sequence[int],
                  n_slots: int, *, guided: bool = True,
-                 dtype: Optional[jnp.dtype] = None):
+                 dtype: Optional[jnp.dtype] = None,
+                 integrity: bool = False):
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
         from repro.models.common import dtype_of
@@ -49,12 +59,21 @@ class CacheStore:
         self.mult = 2 if guided else 1
         self.dtype = dtype or dtype_of(cfg.compute_dtype)
         self.modes = tuple(sorted(set(modes)))
+        #: when True every scatter records a CRC32 per slot and
+        #: :meth:`verify_slot` can detect out-of-band corruption. Costs a
+        #: host readback of each scattered row, so it is opt-in (chaos /
+        #: integrity-sensitive deployments only).
+        self.integrity = integrity
         self._deltas: Dict[int, jax.Array] = {}
         self._free: Dict[int, List[int]] = {}
         self._owner: Dict[int, Dict[int, int]] = {}    # mode → slot → owner
         self._stamp: Dict[int, Dict[int, int]] = {}    # mode → slot → LRU tick
+        self._crc: Dict[int, Dict[int, int]] = {}      # mode → slot → crc32
         self._tick = itertools.count()
         self.evictions = 0
+        self.corruptions = 0
+        self.integrity_failures = 0
+        self._fail_allocs = 0
         for m in self.modes:
             n_tok = dit_mod.tokens_for_mode(cfg, m)
             self._deltas[m] = jnp.zeros(
@@ -62,6 +81,7 @@ class CacheStore:
             self._free[m] = list(range(n_slots - 1, -1, -1))
             self._owner[m] = {}
             self._stamp[m] = {}
+            self._crc[m] = {}
 
     # ------------------------------------------------------------------
     # Slot lifecycle
@@ -71,6 +91,11 @@ class CacheStore:
         When the pool is exhausted the least-recently-touched active
         slot is evicted — its previous owner simply stops matching
         ``owner_of`` and must refresh on its next dispatch."""
+        if self._fail_allocs > 0:
+            self._fail_allocs -= 1
+            raise TransientAllocationError(
+                f"injected transient allocation failure (mode={mode}, "
+                f"owner={owner})")
         if self._free[mode]:
             slot = self._free[mode].pop()
         else:
@@ -84,6 +109,7 @@ class CacheStore:
         if slot in self._owner[mode]:
             del self._owner[mode][slot]
             del self._stamp[mode][slot]
+            self._crc[mode].pop(slot, None)
             self._free[mode].append(slot)
 
     def owner_of(self, mode: int, slot: int) -> Optional[int]:
@@ -109,6 +135,44 @@ class CacheStore:
             values.astype(self.dtype))
         for s in slots:
             self.touch(mode, int(s))
+        if self.integrity:
+            host = np.asarray(values.astype(self.dtype))
+            for i, s in enumerate(slots):
+                self._crc[mode][int(s)] = zlib.crc32(host[i].tobytes())
+
+    # ------------------------------------------------------------------
+    # Integrity
+
+    def verify_slot(self, mode: int, slot: int) -> bool:
+        """True when the slot's resident bytes still match the checksum
+        recorded at its last scatter (or no checksum exists yet — a
+        fresh slot refreshes anyway). Requires ``integrity=True``."""
+        want = self._crc[mode].get(int(slot))
+        if want is None:
+            return True
+        got = zlib.crc32(np.asarray(self._deltas[mode][int(slot)]).tobytes())
+        if got != want:
+            self.integrity_failures += 1
+            return False
+        return True
+
+    def corrupt_slot(self, mode: int, slot: int) -> None:
+        """Overwrite a resident slot's delta with *finite* garbage — only
+        a checksum mismatch can tell (fault-injection seam)."""
+        row = self._deltas[mode][int(slot)]
+        self._deltas[mode] = self._deltas[mode].at[int(slot)].set(
+            row * jnp.asarray(-1.0, self.dtype)
+            + jnp.asarray(0.37, self.dtype))
+        self.corruptions += 1
+
+    def fail_allocs(self, count: int) -> None:
+        """Make the next ``count`` :meth:`alloc` calls raise
+        :class:`TransientAllocationError` (fault-injection seam)."""
+        self._fail_allocs += int(count)
+
+    def active_slots(self) -> List[Tuple[int, int]]:
+        """Every owned ``(mode, slot)`` pair, deterministic order."""
+        return [(m, s) for m in self.modes for s in sorted(self._owner[m])]
 
     # ------------------------------------------------------------------
     # Accounting

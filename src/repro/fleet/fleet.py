@@ -46,6 +46,11 @@ from repro.fleet.router import FleetRequest, ReplicaView, Router
 from repro.fleet.warmup import BackgroundCompiler
 from repro.pipeline.pipeline import FlexiPipeline
 from repro.pipeline.plan import SamplingPlan
+from repro.resilience.faults import (ALLOC_FAIL, CORRUPT_SLOT, CRASH,
+                                     HANG, HEARTBEAT_DELAY, PARTITION,
+                                     POISON, SLOWDOWN, UNHANG,
+                                     FaultInjector, FaultPlan)
+from repro.resilience.journal import RequestJournal
 from repro.serving.metrics import RequestRecord
 from repro.serving.scheduler import ServedResult
 from repro.telemetry import Telemetry
@@ -94,10 +99,26 @@ class Fleet:
                  seq_parallel: int = 1,
                  process_group=None,
                  warm_background: bool = False,
+                 faults: Optional[FaultPlan] = None,
+                 journal: Optional[RequestJournal] = None,
+                 expire_queued: bool = False,
+                 max_retries: int = 2,
+                 backoff_base_s: float = 0.05,
                  engine_kwargs: Optional[Dict[str, Any]] = None):
         if n_replicas < 1:
             raise ValueError("a fleet needs at least one replica")
         self._clock = clock or time.monotonic
+        # resilience (DESIGN.md §resilience): a scripted FaultPlan arms
+        # the injection seams; with faults=None every seam is a no-op
+        # and the hot path is byte-for-byte the pre-resilience code
+        self._injector = (FaultInjector(faults)
+                          if faults is not None else None)
+        self._journal = journal
+        self._expire_queued = bool(expire_queued)
+        self._max_retries = int(max_retries)
+        self._backoff_base = float(backoff_base_s)
+        self._escalate_pending: Dict[int, float] = {}
+        self.escalation_latencies: List[float] = []
         # a caller-injected clock means simulated time (tests, benches)
         # unless explicitly overridden; wall serving passes no clock
         self.virtual = virtual if virtual is not None else clock is not None
@@ -148,6 +169,18 @@ class Fleet:
 
     def _build_replica(self, rid: int, pipe: FlexiPipeline,
                        speed_factor: float) -> Replica:
+        kw = dict(self._engine_kwargs)
+        faults = None
+        if self._injector is not None:
+            faults = self._injector.for_replica(rid)
+            # engines park quarantined requests for the router (fleet
+            # owns escalation) and checksum their cache slots so the
+            # corruption seam is detectable
+            kw["faults"] = faults
+            kw["self_heal"] = False
+            kw.setdefault("cache_integrity", True)
+        if self._expire_queued and self._engine_kind == "packed":
+            kw["expire_queued"] = True
         return Replica(rid, pipe, self.plans,
                        engine_kind=self._engine_kind,
                        virtual=self.virtual,
@@ -155,7 +188,8 @@ class Fleet:
                        speed_factor=speed_factor,
                        clock=self._clock,
                        batch_size=self._batch_size,
-                       engine_kwargs=self._engine_kwargs)
+                       faults=faults,
+                       engine_kwargs=kw)
 
     # ------------------------------------------------------------------
     # Submission
@@ -174,7 +208,14 @@ class Fleet:
         rid = self.router._next_id
         if key is None:
             key = jax.random.fold_in(self._base_key, rid)
-        req = self.router.register(cond, budget, deadline, key, self.now)
+        now = self.now
+        if self._journal is not None:
+            # write-ahead: the admit record lands on disk BEFORE the
+            # router ledger accepts the request, so a crash after this
+            # line can replay it and a crash before it never saw it
+            self._journal.admit(rid, cond=int(cond), budget=float(budget),
+                                deadline=float(deadline), time=now)
+        req = self.router.register(cond, budget, deadline, key, now)
         return req.rid
 
     # ------------------------------------------------------------------
@@ -194,7 +235,7 @@ class Fleet:
         return views
 
     def _place_pending(self, now: float) -> int:
-        pending = self.router.pending()
+        pending = self.router.pending(now)
         if not pending:
             return 0
         views = self._views()
@@ -212,6 +253,8 @@ class Fleet:
             self.router.bind(req, eid)
             self._emap[(target, eid)] = req.rid
             placed += 1
+            if self._journal is not None:
+                self._journal.dispatch(req.rid, replica=target, time=now)
             if req.rid in self._death_pending:
                 self.readmit_latencies.append(
                     now - self._death_pending.pop(req.rid))
@@ -231,6 +274,8 @@ class Fleet:
         """One scheduling round; returns requests finished this round."""
         now = self.now
         out: List[FleetResult] = []
+        if self._injector is not None:
+            self._apply_faults(now)
         self._place_pending(now)
         for rid, rep in sorted(self.replicas.items()):
             if not self.membership.pumpable(rid) or rid in self._hung:
@@ -247,8 +292,20 @@ class Fleet:
                     r = self._finish(rid, sr)
                     if r is not None:
                         out.append(r)
-            # pumping (even an idle pass) is the in-process heartbeat
-            self.membership.beat(rid)
+            self._intake_recovery(rid, rep, now)
+            # pumping (even an idle pass) is the in-process heartbeat;
+            # an armed injector may drop (partition) or hold (skew) it
+            if self._injector is not None:
+                stamp = self._injector.route_beat(rid, now)
+                if stamp is not None:
+                    self.membership.beat(rid, at=stamp)
+            else:
+                self.membership.beat(rid)
+        if self._injector is not None:
+            # delayed heartbeats arrive late with their ORIGINAL stamp —
+            # the monitor's max() guard keeps them from rewinding
+            for brid, stamp in self._injector.due_beats(now):
+                self.membership.beat(brid, at=stamp)
         for rid in list(self.replicas):
             if self.membership.state(rid) == "draining" \
                     and self.replicas[rid].engine.idle:
@@ -276,7 +333,27 @@ class Fleet:
                 raise RuntimeError("fleet has no live replicas but "
                                    f"{len(self.router.unfinished())} "
                                    "unfinished requests")
+            self._advance_past_backoff()
         return out
+
+    def _advance_past_backoff(self) -> None:
+        """With a simulated clock, time only moves when a replica pumps
+        work — so if every unfinished request sits in an escalation
+        backoff window and every live replica is idle, the clock must be
+        advanced to the earliest ``not_before`` or ``run`` spins
+        forever. No-op on wall clocks (time passes by itself) and
+        whenever any replica still has work."""
+        held = [r.not_before for r in self.router.requests.values()
+                if r.state == "pending" and r.not_before > self.now]
+        if not held or not hasattr(self._clock, "advance"):
+            return
+        if self.router.pending(self.now):
+            return                    # something is routable right now
+        for rid, rep in self.replicas.items():
+            if self.membership.pumpable(rid) and rid not in self._hung \
+                    and rep.has_work:
+                return
+        self._clock.advance(min(held) - self.now + 1e-9)
 
     def _finish(self, rid: int, sr: ServedResult) -> Optional[FleetResult]:
         frid = self._emap.pop((rid, sr.request.id), None)
@@ -287,6 +364,13 @@ class Fleet:
         if not self.router.mark_done(req, now, rid):
             self._hedge_losses += 1   # the twin won earlier
             return None
+        if self._journal is not None:
+            self._journal.finish(frid, replica=rid, time=now)
+        if frid in self._escalate_pending:
+            # fleet-clock on both ends (the quarantine intake stamped
+            # fleet time; replica virtual clocks run on another scale)
+            self.escalation_latencies.append(
+                self.now - self._escalate_pending.pop(frid))
         req.dispatched = True
         if req.hedged:
             if rid == req.hedge_owner:
@@ -298,6 +382,125 @@ class Fleet:
                           done_at=now)
         self.results[frid] = res
         return res
+
+    # ------------------------------------------------------------------
+    # Resilience (DESIGN.md §resilience)
+
+    def _apply_faults(self, now: float) -> None:
+        """Pop due scripted fault events and apply each at its seam.
+        Events whose target is not actionable yet (a poison for a not
+        yet placed request, a corruption with no resident slot) are
+        deferred and retried next tick."""
+        inj = self._injector
+        if inj is None:
+            return
+        for ev in inj.due(now):
+            if ev.kind == CRASH:
+                if self.membership.state(ev.replica) in ("active",
+                                                         "draining"):
+                    self.kill_replica(ev.replica)
+            elif ev.kind == HANG:
+                self.inject_hang(ev.replica)
+            elif ev.kind == UNHANG:
+                self._hung.discard(ev.replica)
+            elif ev.kind == HEARTBEAT_DELAY:
+                inj.delay_beats(ev.replica, now + ev.duration, ev.delay)
+            elif ev.kind == PARTITION:
+                inj.partition(ev.replica, now + ev.duration)
+            elif ev.kind == SLOWDOWN:
+                inj.slow(ev.replica, now + ev.duration, ev.factor)
+            elif ev.kind == POISON:
+                req = self.router.requests.get(ev.rid)
+                if req is None or req.state == "pending":
+                    inj.defer(ev)     # not placed yet: retry next tick
+                elif req.state == "placed":
+                    inj.add_poison(req.owner, req.engine_id)
+                # done/expired: nothing left to poison — event dropped
+            elif ev.kind == CORRUPT_SLOT:
+                engine = self.replicas[ev.replica].engine
+                store = getattr(engine, "store", None)
+                slots = store.active_slots() if store is not None else []
+                if not slots:
+                    inj.defer(ev)     # nothing resident yet
+                else:
+                    # prefer a slot whose owner still has same-mode
+                    # steps ahead (it re-packs this slot, so the
+                    # checksum mismatch is actually observed instead of
+                    # the slot being released at a phase switch or
+                    # retire first) and is not itself marked for
+                    # poisoning (quarantine would release the slot
+                    # unverified); fall back to a seeded random pick
+                    best, best_rem = None, 0
+                    for f in getattr(engine, "_inflight", ()):
+                        if (f.cache_slot >= 0 and not f.done
+                                and int(f.lp.modes[f.step]) == f.cache_mode
+                                and not inj.is_poison_target(ev.replica,
+                                                             f.req.id)
+                                and store.owner_of(
+                                    f.cache_mode,
+                                    f.cache_slot) == f.req.id):
+                            rem = int(f.lp.run_len[f.step])
+                            if rem > best_rem:
+                                best = (f.cache_mode, f.cache_slot)
+                                best_rem = rem
+                    mode, slot = (best if best is not None
+                                  else slots[inj.rng.randrange(
+                                      len(slots))])
+                    store.corrupt_slot(mode, slot)
+                    inj.note_corruption()
+            elif ev.kind == ALLOC_FAIL:
+                inj.add_alloc_failures(ev.replica, ev.count)
+
+    def _intake_recovery(self, rid: int, rep: Replica, now: float) -> None:
+        """Drain one engine's quarantined/expired request pools into
+        fleet-level recovery: quarantined requests escalate (re-admit at
+        the most powerful level, deadline-aware backoff), expired ones
+        turn terminal. Both paths journal."""
+        eng = rep.engine
+        take_q = getattr(eng, "take_quarantined", None)
+        if take_q is not None:
+            for r in take_q():
+                frid = self._emap.pop((rid, r.id), None)
+                if frid is None:
+                    continue
+                fr = self.router.requests[frid]
+                self.router.escalate(
+                    fr, now=now, level=max(rep._levels),
+                    max_retries=self._max_retries,
+                    backoff_base=self._backoff_base)
+                self._escalate_pending.setdefault(frid, now)
+                if self._journal is not None:
+                    self._journal.escalate(frid, time=now,
+                                           retries=fr.retries)
+                if self._rec is not None:
+                    self._rec.instant("escalate",
+                                      args={"rid": frid, "replica": rid,
+                                            "retries": fr.retries})
+        take_e = getattr(eng, "take_expired", None)
+        if take_e is not None:
+            for r in take_e():
+                frid = self._emap.pop((rid, r.id), None)
+                if frid is None:
+                    continue
+                if self.router.mark_expired(self.router.requests[frid],
+                                            now) \
+                        and self._journal is not None:
+                    self._journal.expire(frid, time=now)
+
+    def resubmit_from_journal(self, journal: RequestJournal) -> List[int]:
+        """Exactly-once replay after a front-door crash: re-admit every
+        journaled request without a terminal record. Keys re-derive from
+        the journaled fleet rid (``fold_in(base_key, rid)``), so a
+        replayed request reproduces the latents the lost router would
+        have served. This fleet must share the crashed fleet's
+        ``base_key``. Returns the new fleet ids, in original admission
+        order."""
+        out: List[int] = []
+        for rec in journal.unfinished():
+            key = jax.random.fold_in(self._base_key, int(rec["rid"]))
+            out.append(self.submit(int(rec["cond"]), float(rec["budget"]),
+                                   deadline=math.inf, key=key))
+        return out
 
     # ------------------------------------------------------------------
     # Drain / join / death
@@ -525,9 +728,21 @@ class Fleet:
                 "max_s": (max(self.readmit_latencies)
                           if self.readmit_latencies else 0.0)},
             "hedge_losses": float(self._hedge_losses),
+            "escalation": {
+                "count": float(len(self.escalation_latencies)),
+                "outstanding": float(len(self._escalate_pending)),
+                "mean_s": (sum(self.escalation_latencies)
+                           / len(self.escalation_latencies)
+                           if self.escalation_latencies else 0.0),
+                "max_s": (max(self.escalation_latencies)
+                          if self.escalation_latencies else 0.0)},
             "compile": self.compile_stats(),
             "per_replica": {
                 str(rid): rep.engine.metrics.summary()
                 for rid, rep in sorted(self.replicas.items())},
         }
+        if self._injector is not None:
+            out["faults"] = self._injector.summary()
+        if self._journal is not None:
+            out["journal"] = self._journal.summary()
         return out

@@ -115,9 +115,12 @@ class FleetMembership:
     # ------------------------------------------------------------------
     # Liveness
 
-    def beat(self, rid: int) -> None:
+    def beat(self, rid: int, at: Optional[float] = None) -> None:
+        """Deliver a heartbeat; ``at`` is the sender's send-time for
+        delayed/out-of-order delivery (the monitor max-guards the stamp,
+        so duplicates and stale beats are harmless)."""
         if self.replicas[rid].state in ("active", "draining"):
-            self.monitor.heartbeat(rid)
+            self.monitor.heartbeat(rid, at=at)
 
     def check(self) -> List[int]:
         """Newly dead replica ids (missed-heartbeat path); marks them."""

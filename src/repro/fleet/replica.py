@@ -242,6 +242,7 @@ class Replica:
                  controller: Optional[BudgetController] = None,
                  base_key: Optional[jax.Array] = None,
                  batch_size: int = 4,
+                 faults: Optional[Any] = None,
                  engine_kwargs: Optional[Dict[str, Any]] = None):
         if engine_kind not in ENGINE_KINDS:
             raise ValueError(f"unknown engine kind {engine_kind!r}; "
@@ -249,6 +250,9 @@ class Replica:
         self.rid = rid
         self.virtual = virtual
         self.speed_factor = float(speed_factor)
+        # per-replica fault facade (resilience/faults.ReplicaFaults);
+        # None on every production path — the seams below are no-ops then
+        self.faults = faults
         kw = dict(engine_kwargs or {})
         cache = kw.get("cache")
         if virtual:
@@ -353,6 +357,11 @@ class Replica:
             srec = self.engine.metrics.steps[-1]
             if self.virtual:
                 dt = (srec.packed_tokens * self._spt * self.speed_factor)
+                # fault seam: a scripted slowdown window stretches the
+                # modeled dispatch cost (the straggler detector and the
+                # router's backlog pricing both see it)
+                if self.faults is not None:
+                    dt *= self.faults.slowdown_factor(t0)
                 self.rclock.advance(dt)
             else:
                 dt = self.rclock() - t0

@@ -49,7 +49,7 @@ class FleetRequest:
     deadline: float
     key: Any
     arrival: float
-    state: str = "pending"        # pending | placed | done
+    state: str = "pending"        # pending | placed | done | expired
     owner: int = -1               # replica currently responsible
     engine_id: int = -1           # request id inside the owner's engine
     home: int = -1                # affinity home (first placement)
@@ -62,6 +62,12 @@ class FleetRequest:
     hedge_engine_id: int = -1
     served_by: int = -1
     done_at: float = math.nan
+    # quarantine escalation (DESIGN.md §resilience): a non-finite latent
+    # re-admits the request at the most powerful level; ``not_before``
+    # is its deadline-aware backoff gate for the next placement round
+    retries: int = 0
+    escalated: bool = False
+    not_before: float = 0.0
 
 
 @dataclasses.dataclass
@@ -100,6 +106,10 @@ class Router:
         self.handbacks = 0
         self.hedges = 0
         self.hedge_wins = 0
+        # resilience counters
+        self.escalations = 0
+        self.escalation_overflows = 0
+        self.expirations = 0
 
     # ------------------------------------------------------------------
     # Ledger
@@ -114,15 +124,21 @@ class Router:
         self._pending.append(req.rid)
         return req
 
-    def pending(self) -> List[FleetRequest]:
-        return [self.requests[r] for r in self._pending]
+    def pending(self, now: Optional[float] = None) -> List[FleetRequest]:
+        """Routable pending requests; with ``now`` given, requests still
+        inside their escalation backoff window are held back."""
+        reqs = [self.requests[r] for r in self._pending]
+        if now is None:
+            return reqs
+        return [r for r in reqs if r.not_before <= now]
 
     @property
     def n_pending(self) -> int:
         return len(self._pending)
 
     def unfinished(self) -> List[FleetRequest]:
-        return [r for r in self.requests.values() if r.state != "done"]
+        return [r for r in self.requests.values()
+                if r.state not in ("done", "expired")]
 
     # ------------------------------------------------------------------
     # Placement
@@ -209,9 +225,56 @@ class Router:
         False for the loser so the caller drops the duplicate."""
         if req.state == "done":
             return False
+        if req.rid in self._pending:
+            # a hedged twin can win while the original sits re-admitted
+            # (e.g. quarantine escalation backoff): drop it from the pool
+            self._pending.remove(req.rid)
         req.state = "done"
         req.done_at = now
         req.served_by = served_by
+        return True
+
+    def escalate(self, req: FleetRequest, *, now: float, level: float,
+                 max_retries: int = 2,
+                 backoff_base: float = 0.05) -> bool:
+        """Re-admit a quarantined (non-finite) request at the most
+        powerful menu ``level`` — weak→powerful escalation. The same key
+        restarts the trajectory from step 0, so the recovered sample is
+        exactly the clean powerful-path sample. Backoff doubles per
+        retry and is capped at a quarter of the remaining deadline slack
+        so escalation never *causes* the expiry it is racing. A request
+        is never dropped: past ``max_retries`` it still re-enqueues (at
+        the capped backoff) but the overflow is counted and False
+        returned so the caller can alarm."""
+        if req.state == "done":
+            return False
+        self.handback(req, lost_state=True)
+        req.budget = float(level)
+        req.retries += 1
+        req.escalated = True
+        self.escalations += 1
+        n = min(req.retries, max(1, max_retries))
+        backoff = backoff_base * (2.0 ** (n - 1))
+        if math.isfinite(req.deadline):
+            backoff = min(backoff, max(0.0, (req.deadline - now) * 0.25))
+        req.not_before = now + backoff
+        if req.retries > max_retries:
+            self.escalation_overflows += 1
+            return False
+        return True
+
+    def mark_expired(self, req: FleetRequest, now: float) -> bool:
+        """Terminal deadline expiry: the request leaves the unfinished
+        set without a result (counted, journaled, never silently lost)."""
+        if req.state in ("done", "expired"):
+            return False
+        if req.rid in self._pending:
+            self._pending.remove(req.rid)
+        req.state = "expired"
+        req.owner = -1
+        req.engine_id = -1
+        req.done_at = now
+        self.expirations += 1
         return True
 
     def mark_hedged(self, req: FleetRequest, replica: int,
@@ -243,4 +306,7 @@ class Router:
             "handbacks": float(self.handbacks),
             "hedges": float(self.hedges),
             "hedge_wins": float(self.hedge_wins),
+            "escalations": float(self.escalations),
+            "escalation_overflows": float(self.escalation_overflows),
+            "expirations": float(self.expirations),
         }

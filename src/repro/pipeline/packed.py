@@ -243,7 +243,12 @@ def make_packed_step_fn(cfg: ModelConfig, sched: sch.DiffusionSchedule,
                     )(xs[g], eps_g, t_g, keys[g], lv)
             x_prevs.append(x_prev)
         if taps:
-            tap = {"eps_norm": tuple(eps_taps)}
+            tap = {"eps_norm": tuple(eps_taps),
+                   # per-request-slot all-finite flag of the step OUTPUT —
+                   # pure DATA riding the tap channel, so quarantine can
+                   # read it at an existing sync point without adding one
+                   "finite": tuple(taps_mod.finite_tap(xp)
+                                   for xp in x_prevs)}
             if cached:
                 # ‖h_fresh − h_replay‖: the cached forward writes
                 # new_delta = where(refresh, h_deep − h_shallow, old), so

@@ -1,0 +1,14 @@
+"""Deterministic fault injection and end-to-end recovery (DESIGN.md
+§resilience).
+
+``faults`` and ``journal`` are host-pure (lint-enforced); the chaos
+driver ``repro.resilience.chaos`` pulls in the full fleet stack and is
+imported explicitly, not here, to keep this package importable from
+control-plane code without touching jax.
+"""
+from repro.resilience.faults import (ALLOC_FAIL, CORRUPT_SLOT,  # noqa: F401
+                                     CRASH, FAULT_KINDS, HANG,
+                                     HEARTBEAT_DELAY, PARTITION, POISON,
+                                     SLOWDOWN, UNHANG, FaultEvent,
+                                     FaultInjector, FaultPlan, ReplicaFaults)
+from repro.resilience.journal import RequestJournal  # noqa: F401

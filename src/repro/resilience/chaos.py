@@ -1,0 +1,299 @@
+"""Chaos harness: scripted fault schedules against a live fleet
+(DESIGN.md §resilience).
+
+``run_chaos`` drives an N-replica fleet through a deterministic
+:class:`~repro.resilience.faults.FaultPlan` — replica crash, transient
+hang, heartbeat delay and partition, dispatch slowdown, NaN poisoning
+of packed-step outputs, cache-slot corruption, transient allocation
+failure — and returns the recovery ledger the chaos suite gates on:
+
+* **zero requests lost** — every admitted request reaches a terminal
+  state (served; expiry is disabled here by infinite deadlines);
+* **all final latents finite** — every NaN/Inf trajectory was
+  quarantined and re-executed, none leaked to a caller;
+* **escalation correctness** — each quarantined request's final sample
+  matches the clean powerful-path run of the same key (the escalation
+  restarts from step 0 at the most powerful level with the original
+  key, so the recovered sample carries no trace of the fault);
+* **compile-once** — the whole chaos scenario replays after a rehearsal
+  with zero new XLA compiles (faults change data and placement, never
+  compiled structure).
+
+``run_replay`` is the router-crash scenario: a journaled fleet is
+abandoned mid-drain, a fresh fleet replays the journal's unfinished
+set exactly-once, and every replayed sample must match its
+uninterrupted single-request reference to <=1e-4.
+
+The harness drives ``Fleet.tick`` on an injectable clock advanced a
+fixed ``tick_dt`` per round, so fault times, heartbeat timeouts, and
+escalation backoffs all land deterministically — the same scenario
+byte-replays under ``--seed``-style reruns and across the rehearsal /
+measured pair.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fleet import Fleet
+from repro.resilience.faults import (ALLOC_FAIL, CORRUPT_SLOT, CRASH,
+                                     HANG, HEARTBEAT_DELAY, PARTITION,
+                                     POISON, SLOWDOWN, UNHANG, FaultPlan)
+from repro.resilience.journal import RequestJournal
+
+
+class ChaosClock:
+    """Injectable fleet clock (callable like ``time.monotonic``)."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = float(t)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        self.t += float(dt)
+        return self.t
+
+
+def default_fault_plan(*, seed: int = 0,
+                       poison_rids: Sequence[int] = (1, 7, 13)
+                       ) -> FaultPlan:
+    """The standard chaos schedule over a 4-replica fleet: every fault
+    kind fires at least once, early enough that recovery happens while
+    the drain is still under load. Times are fleet-clock seconds with
+    the harness's default ``tick_dt=1e-3`` (so 0.006 = the 6th round);
+    the heartbeat timeout is 0.005, which the transient hang and the
+    delayed beats stay safely under while the partition blows through
+    it (death by missed beats ~0.013)."""
+    p = FaultPlan(seed=seed)
+    for rid in poison_rids:
+        p.add(0.001, POISON, rid=int(rid))
+    p.add(0.003, CORRUPT_SLOT, replica=0)
+    p.add(0.003, ALLOC_FAIL, replica=2, count=2)
+    p.add(0.004, SLOWDOWN, replica=3, duration=0.01, factor=2.5)
+    p.add(0.004, HEARTBEAT_DELAY, replica=2, duration=0.004, delay=0.001)
+    p.add(0.006, CRASH, replica=1)
+    p.add(0.007, HANG, replica=2)
+    p.add(0.009, UNHANG, replica=2)      # transient stall < timeout
+    p.add(0.008, PARTITION, replica=3, duration=1.0)  # >> timeout: death
+    return p
+
+
+def drive(fleet: Fleet, clk: ChaosClock, *, tick_dt: float = 1e-3,
+          max_ticks: int = 20000) -> int:
+    """Tick the fleet to drain, advancing the injectable clock a fixed
+    ``tick_dt`` per round (unlike ``Fleet.run``, which leaves a caller
+    clock alone, so scripted fault times / heartbeat timeouts would
+    never come due)."""
+    ticks = 0
+    while fleet.router.unfinished() and ticks < max_ticks:
+        fleet.tick()
+        clk.advance(tick_dt)
+        ticks += 1
+    return ticks
+
+
+def _submit_workload(fleet: Fleet, n_requests: int, levels: Sequence[float],
+                     num_classes: int, seed: int) -> List[int]:
+    rng = np.random.default_rng(seed)
+    rids = []
+    for _ in range(n_requests):
+        cond = int(rng.integers(0, num_classes))
+        lvl = float(levels[int(rng.integers(0, len(levels)))])
+        rids.append(fleet.submit(cond=cond, budget=lvl))
+    return rids
+
+
+def run_chaos(pipe, plans: Dict[float, Any], *,
+              n_replicas: int = 4, n_requests: int = 32,
+              fault_plan: Optional[FaultPlan] = None,
+              journal: Optional[RequestJournal] = None,
+              seconds_per_token: float = 1e-4,
+              tick_dt: float = 1e-3,
+              heartbeat_timeout_s: float = 0.005,
+              backoff_base_s: float = 2e-3,
+              max_retries: int = 3,
+              seed: int = 0,
+              engine_kwargs: Optional[Dict[str, Any]] = None,
+              max_ticks: int = 20000) -> Dict[str, Any]:
+    """One scripted chaos drain; returns the recovery ledger plus the
+    fleet (under ``"fleet"``) for reference checks by the caller."""
+    faults = fault_plan if fault_plan is not None else default_fault_plan(
+        seed=seed)
+    clk = ChaosClock()
+    fleet = Fleet(pipe, plans, n_replicas, router="affinity", clock=clk,
+                  seconds_per_token=seconds_per_token,
+                  heartbeat_timeout_s=heartbeat_timeout_s,
+                  faults=faults, journal=journal,
+                  max_retries=max_retries, backoff_base_s=backoff_base_s,
+                  engine_kwargs=engine_kwargs)
+    rids = _submit_workload(fleet, n_requests, sorted(plans),
+                            pipe.cfg.dit.num_classes, seed)
+    ticks = drive(fleet, clk, tick_dt=tick_dt, max_ticks=max_ticks)
+    lost = sorted(set(rids) - set(fleet.results))
+    nonfinite = sum(
+        0 if bool(np.isfinite(np.asarray(r.x0)).all()) else 1
+        for r in fleet.results.values())
+    escalated = sorted(r.rid for r in fleet.router.requests.values()
+                       if r.escalated)
+    moved = sorted(r.rid for r in fleet.router.requests.values()
+                   if r.readmits or r.handbacks)
+    summ = fleet.summary()
+    inj = fleet._injector
+    return {
+        "fleet": fleet,
+        "rids": rids,
+        "ticks": ticks,
+        "requests": n_requests,
+        "replicas": n_replicas,
+        "requests_lost": len(lost),
+        "nonfinite_outputs": nonfinite,
+        "escalated_rids": escalated,
+        "moved_rids": moved,
+        "escalations": summ["router"]["escalations"],
+        "expirations": summ["router"]["expirations"],
+        "deaths": sum(1 for rid in fleet.replicas
+                      if fleet.membership.state(rid) == "dead"),
+        "faults": inj.summary() if inj is not None else {},
+        "faults_exhausted": bool(inj.exhausted()) if inj is not None
+        else True,
+        "recovery": {
+            "escalation_count": summ["escalation"]["count"],
+            "escalation_mean_s": summ["escalation"]["mean_s"],
+            "escalation_max_s": summ["escalation"]["max_s"],
+            "readmit_count": summ["readmit"]["count"],
+            "readmit_mean_s": summ["readmit"]["mean_s"],
+            "readmit_max_s": summ["readmit"]["max_s"],
+        },
+        "integrity_refreshes": sum(
+            rep.engine.metrics.total_integrity_refreshes
+            for rep in fleet.replicas.values()),
+        "alloc_failures": sum(
+            rep.engine.metrics.total_alloc_failures
+            for rep in fleet.replicas.values()),
+        "quarantined": sum(
+            rep.engine.metrics.total_quarantined
+            for rep in fleet.replicas.values()),
+    }
+
+
+def powerful_reference(pipe, plans: Dict[float, Any], key, cond: int, *,
+                       seconds_per_token: float = 1e-4,
+                       engine_kwargs: Optional[Dict[str, Any]] = None):
+    """The clean powerful-path sample for one request: a fresh fault-free
+    single-replica fleet serving only this request at the most powerful
+    menu level with the original key. This is the exact computation an
+    escalated quarantine re-runs, so recovered latents are compared
+    against it bitwise."""
+    clk = ChaosClock()
+    fleet = Fleet(pipe, plans, 1, clock=clk,
+                  seconds_per_token=seconds_per_token,
+                  engine_kwargs=engine_kwargs)
+    rid = fleet.submit(cond=cond, budget=max(plans), key=key)
+    drive(fleet, clk)
+    return fleet.results[rid].x0
+
+
+def verify_escalations(pipe, plans: Dict[float, Any],
+                       chaos: Dict[str, Any], *,
+                       seconds_per_token: float = 1e-4,
+                       engine_kwargs: Optional[Dict[str, Any]] = None
+                       ) -> Dict[str, Any]:
+    """Compare every escalated request's served latents against its
+    clean powerful-path reference (bitwise + max abs err) and every
+    moved (re-admitted / handed-back) request against the uninterrupted
+    per-request pipeline sample (<=1e-4, PR 9's packing bar)."""
+    fleet = chaos["fleet"]
+    esc_err, esc_bitwise = 0.0, 1
+    for rid in chaos["escalated_rids"]:
+        req = fleet.router.requests[rid]
+        got = np.asarray(fleet.results[rid].x0)
+        ref = np.asarray(powerful_reference(
+            pipe, plans, req.key, req.cond,
+            seconds_per_token=seconds_per_token,
+            engine_kwargs=engine_kwargs))
+        esc_err = max(esc_err, float(np.abs(got - ref).max()))
+        if not np.array_equal(got, ref):
+            esc_bitwise = 0
+    moved_err = 0.0
+    for rid in chaos["moved_rids"]:
+        if rid in chaos["escalated_rids"]:
+            continue                  # already held to the stronger bar
+        req = fleet.router.requests[rid]
+        res = fleet.results[rid]
+        ref = np.asarray(
+            pipe.sample(plans[res.budget_served], 1, req.key,
+                        cond=jnp.asarray([req.cond], jnp.int32)).x0[0])
+        moved_err = max(moved_err,
+                        float(np.abs(np.asarray(res.x0) - ref).max()))  # repro: ignore[hot-host-sync] — offline verification, one readback per served sample is the point
+    return {"escalated": len(chaos["escalated_rids"]),
+            "escalated_max_err": esc_err,
+            "escalated_bitwise": esc_bitwise,
+            "moved": len(chaos["moved_rids"]),
+            "moved_max_err": moved_err}
+
+
+def run_replay(pipe, plans: Dict[float, Any], journal_path: str, *,
+               n_replicas: int = 2, n_requests: int = 8,
+               crash_after_finished: int = 2,
+               seconds_per_token: float = 1e-4,
+               tick_dt: float = 1e-3, seed: int = 1,
+               engine_kwargs: Optional[Dict[str, Any]] = None,
+               max_ticks: int = 20000) -> Dict[str, Any]:
+    """Router-crash replay: fleet A journals to ``journal_path`` and is
+    abandoned once ``crash_after_finished`` requests completed (in-flight
+    and queued requests lost with it); fleet B — sharing only the
+    journal file and the base key — replays the unfinished set
+    exactly-once and its samples are compared against the uninterrupted
+    per-request references."""
+    clk = ChaosClock()
+    journal = RequestJournal(journal_path)
+    fa = Fleet(pipe, plans, n_replicas, clock=clk,
+               seconds_per_token=seconds_per_token, journal=journal,
+               engine_kwargs=engine_kwargs)
+    rids = _submit_workload(fa, n_requests, sorted(plans),
+                            pipe.cfg.dit.num_classes, seed)
+    ticks = 0
+    while len(fa.results) < crash_after_finished and ticks < max_ticks:
+        fa.tick()
+        clk.advance(tick_dt)
+        ticks += 1
+    finished_before = sorted(fa.results)
+    journal.close()                   # the crash: fleet A is abandoned
+
+    loaded = RequestJournal.load(journal_path)
+    unfinished = loaded.unfinished()
+    clk2 = ChaosClock()
+    fb = Fleet(pipe, plans, n_replicas, clock=clk2,
+               seconds_per_token=seconds_per_token,
+               engine_kwargs=engine_kwargs)
+    new_ids = fb.resubmit_from_journal(loaded)
+    drive(fb, clk2, tick_dt=tick_dt, max_ticks=max_ticks)
+
+    # exactly-once: finished ∪ replayed covers every admit, no overlap
+    replayed_orig = [int(r["rid"]) for r in unfinished]
+    missing = sorted(set(rids) - set(finished_before) - set(replayed_orig))
+    duplicates = sorted(set(finished_before) & set(replayed_orig))
+    max_err = 0.0
+    for rec, nid in zip(unfinished, new_ids):
+        res = fb.results[nid]
+        ref = np.asarray(
+            pipe.sample(plans[res.budget_served], 1,
+                        jax.random.fold_in(fb._base_key,
+                                           int(rec["rid"])),
+                        cond=jnp.asarray([int(rec["cond"])],
+                                         jnp.int32)).x0[0])
+        max_err = max(max_err,
+                      float(np.abs(np.asarray(res.x0) - ref).max()))  # repro: ignore[hot-host-sync] — offline verification, one readback per replayed sample is the point
+    return {"requests": n_requests,
+            "finished_before_crash": len(finished_before),
+            "replayed": len(replayed_orig),
+            "missing": len(missing),
+            "duplicates": len(duplicates),
+            "max_readmit_err": max_err,
+            "journal": loaded.summary()}

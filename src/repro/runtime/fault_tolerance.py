@@ -33,9 +33,17 @@ class HeartbeatMonitor:
         now = clock()
         self.workers = {i: WorkerState(i, now) for i in range(n_workers)}
 
-    def heartbeat(self, worker_id: int):
+    def heartbeat(self, worker_id: int, at: Optional[float] = None):
+        """Record a heartbeat, optionally with the sender's send-time.
+
+        Beats may arrive duplicated or out of order (delayed delivery,
+        clock skew): ``last_heartbeat`` is monotone under ``max`` so a
+        stale beat landing after a fresher one can never move the stamp
+        backwards and spuriously age a live worker toward its timeout.
+        """
         w = self.workers[worker_id]
-        w.last_heartbeat = self.clock()
+        t = self.clock() if at is None else at
+        w.last_heartbeat = max(w.last_heartbeat, t)
         if not w.alive:           # worker came back (restarted)
             w.alive = True
             w.incarnation += 1

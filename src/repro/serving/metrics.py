@@ -77,6 +77,15 @@ class ServingMetrics:
         # the skip rate is packing's cross-segment work never issued
         self.attn_blocks_active = 0
         self.attn_blocks_total = 0
+        # resilience ledger (DESIGN.md §resilience): terminal expiries,
+        # non-finite quarantines (each one re-enqueued at full compute),
+        # injected poisonings observed, transient slot-alloc failures
+        # absorbed, and checksum-forced cache refreshes
+        self.total_expired = 0
+        self.total_quarantined = 0
+        self.total_poisoned = 0
+        self.total_alloc_failures = 0
+        self.total_integrity_refreshes = 0
 
     def record_step(self, now: float, real_tokens: int, packed_tokens: int,
                     n_requests: int) -> None:
@@ -181,6 +190,19 @@ class ServingMetrics:
             out["cache_bytes_resident"] = float(self.cache_bytes_resident)
         if self.attn_blocks_total:
             out["attn_block_skip_rate"] = self.attn_block_skip_rate
+        # resilience counters appear only once the corresponding event
+        # class has occurred, keeping the summary key set stable for
+        # clean runs
+        if self.total_expired:
+            out["expired"] = float(self.total_expired)
+        if self.total_quarantined:
+            out["quarantined"] = float(self.total_quarantined)
+        if self.total_poisoned:
+            out["poisoned"] = float(self.total_poisoned)
+        if self.total_alloc_failures:
+            out["alloc_failures"] = float(self.total_alloc_failures)
+        if self.total_integrity_refreshes:
+            out["integrity_refreshes"] = float(self.total_integrity_refreshes)
         if wall is not None:
             # wall_s always reports what was passed; rates only when the
             # denominator is meaningful (a zero-wall snapshot — e.g. a

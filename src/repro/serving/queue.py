@@ -62,5 +62,15 @@ class RequestQueue:
         self._pending.remove(req)
         return req
 
+    def take_expired(self, now: float) -> List[Request]:
+        """Remove and return every queued request whose deadline has
+        already passed — dispatching one would burn compute on a
+        guaranteed SLA miss. Returned in arrival order so the caller's
+        terminal accounting is deterministic."""
+        expired = [r for r in self._pending if r.deadline < now]
+        for r in expired:
+            self._pending.remove(r)
+        return sorted(expired, key=lambda r: r._seq)
+
     def peek_deadlines(self) -> List[float]:
         return sorted(r.deadline for r in self._pending)

@@ -37,7 +37,7 @@ import numpy as np
 from repro.cache import ledger as cache_ledger
 from repro.cache import policy as cache_policy
 from repro.cache.policy import CacheSpec
-from repro.cache.store import CacheStore
+from repro.cache.store import CacheStore, TransientAllocationError
 from repro.core.scheduler import dit_nfe_flops
 from repro.diffusion import schedule as sch
 from repro.models import dit as dit_mod
@@ -132,10 +132,34 @@ class ServingEngine:
                  allow_cold: bool = True,
                  cache: Optional[CacheSpec] = None,
                  precapture_small: int = 0,
-                 telemetry: Optional[Telemetry] = None):
+                 telemetry: Optional[Telemetry] = None,
+                 faults: Optional[Any] = None,
+                 quarantine: Optional[bool] = None,
+                 self_heal: bool = True,
+                 max_retries: int = 2,
+                 expire_queued: bool = False,
+                 cache_integrity: bool = False):
         if policy not in ENGINE_POLICIES:
             raise ValueError(f"unknown policy {policy!r}; known: "
                              f"{ENGINE_POLICIES}")
+        # resilience (DESIGN.md §resilience): ``faults`` is a per-replica
+        # fault-injection facade (resilience.faults.ReplicaFaults); every
+        # consultation of it is guarded by ``is not None`` so a disarmed
+        # engine runs the exact pre-resilience device-op sequence
+        # (lint-enforced: resilience-armed-guard). Quarantine — drop
+        # non-finite latents and re-enqueue the request at the most
+        # powerful menu level — defaults to armed-only; ``self_heal``
+        # re-enqueues locally, the fleet turns it off and escalates
+        # through the router instead.
+        self._faults = faults
+        self._quarantine = (faults is not None) if quarantine is None \
+            else quarantine
+        self._self_heal = self_heal
+        self._max_retries = max_retries
+        self._retries: Dict[int, int] = {}
+        self.quarantined: List[Request] = []
+        self.expired: List[Request] = []
+        self._expire_queued = expire_queued
         self.pipe = pipe
         self.cfg = pipe.cfg
         self.clock = clock or time.monotonic
@@ -217,7 +241,8 @@ class ServingEngine:
         if cache is not None:
             self.store = CacheStore(self.cfg, sorted(modes),
                                     n_slots=self.max_inflight,
-                                    guided=self.guided)
+                                    guided=self.guided,
+                                    integrity=cache_integrity)
             for b, lp in self.levels.items():
                 fs = lp.plan.resolve_schedule(self.cfg)
                 self._level_masks[b] = cache_policy.ladder_refresh_mask(
@@ -350,6 +375,19 @@ class ServingEngine:
         return out
 
     def _admit(self, now: float) -> None:
+        if self._expire_queued:
+            # deadline-expiry path: a queued request whose deadline has
+            # passed is a guaranteed SLA miss — reject it terminally
+            # instead of burning a dispatch on it (opt-in: latency-SLA
+            # deployments; off by default so best-effort queues still
+            # serve late requests)
+            for req in self._queue.take_expired(now):
+                self.expired.append(req)
+                self.metrics.total_expired += 1
+                if self._rec is not None:
+                    self._rec.instant("expired",
+                                      args={"id": req.id,
+                                            "deadline": req.deadline})
         if not self._admitting:
             return
         policy = "edf" if self.policy == "edf" else "fifo"
@@ -383,8 +421,11 @@ class ServingEngine:
 
     def _ensure_slot(self, f: InFlight, mode: int) -> bool:
         """Make sure ``f`` owns a live slot in ``mode``'s pool; returns
-        True when the slot is fresh (joined / phase-switched / evicted)
-        and the request must refresh on this dispatch's first step."""
+        True when the request must refresh on this dispatch's first step:
+        the slot is fresh (joined / phase-switched / evicted), or the
+        allocation failed transiently and the request runs slotless
+        (``cache_slot == -1``: deep blocks recomputed exactly, no cache
+        reads or writes, re-allocation retried next dispatch)."""
         if f.cache_slot >= 0 and f.cache_mode == mode \
                 and self.store.owner_of(mode, f.cache_slot) == f.req.id:
             return False
@@ -392,7 +433,13 @@ class ServingEngine:
                 and self.store.owner_of(f.cache_mode,
                                         f.cache_slot) == f.req.id:
             self.store.release(f.cache_mode, f.cache_slot)
-        f.cache_slot = self.store.alloc(mode, f.req.id)
+        try:
+            if self._faults is not None and self._faults.take_alloc_failure():
+                raise TransientAllocationError("injected alloc failure")
+            f.cache_slot = self.store.alloc(mode, f.req.id)
+        except TransientAllocationError:
+            f.cache_slot = -1
+            self.metrics.total_alloc_failures += 1
         f.cache_mode = mode
         return True
 
@@ -638,6 +685,18 @@ class ServingEngine:
                 if self.cache is not None:
                     if self._ensure_slot(f, mode):
                         f.refresh_mask[s] = True     # fresh slot: no replay
+                    elif self.store.integrity and not self.store.verify_slot(
+                            mode, f.cache_slot):
+                        # checksum mismatch: the resident delta was
+                        # corrupted out of band — force an exact deep-block
+                        # recompute; the scatter below re-records the crc
+                        f.refresh_mask[s] = True
+                        self.metrics.total_integrity_refreshes += 1
+                    if f.cache_slot < 0:
+                        # slotless (transient alloc failure): every
+                        # micro-step refreshes, so the garbage gathered in
+                        # its row is never read and nothing scatters back
+                        f.refresh_mask[s:s + k] = True
                     rf[:, i] = f.refresh_mask[s:s + k]
                     slots.append(f.cache_slot)
             metas.append(jnp.asarray(meta))
@@ -647,7 +706,14 @@ class ServingEngine:
                 refreshes.append(jnp.asarray(rf))
                 slot_lists.append(slots)
                 rf_real.append(rf[:, :len(sel)])
-                gathered = self.store.gather(mode, slots) if slots else None
+                if slots and min(slots) < 0:
+                    # slotless rows gather slot 0's delta; it is ignored
+                    # (their refresh flags are all True)
+                    gathered = self.store.gather(
+                        mode, [max(sl, 0) for sl in slots])
+                else:
+                    gathered = (self.store.gather(mode, slots)
+                                if slots else None)
                 if pad:
                     z = jnp.zeros((pad, self.store.mult,
                                    self._seg_tokens[mode],
@@ -713,9 +779,20 @@ class ServingEngine:
                          tuple(metas), tuple(keys),
                          tuple(deltas), tuple(refreshes))
             (outs, new_deltas, tap) = out if self._taps else (*out, None)
+            if self._faults is not None:
+                outs = self._apply_poison(outs, picked)
             for (mode, _cap), slots, nd in zip(layout.groups, slot_lists,
                                                new_deltas):
-                if slots:
+                if not slots:
+                    continue
+                if min(slots) < 0:
+                    # skip slotless rows: scattering them would clobber
+                    # slot 0's owner
+                    keep = [j for j, sl in enumerate(slots) if sl >= 0]
+                    if keep:
+                        self.store.scatter(mode, [slots[j] for j in keep],
+                                           nd[np.asarray(keep, np.int32)])
+                else:
                     self.store.scatter(mode, slots, nd[:len(slots)])
             self.metrics.record_cache(n_refresh,
                                       n_cached_steps - n_refresh)
@@ -724,6 +801,8 @@ class ServingEngine:
             out = runner(self.pipe.params, tuple(xs), tuple(metas),
                          tuple(keys))
             (outs, tap) = out if self._taps else (out, None)
+            if self._faults is not None:
+                outs = self._apply_poison(outs, picked)
         if self._profile is not None:
             # profiling waits on the device once per dispatch: wall is
             # meaningless without it. Measurement overhead only — the
@@ -784,9 +863,12 @@ class ServingEngine:
                 time=now, k=k, groups=layout.groups,
                 n_real=tuple(len(s) for s in picked),
                 eps_norm=tap["eps_norm"], drift=tap.get("drift"),
-                attn_blocks=tap.get("attn_blocks")))
+                attn_blocks=tap.get("attn_blocks"),
+                finite=tap.get("finite")))
         self._flops_since_sync += step_flops
+        synced = False
         if any(f.step + k >= len(f.lp.ts) for sel in picked for f in sel):
+            synced = True
             # someone completes on this dispatch: a result only counts as
             # served once it is materialized, so the finish stamp (and any
             # latency derived from it) waits for the device. This is also
@@ -807,12 +889,25 @@ class ServingEngine:
 
         finished: List[ServedResult] = []
         stepped = 0
+        # quarantine detection rides existing sync points only: the
+        # in-graph finite tap is read on the host after the completion
+        # branch's block_until_ready, and the retire-time check reads a
+        # latent that same sync already materialized
+        bad: set = set()
+        if self._quarantine and synced and tap is not None:
+            bad = self._scan_finite(tap, picked)
         for g, sel in enumerate(picked):
             for i, f in enumerate(sel):
                 f.x_src, f.x_row = outs[g], i
                 f.step += k
                 stepped += 1
-                if f.done:
+                if self._quarantine and (
+                        f.req.id in bad
+                        or (f.done
+                            and not np.isfinite(np.asarray(f.x)).all())):
+                    self._inflight.remove(f)
+                    self._quarantine_request(f, now)
+                elif f.done:
                     self._inflight.remove(f)
                     finished.append(self._retire(f, now))
         cost = self._layout_costs.get(layout)
@@ -847,13 +942,92 @@ class ServingEngine:
                 inflight=len(self._inflight),
                 compiled=self.pipe.cache_stats()["compiled"],
                 latencies=[r.latency for r in self.metrics.requests],
-                drift_max=drift)
+                drift_max=drift,
+                nonfinite=self.metrics.total_quarantined)
             if self._watchdog.should_dump():
                 self._watchdog.dump(
                     reason="alert", engine_snapshot=self.snapshot_state(),
                     attribution=self._attr, registry=self._profile)
         self._last_step_at = now
         return finished
+
+    def _apply_poison(self, outs: Tuple, picked: List[List[InFlight]]
+                      ) -> Tuple:
+        """Fault seam (post-dispatch host hook): overwrite targeted
+        requests' packed-step output rows with NaN — the failure a
+        silently degraded weak step would have produced in-graph. Only
+        reachable when a FaultPlan is armed."""
+        outs = list(outs)
+        for g, sel in enumerate(picked):
+            for i, f in enumerate(sel):
+                if self._faults is not None \
+                        and self._faults.take_poison(f.req.id):
+                    outs[g] = outs[g].at[i].set(jnp.nan)
+                    self.metrics.total_poisoned += 1
+        return tuple(outs)
+
+    def _scan_finite(self, tap: Dict[str, Any],
+                     picked: List[List[InFlight]]) -> set:
+        """Host read of the in-graph finite tap: ids of requests whose
+        latent rows went non-finite during this dispatch. Called only
+        after the completion branch's existing ``block_until_ready`` —
+        never adds a sync point."""
+        out: set = set()
+        fin = tap.get("finite")
+        if fin is None:
+            return out
+        for g, sel in enumerate(picked):
+            if not sel:
+                continue
+            ok = np.asarray(fin[g])[:, :len(sel)].all(axis=0)
+            for i, f in enumerate(sel):
+                if not ok[i]:
+                    out.add(f.req.id)
+        return out
+
+    def _quarantine_request(self, f: InFlight, now: float) -> None:
+        """Non-finite latents detected: drop the poisoned trajectory,
+        release its cache slot, and re-enqueue the request at the MOST
+        POWERFUL menu level, restarting from step 0 with the same key —
+        the recovered sample is exactly the clean powerful-path sample.
+        With ``self_heal=False`` (fleet mode) the request is parked in
+        ``quarantined`` instead, for the router to escalate with
+        deadline-aware backoff."""
+        if self.store is not None and f.cache_slot >= 0 \
+                and self.store.owner_of(f.cache_mode,
+                                        f.cache_slot) == f.req.id:
+            self.store.release(f.cache_mode, f.cache_slot)
+        self.metrics.total_quarantined += 1
+        if self._rec is not None:
+            self._rec.instant("quarantine",
+                              args={"id": f.req.id, "step": f.step,
+                                    "level": f.lp.level})
+        if not self._self_heal:
+            self.quarantined.append(f.req)
+            return
+        n = self._retries.get(f.req.id, 0)
+        if n >= self._max_retries:
+            # retry budget exhausted: park the request instead of looping
+            # — the caller decides (losing it silently is never an option)
+            self.quarantined.append(f.req)
+            return
+        self._retries[f.req.id] = n + 1
+        self._queue.submit(
+            Request(id=f.req.id, cond=f.req.cond,
+                    budget=max(self.levels), deadline=f.req.deadline,
+                    key=f.req.key), now)
+
+    def take_quarantined(self) -> List[Request]:
+        """Drain quarantined requests awaiting external escalation (the
+        fleet routes them through ``Router.escalate``)."""
+        out, self.quarantined = self.quarantined, []
+        return out
+
+    def take_expired(self) -> List[Request]:
+        """Drain terminally expired requests (deadline passed while
+        queued) for the caller's bookkeeping."""
+        out, self.expired = self.expired, []
+        return out
 
     def _retire(self, f: InFlight, now: float) -> ServedResult:
         mult = 2 if self.guided else 1

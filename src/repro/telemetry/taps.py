@@ -33,13 +33,20 @@ import jax.numpy as jnp
 import numpy as np
 
 #: keys a tapped step emits per group (drift only on the cached family)
-TAP_NAMES = ("eps_norm", "drift", "attn_blocks")
+TAP_NAMES = ("eps_norm", "finite", "drift", "attn_blocks")
 
 
 def eps_norm_tap(eps: jnp.ndarray) -> jnp.ndarray:  # repro: traced
     """Per-request RMS of an eps batch [n, F, H, W, C] → [n]."""
     return jnp.sqrt(jnp.mean(jnp.square(eps),
                              axis=tuple(range(1, eps.ndim))))
+
+
+def finite_tap(x: jnp.ndarray) -> jnp.ndarray:  # repro: traced
+    """Per-request all-finite flag of a latent batch [n, ...] → [n] bool
+    (the quarantine detector's in-graph signal: False means the row
+    carries a NaN/Inf and the request must be re-run at full compute)."""
+    return jnp.all(jnp.isfinite(x), axis=tuple(range(1, x.ndim)))
 
 
 def drift_tap(new_delta: jnp.ndarray,
@@ -65,6 +72,7 @@ class TapSample:
     eps_norm: Tuple[Any, ...]
     drift: Optional[Tuple[Any, ...]] = None
     attn_blocks: Optional[Any] = None
+    finite: Optional[Tuple[Any, ...]] = None  # [k, n_g] bool per group
 
 
 class TapAggregator:
@@ -95,6 +103,8 @@ class TapAggregator:
         per_mode: Dict[int, list] = {}
         blk_active = blk_total = 0
         n_request_steps = 0
+        n_nonfinite = 0
+        saw_finite = False
         for s in self.samples:
             for g, (mode, _cap) in enumerate(s.groups):
                 n = s.n_real[g]
@@ -107,6 +117,10 @@ class TapAggregator:
                     d = np.asarray(s.drift[g])[:, :n].ravel()
                     drift_all.append(d)
                     per_mode.setdefault(mode, []).append(d)
+                if s.finite is not None:
+                    saw_finite = True
+                    fi = np.asarray(s.finite[g])[:, :n]
+                    n_nonfinite += int((~fi).sum())
             if s.attn_blocks is not None:
                 a, t = (int(v) for v in np.asarray(s.attn_blocks))
                 blk_active += a * s.k
@@ -131,6 +145,8 @@ class TapAggregator:
             out["attn_blocks"] = {
                 "active": blk_active, "total": blk_total,
                 "skip_rate": 1.0 - blk_active / blk_total}
+        if saw_finite:
+            out["nonfinite_request_steps"] = n_nonfinite
         return out
 
     def counter_series(self):

@@ -37,6 +37,7 @@ ALERT_RECOMPILE = "recompile"
 ALERT_QUEUE = "queue"
 ALERT_P99 = "p99"
 ALERT_DRIFT = "drift"
+ALERT_NONFINITE = "nonfinite"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,6 +90,7 @@ class Watchdog:
         self._compiled_baseline: Optional[int] = None
         self._last_fire: Dict[str, int] = {}
         self._pending_dump = False
+        self._nonfinite_seen = 0
 
     # -- detection ------------------------------------------------------
 
@@ -109,7 +111,8 @@ class Watchdog:
     def observe_step(self, *, now: float, queued: int, inflight: int,
                      compiled: int,
                      latencies: Sequence[float] = (),
-                     drift_max: Optional[float] = None) -> List[Alert]:
+                     drift_max: Optional[float] = None,
+                     nonfinite: int = 0) -> List[Alert]:
         """Run all detectors against one engine step's observables.
         Returns the alerts that fired (already recorded as events)."""
         self._step += 1
@@ -149,6 +152,20 @@ class Watchdog:
                            cfg.drift_limit, "cache replay drift spike")
             if a:
                 fired.append(a)
+
+        # nonfinite is the engine's lifetime quarantine count: any growth
+        # means NaN/Inf latents were detected and recovery (weak→powerful
+        # re-enqueue) engaged — alert so the recovery action is visible in
+        # the same trace. The seen-mark only advances on an actual fire,
+        # so growth suppressed by the cooldown re-fires once it expires.
+        if nonfinite > self._nonfinite_seen:
+            a = self._fire(ALERT_NONFINITE, now, float(nonfinite),
+                           float(self._nonfinite_seen),
+                           "non-finite latents quarantined; escalated to"
+                           " full compute")
+            if a:
+                fired.append(a)
+                self._nonfinite_seen = nonfinite
         return fired
 
     def should_dump(self) -> bool:

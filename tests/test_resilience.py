@@ -1,0 +1,599 @@
+"""Resilience tests (DESIGN.md §resilience): deterministic fault
+injection, NaN/Inf quarantine with weak→powerful escalation, cache-slot
+integrity, the write-ahead request journal, deadline expiry, watchdog
+flight-recorder behaviour under pressure, and the chaos harness at
+tier-1 scale.
+
+The non-negotiables proven here:
+
+* a **disarmed** engine (no fault plan) is byte-identical to the
+  pre-resilience engine — the harness must be free when off;
+* a quarantined (poisoned) request recovers to the exact clean
+  powerful-path sample — the fault leaves no numerical trace;
+* corruption of a resident cache slot is detected by checksum and
+  repaired by forced refresh;
+* the journal replays a crashed fleet's unfinished set exactly-once;
+* stale/duplicate heartbeats never move liveness backwards.
+"""
+import json
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.scheduler import FlexiSchedule
+from repro.diffusion import schedule as sch
+from repro.pipeline import FlexiPipeline, SamplingPlan
+from repro.resilience.faults import (ALLOC_FAIL, CORRUPT_SLOT, CRASH,
+                                     HANG, HEARTBEAT_DELAY, PARTITION,
+                                     POISON, SLOWDOWN, UNHANG, FaultEvent,
+                                     FaultInjector, FaultPlan)
+from repro.resilience.journal import RequestJournal
+
+pytestmark = pytest.mark.tier1
+
+T = 6
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        self.t += dt
+        return self.t
+
+
+@pytest.fixture(scope="module")
+def flexi(tiny_dit_cfg, trained_like_dit):
+    from repro.core import flexify
+    fparams, fcfg = flexify(trained_like_dit, tiny_dit_cfg, [(1, 4, 4)])
+    sched = sch.linear_schedule(100)
+    return fparams, fcfg, sched
+
+
+@pytest.fixture(scope="module")
+def pipe(flexi):
+    fparams, fcfg, sched = flexi
+    return FlexiPipeline(fparams, fcfg, sched)
+
+
+def make_plans():
+    return {0.6: SamplingPlan(T=T, budget=FlexiSchedule.weak_first(T, 3),
+                              solver="ddim", guidance_scale=1.5),
+            1.0: SamplingPlan(T=T, budget=1.0, solver="ddim",
+                              guidance_scale=1.5)}
+
+
+def make_engine(pipe, **kw):
+    from repro.serving.scheduler import ServingEngine
+    kw.setdefault("max_tokens_per_step", 256)
+    kw.setdefault("steps_per_dispatch", 2)
+    return ServingEngine(pipe, make_plans(), **kw)
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector (host-pure units)
+
+
+def test_fault_plan_validates_kind():
+    with pytest.raises(ValueError):
+        FaultEvent(at=0.0, kind="meteor")
+
+
+def test_injector_due_order_and_exhaustion():
+    p = FaultPlan()
+    p.add(0.3, CRASH, replica=1)
+    p.add(0.1, HANG, replica=0)
+    p.add(0.2, UNHANG, replica=0)
+    inj = FaultInjector(p)
+    assert not inj.exhausted()
+    assert [e.kind for e in inj.due(0.05)] == []
+    assert [e.kind for e in inj.due(0.25)] == [HANG, UNHANG]
+    assert not inj.exhausted()
+    assert [e.kind for e in inj.due(1.0)] == [CRASH]
+    assert inj.exhausted()
+    assert inj.due(2.0) == []
+
+
+def test_injector_defer_retries_event():
+    p = FaultPlan()
+    p.add(0.1, POISON, rid=5)
+    inj = FaultInjector(p)
+    (ev,) = inj.due(0.2)
+    inj.defer(ev)                      # target not actionable yet
+    assert not inj.exhausted()
+    assert [e.rid for e in inj.due(0.2)] == [5]
+    assert inj.exhausted()
+
+
+def test_injector_slowdown_window_expires():
+    inj = FaultInjector(FaultPlan())
+    inj.slow(0, until=1.0, factor=3.0)
+    assert inj.slowdown_factor(0, 0.5) == 3.0
+    assert inj.slowdown_factor(0, 1.0) == 1.0    # window closed
+    assert inj.slowdown_factor(1, 0.5) == 1.0    # other replica untouched
+
+
+def test_injector_beat_delay_keeps_original_stamp():
+    inj = FaultInjector(FaultPlan())
+    inj.delay_beats(0, until=1.0, delay=0.5)
+    assert inj.route_beat(0, 0.2) is None        # held, not dropped
+    due = inj.due_beats(0.7)
+    assert due == [(0, 0.2)]                     # original send stamp
+    assert inj.route_beat(0, 2.0) == 2.0         # window over: direct
+
+
+def test_injector_partition_drops_beats():
+    inj = FaultInjector(FaultPlan())
+    inj.partition(0, until=1.0)
+    assert inj.route_beat(0, 0.5) is None
+    assert inj.due_beats(5.0) == []              # dropped, never delivered
+    assert inj.counters["beats_dropped"] == 1
+    assert inj.route_beat(0, 1.5) == 1.5
+
+
+def test_injector_poison_take_once_and_target_memory():
+    inj = FaultInjector(FaultPlan())
+    inj.add_poison(0, 7)
+    assert inj.is_poison_target(0, 7)
+    assert inj.take_poison(0, 7)
+    assert not inj.take_poison(0, 7)             # consumed
+    assert inj.is_poison_target(0, 7)            # but remembered
+    assert not inj.is_poison_target(1, 7)
+
+
+def test_injector_alloc_failures_count_down():
+    inj = FaultInjector(FaultPlan())
+    inj.add_alloc_failures(2, 2)
+    rf = inj.for_replica(2)
+    assert rf.take_alloc_failure()
+    assert rf.take_alloc_failure()
+    assert not rf.take_alloc_failure()
+    assert inj.counters["alloc_failed"] == 2
+
+
+# ---------------------------------------------------------------------------
+# Write-ahead journal
+
+
+def test_journal_roundtrip_and_unfinished(tmp_path):
+    path = tmp_path / "journal.jsonl"
+    j = RequestJournal(str(path))
+    j.admit(0, cond=3, budget=1.0, deadline=math.inf, time=0.0)
+    j.admit(1, cond=4, budget=0.6, deadline=math.inf, time=0.1)
+    j.admit(2, cond=5, budget=0.6, deadline=1.0, time=0.2)
+    j.dispatch(0, replica=0, time=0.3)
+    j.finish(0, replica=0, time=0.5)
+    j.expire(2, time=1.2)
+    j.close()
+
+    loaded = RequestJournal.load(str(path))
+    un = loaded.unfinished()
+    assert [int(r["rid"]) for r in un] == [1]    # finished/expired gone
+    assert un[0]["cond"] == 4 and un[0]["budget"] == 0.6
+    s = loaded.summary()
+    assert s["admit"] == 3 and s["finish"] == 1 and s["unfinished"] == 1
+
+
+def test_journal_unfinished_dedupes_readmissions(tmp_path):
+    path = tmp_path / "j.jsonl"
+    j = RequestJournal(str(path))
+    j.admit(0, cond=1, budget=1.0, deadline=math.inf, time=0.0)
+    j.dispatch(0, replica=0, time=0.1)
+    j.escalate(0, time=0.2, retries=1)           # re-admitted, same rid
+    j.dispatch(0, replica=1, time=0.3)
+    j.close()
+    un = RequestJournal.load(str(path)).unfinished()
+    assert [int(r["rid"]) for r in un] == [0]    # once, despite re-dispatch
+
+
+# ---------------------------------------------------------------------------
+# Heartbeat monotonicity (stale / duplicate / out-of-order beats)
+
+
+def test_heartbeat_monitor_stale_beat_never_moves_backwards():
+    from repro.runtime.fault_tolerance import HeartbeatMonitor
+    clk = FakeClock()
+    mon = HeartbeatMonitor(1, timeout_s=1.0, clock=clk)
+    mon.heartbeat(0, at=5.0)
+    mon.heartbeat(0, at=2.0)                     # stale, out of order
+    mon.heartbeat(0, at=5.0)                     # duplicate
+    assert mon.workers[0].last_heartbeat == 5.0
+    clk.t = 5.9
+    assert mon.check() == []                     # still fresh
+    clk.t = 6.1
+    assert mon.check() == [0]
+
+
+def test_membership_beat_ignores_dead_replica():
+    from repro.fleet.membership import FleetMembership
+    clk = FakeClock()
+    m = FleetMembership(2, [0, 1], timeout_s=1.0, clock=clk)
+    m.mark_dead(1)
+    m.beat(1, at=10.0)                           # late beat from a corpse
+    clk.t = 10.5
+    assert m.state(1) == "dead"
+    assert m.monitor.workers[1].alive is False
+
+
+# ---------------------------------------------------------------------------
+# Engine seams: disarmed transparency, quarantine, expiry, integrity
+
+
+def test_disarmed_engine_is_byte_identical(pipe):
+    """quarantine+integrity machinery enabled but NO fault plan: output
+    arrays must be byte-identical to the stock engine's."""
+    from repro.cache.policy import CacheSpec
+    key = jax.random.PRNGKey(11)
+    outs = []
+    for kw in ({}, {"quarantine": True, "cache_integrity": True}):
+        eng = make_engine(pipe, cache=CacheSpec(policy="interval",
+                                                interval=1, split=1), **kw)
+        eng.submit(3, 1.0, key=key)
+        (res,) = eng.run()
+        outs.append(np.asarray(res.x0))
+    assert np.array_equal(outs[0], outs[1])
+
+
+def test_engine_quarantine_self_heal_matches_powerful_path(pipe):
+    """A poisoned request self-heals: re-enqueued at the most powerful
+    level with the same key, its recovered sample is exactly the clean
+    powerful-path sample."""
+    inj = FaultInjector(FaultPlan())
+    inj.add_poison(0, 0)                         # first engine rid
+    eng = make_engine(pipe, faults=inj.for_replica(0))
+    key = jax.random.PRNGKey(3)
+    rid = eng.submit(4, 0.6, key=key)
+    results = eng.run()
+    assert eng.metrics.total_poisoned == 1
+    assert eng.metrics.total_quarantined == 1
+    (res,) = [r for r in results if r.request.id == rid]
+    assert res.budget_served == 1.0              # escalated weak→powerful
+    assert np.isfinite(np.asarray(res.x0)).all()
+
+    clean = make_engine(pipe)
+    clean.submit(4, 1.0, key=key)
+    (ref,) = clean.run()
+    assert np.array_equal(np.asarray(res.x0), np.asarray(ref.x0))
+    assert "quarantined" in eng.metrics.summary()
+
+
+def test_engine_quarantine_parks_after_retry_budget(pipe):
+    """Unbounded self-heal loops are forbidden: past max_retries the
+    request parks in ``quarantined`` for the caller."""
+    inj = FaultInjector(FaultPlan())
+    eng = make_engine(pipe, faults=inj.for_replica(0), max_retries=0)
+    rid = eng.submit(2, 0.6)
+    inj.add_poison(0, rid)
+    results = eng.run()
+    assert results == []
+    assert [r.id for r in eng.take_quarantined()] == [rid]
+    assert eng.take_quarantined() == []          # drained
+
+
+def test_engine_finite_tap_detects_midflight(pipe):
+    """With taps armed, the in-graph finite tap flags the poisoned
+    request (as data, at the existing sync) before it retires."""
+    from repro.telemetry import Telemetry
+    inj = FaultInjector(FaultPlan())
+    eng = make_engine(pipe, faults=inj.for_replica(0),
+                      telemetry=Telemetry(taps=True))
+    key = jax.random.PRNGKey(9)
+    rid = eng.submit(1, 0.6, key=key)
+    inj.add_poison(0, rid)
+    results = eng.run()
+    assert eng.metrics.total_quarantined == 1
+    (res,) = [r for r in results if r.request.id == rid]
+    assert np.isfinite(np.asarray(res.x0)).all()
+
+
+def test_engine_deadline_expiry_is_terminal(pipe):
+    clk = FakeClock(1.0)
+    eng = make_engine(pipe, expire_queued=True, clock=clk)
+    rid_late = eng.submit(3, 0.6, deadline=0.5)  # already past
+    rid_ok = eng.submit(4, 0.6, deadline=math.inf)
+    results = eng.run()
+    assert [r.request.id for r in results] == [rid_ok]
+    assert [r.id for r in eng.take_expired()] == [rid_late]
+    assert eng.metrics.total_expired == 1
+    assert eng.metrics.summary()["expired"] == 1.0
+
+
+def test_engine_default_keeps_serving_late_requests(pipe):
+    """expire_queued is opt-in: by default a late request still gets
+    served (best-effort queues)."""
+    clk = FakeClock(1.0)
+    eng = make_engine(pipe, clock=clk)
+    rid = eng.submit(3, 0.6, deadline=0.5)
+    results = eng.run()
+    assert [r.request.id for r in results] == [rid]
+    assert eng.metrics.total_expired == 0
+
+
+def test_store_integrity_detects_corruption(pipe):
+    """CRC catches out-of-band slot corruption; the engine forces a
+    refresh and, under interval=1 (never reads the cache), the final
+    sample is still bit-identical to the uncached reference."""
+    from repro.cache.policy import CacheSpec
+    eng = make_engine(pipe, cache=CacheSpec(policy="interval",
+                                            interval=1, split=1),
+                      cache_integrity=True)
+    key = jax.random.PRNGKey(5)
+    eng.submit(3, 0.6, key=key)
+    eng.step()                                   # first dispatch: scatter
+    (mode, slot) = eng.store.active_slots()[0]
+    eng.store.corrupt_slot(mode, slot)
+    results = eng.run()
+    assert eng.store.corruptions == 1
+    assert eng.store.integrity_failures >= 1
+    assert eng.metrics.total_integrity_refreshes >= 1
+    clean = make_engine(pipe, cache=CacheSpec(policy="interval",
+                                              interval=1, split=1))
+    clean.submit(3, 0.6, key=key)
+    (ref,) = clean.run()
+    assert np.array_equal(np.asarray(results[0].x0), np.asarray(ref.x0))
+
+
+def test_store_verify_passes_clean_slots(pipe):
+    from repro.cache.policy import CacheSpec
+    eng = make_engine(pipe, cache=CacheSpec(policy="interval",
+                                            interval=1, split=1),
+                      cache_integrity=True)
+    eng.submit(3, 0.6)
+    eng.run()
+    assert eng.store.integrity_failures == 0
+    assert eng.metrics.total_integrity_refreshes == 0
+
+
+def test_engine_transient_alloc_failure_recovers(pipe):
+    """An injected allocation failure runs the request slotless for one
+    dispatch (exact recompute) and re-allocates next time; the sample is
+    unchanged."""
+    from repro.cache.policy import CacheSpec
+    inj = FaultInjector(FaultPlan())
+    inj.add_alloc_failures(0, 1)
+    eng = make_engine(pipe, faults=inj.for_replica(0),
+                      cache=CacheSpec(policy="interval", interval=1,
+                                      split=1))
+    key = jax.random.PRNGKey(7)
+    eng.submit(2, 0.6, key=key)
+    (res,) = eng.run()
+    assert eng.metrics.total_alloc_failures == 1
+    clean = make_engine(pipe, cache=CacheSpec(policy="interval", interval=1,
+                                              split=1))
+    clean.submit(2, 0.6, key=key)
+    (ref,) = clean.run()
+    assert np.array_equal(np.asarray(res.x0), np.asarray(ref.x0))
+
+
+# ---------------------------------------------------------------------------
+# Watchdog under pressure (flight recorder)
+
+
+def _wd(tmp_path, **cfg_kw):
+    from repro.telemetry.trace import SpanRecorder
+    from repro.telemetry.watchdog import Watchdog, WatchdogConfig
+    rec = SpanRecorder(max_events=8)             # tiny ring: forces wrap
+    wd = Watchdog(WatchdogConfig(**cfg_kw), recorder=rec,
+                  postmortem_dir=str(tmp_path))
+    return wd, rec
+
+
+def test_watchdog_nonfinite_cooldown_refires(tmp_path):
+    """Quarantine growth suppressed by the cooldown re-fires once the
+    cooldown expires (the seen-mark only advances on an actual fire)."""
+    wd, _ = _wd(tmp_path, cooldown_steps=5)
+    obs = dict(queued=0, inflight=1, compiled=1)
+    assert [a.kind for a in wd.observe_step(now=0.0, nonfinite=1, **obs)] \
+        == ["nonfinite"]
+    # growth during cooldown: suppressed, seen-mark must NOT advance
+    assert wd.observe_step(now=0.1, nonfinite=2, **obs) == []
+    for i in range(3):
+        wd.observe_step(now=0.2 + i * 0.1, nonfinite=2, **obs)
+    # cooldown over: the suppressed growth fires now
+    fired = wd.observe_step(now=0.6, nonfinite=2, **obs)
+    assert [a.kind for a in fired] == ["nonfinite"]
+    assert wd._nonfinite_seen == 2
+    # no further growth: quiet
+    assert wd.observe_step(now=0.7, nonfinite=2, **obs) == []
+
+
+def test_watchdog_dump_under_full_span_ring(tmp_path):
+    """dump() with a saturated SpanRecorder ring stays bounded, keeps
+    only the ring's tail, and never raises."""
+    wd, rec = _wd(tmp_path)
+    for i in range(100):                         # 12x the ring size
+        rec.instant(f"ev{i}")
+    wd.observe_step(now=0.0, queued=0, inflight=0, compiled=1,
+                    nonfinite=1)
+    path = wd.dump(reason="test", engine_snapshot={"queued": 0})
+    assert path is not None
+    bundle = json.loads(open(path).read())
+    assert bundle["reason"] == "test"
+    assert len(bundle["spans"]) <= 8             # ring cap, not 100
+    assert [a["kind"] for a in bundle["alerts"]] == ["nonfinite"]
+
+
+def test_watchdog_dump_cap(tmp_path):
+    wd, _ = _wd(tmp_path, max_dumps=2, cooldown_steps=0)
+    obs = dict(queued=0, inflight=0, compiled=1)
+    for i in range(4):
+        wd.observe_step(now=float(i), nonfinite=i + 1, **obs)
+        wd.dump(reason=f"r{i}")
+    assert len(wd.dumps_written) == 2
+    assert not wd.should_dump()
+
+
+# ---------------------------------------------------------------------------
+# Router escalation (host-pure units)
+
+
+def _register(router, deadline=math.inf):
+    return router.register(3, 0.6, deadline, key=object(), now=0.0)
+
+
+def test_router_escalate_backoff_doubles_and_holds_pending():
+    from repro.fleet.router import Router, ReplicaView
+    r = Router()
+    req = _register(r)
+    views = [ReplicaView(rid=0, admitting=True, backlog_seconds=0.0,
+                         prices={1.0: 1.0})]
+    r.place(req, views, 0.6)
+    assert r.escalate(req, now=1.0, level=1.0, max_retries=2,
+                      backoff_base=0.1)
+    assert req.budget == 1.0 and req.escalated and req.retries == 1
+    assert req.not_before == pytest.approx(1.1)
+    assert r.pending(now=1.05) == []             # held back
+    assert [x.rid for x in r.pending(now=1.2)] == [req.rid]
+    r.place(req, views, 1.0)
+    assert r.escalate(req, now=2.0, level=1.0, max_retries=2,
+                      backoff_base=0.1)
+    assert req.not_before == pytest.approx(2.2)  # doubled
+
+
+def test_router_escalate_caps_backoff_at_deadline_slack():
+    from repro.fleet.router import Router, ReplicaView
+    r = Router()
+    req = _register(r, deadline=2.0)
+    views = [ReplicaView(rid=0, admitting=True, backlog_seconds=0.0,
+                         prices={1.0: 1.0})]
+    r.place(req, views, 0.6)
+    r.escalate(req, now=1.0, level=1.0, backoff_base=10.0)
+    assert req.not_before == pytest.approx(1.25)  # 25% of 1s slack
+
+
+def test_router_escalate_overflow_counts_but_never_drops():
+    from repro.fleet.router import Router, ReplicaView
+    r = Router()
+    req = _register(r)
+    views = [ReplicaView(rid=0, admitting=True, backlog_seconds=0.0,
+                         prices={1.0: 1.0})]
+    for i in range(3):
+        r.place(req, views, 1.0)
+        ok = r.escalate(req, now=float(i), level=1.0, max_retries=2,
+                        backoff_base=0.0)
+        assert ok == (i < 2)
+    assert r.escalation_overflows == 1
+    assert req.rid in [x.rid for x in r.pending(now=10.0)]  # never lost
+
+
+def test_router_mark_done_removes_readmitted_from_pending():
+    """A hedged twin can win while the original sits re-admitted in
+    backoff; mark_done must pull it from the pending pool."""
+    from repro.fleet.router import Router, ReplicaView
+    r = Router()
+    req = _register(r)
+    views = [ReplicaView(rid=0, admitting=True, backlog_seconds=0.0,
+                         prices={1.0: 1.0})]
+    r.place(req, views, 0.6)
+    r.escalate(req, now=0.0, level=1.0, backoff_base=100.0)
+    assert r.n_pending == 1
+    assert r.mark_done(req, 1.0, served_by=1)
+    assert r.n_pending == 0
+    assert r.unfinished() == []
+
+
+# ---------------------------------------------------------------------------
+# Chaos harness + journal replay (tier-1 scale)
+
+
+def chaos_engine_kwargs():
+    from repro.cache.policy import CacheSpec
+    return {"max_tokens_per_step": 256, "steps_per_dispatch": 2,
+            "cache": CacheSpec(policy="interval", interval=1, split=1)}
+
+
+def test_chaos_small_fleet_loses_nothing(pipe):
+    from repro.resilience import chaos as chaos_mod
+    plan = FaultPlan()
+    # poison early; crash only after the quarantine has had time to
+    # retire + escalate (a crash first would hand the poisoned request
+    # back with fresh state and no escalation would ever be needed)
+    plan.add(0.001, POISON, rid=1)
+    plan.add(0.006, CRASH, replica=1)
+    plan.add(0.004, SLOWDOWN, replica=0, duration=0.01, factor=2.0)
+    res = chaos_mod.run_chaos(pipe, make_plans(), n_replicas=2,
+                              n_requests=8, fault_plan=plan,
+                              engine_kwargs=chaos_engine_kwargs(), seed=0)
+    assert res["requests_lost"] == 0
+    assert res["nonfinite_outputs"] == 0
+    assert res["faults_exhausted"]
+    assert res["deaths"] == 1
+    assert len(res["escalated_rids"]) >= 1
+    v = chaos_mod.verify_escalations(pipe, make_plans(), res,
+                                     engine_kwargs=chaos_engine_kwargs())
+    assert v["escalated_bitwise"] == 1
+    assert v["moved_max_err"] <= 1e-4
+
+
+def test_journal_replay_exactly_once(pipe, tmp_path):
+    from repro.resilience import chaos as chaos_mod
+    rep = chaos_mod.run_replay(pipe, make_plans(),
+                               str(tmp_path / "j.jsonl"),
+                               n_replicas=2, n_requests=6,
+                               crash_after_finished=1,
+                               engine_kwargs=chaos_engine_kwargs())
+    assert rep["missing"] == 0
+    assert rep["duplicates"] == 0
+    assert rep["replayed"] >= 1
+    assert rep["max_readmit_err"] <= 1e-4
+
+
+# ---------------------------------------------------------------------------
+# Lint rules
+
+
+def test_resilience_host_pure_rule_flags_device_imports(tmp_path):
+    from repro.analysis.engine import lint_paths
+    bad = tmp_path / "resilience" / "faults.py"
+    bad.parent.mkdir()
+    bad.write_text(
+        "import numpy as np\n"
+        "def due(now):\n"
+        "    return float(np.min(now).item())\n")
+    findings = lint_paths([bad])
+    rules = {f.rule for f in findings}
+    assert rules == {"resilience-host-pure"}
+    assert len(findings) >= 2
+    assert all(f.severity == "error" for f in findings)
+
+
+def test_resilience_armed_guard_rule(tmp_path):
+    from repro.analysis.engine import lint_paths
+    f = tmp_path / "serving" / "scheduler.py"
+    f.parent.mkdir()
+    f.write_text(
+        "class E:\n"
+        "    def bad(self):\n"
+        "        return self._faults.take_poison(1)\n"
+        "    def guarded(self):\n"
+        "        if self._faults is not None:\n"
+        "            return self._faults.take_poison(1)\n"
+        "    def short_circuit(self):\n"
+        "        if self._faults is not None and "
+        "self._faults.take_poison(1):\n"
+        "            return 1\n"
+        "    def early_return(self):\n"
+        "        if self._faults is None:\n"
+        "            return None\n"
+        "        return self._faults.take_poison(1)\n")
+    findings = [x for x in lint_paths([f])
+                if x.rule == "resilience-armed-guard"]
+    assert [x.symbol for x in findings] == ["bad"]
+
+
+def test_resilience_modules_pass_their_lints():
+    from pathlib import Path
+    from repro.analysis.engine import lint_paths
+    src = Path(__file__).resolve().parents[1] / "src/repro"
+    findings = [f for f in lint_paths([src / "resilience",
+                                       src / "serving" / "scheduler.py",
+                                       src / "fleet"])
+                if f.rule.startswith("resilience-")]
+    assert findings == []
